@@ -1,0 +1,190 @@
+"""Roofline aggregation: dry-run JSONs -> the §Roofline table.
+
+Three terms per (arch x shape x mesh) cell, all per-device per-step:
+
+    compute    = HLO_FLOPs / peak_FLOPs            (197 TFLOP/s bf16, v5e)
+    memory     = HLO_bytes / HBM_bw                (819 GB/s)
+    collective = collective_bytes / link_bw        (~50 GB/s/link ICI)
+
+HLO_FLOPs / bytes / collective-bytes come from the loop-aware HLO analyzer
+(repro.distributed.hlo_analysis) — NOT from compiled.cost_analysis(),
+which counts while bodies once (verified; see tests/test_sharding.py).
+
+MODEL_FLOPS uses the assignment's definition: 6·N·D for training (N =
+params, D = tokens), 6·N_active·D for MoE; serving steps are forward-only
+so 2·N(_active)·D.  The "useful fraction" MODEL/HLO catches remat and
+dispatch overcompute; the "roofline fraction" is useful-compute-time over
+the dominant term — the number §Perf drives up.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from pathlib import Path
+
+PEAK_FLOPS = 197e12          # bf16 per chip (TPU v5e)
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+GRID_DIR = (Path(__file__).resolve().parent.parent / "experiments"
+            / "dryrun_opt")
+
+
+def _param_counts(arch: str) -> tuple[int, int]:
+    """(total_params, active_params) from the abstract init (no alloc)."""
+    import jax
+
+    from repro.configs.registry import get_config
+    from repro.models.api import build_model
+
+    cfg = get_config(arch)
+    bundle = build_model(cfg)
+    shapes = jax.eval_shape(bundle.init, jax.random.PRNGKey(0))
+    total = active = 0
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    for path, leaf in flat:
+        keys = "/".join(str(getattr(p, "key", "")) for p in path)
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        if cfg.moe is not None and ("/wg" in keys or "/wu" in keys
+                                    or "/wd" in keys) and "shared" not in keys:
+            active += n * cfg.moe.top_k // cfg.moe.n_experts
+        else:
+            active += n
+    return total, active
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: str
+    mesh: str
+    status: str
+    reason: str = ""
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    model_flops_dev: float = 0.0
+    hlo_flops_dev: float = 0.0
+    useful_ratio: float = 0.0
+    roofline_frac: float = 0.0
+    dominant: str = ""
+    peak_gb: float = 0.0
+    tag: str = ""
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+_TOKENS = {"train_4k": 4096 * 256, "prefill_32k": 32768 * 32,
+           "decode_32k": 128, "long_500k": 1}
+_TRAIN_MULT = {"train_4k": 6.0, "prefill_32k": 2.0, "decode_32k": 2.0,
+               "long_500k": 2.0}
+
+
+def load_cell(path: Path, param_cache: dict) -> Cell:
+    rec = json.loads(path.read_text())
+    arch, shape, mesh = rec["arch"], rec["shape"], rec["mesh"]
+    cell = Cell(arch=arch, shape=shape, mesh=mesh, status=rec["status"],
+                reason=rec.get("reason", rec.get("error", ""))[:70],
+                tag=rec.get("tag", ""))
+    if rec["status"] != "ok":
+        return cell
+    ha = rec["hlo_analysis"]
+    coll = ha.get("collective_bytes_corrected",
+                  ha["collective_bytes_per_device"])
+    n_dev = rec.get("n_devices", 256)
+    if arch not in param_cache:
+        param_cache[arch] = _param_counts(arch)
+    total, active = param_cache[arch]   # active == total for dense archs
+    model_flops = _TRAIN_MULT[shape] * active * _TOKENS[shape]
+    cell.model_flops_dev = model_flops / n_dev
+    cell.hlo_flops_dev = ha["flops_per_device"]
+    cell.compute_s = ha["flops_per_device"] / PEAK_FLOPS
+    cell.memory_s = ha["traffic_bytes_per_device"] / HBM_BW
+    cell.collective_s = coll / LINK_BW   # bf16-corrected (DESIGN.md bias note)
+    cell.useful_ratio = cell.model_flops_dev / max(cell.hlo_flops_dev, 1.0)
+    cell.roofline_frac = (cell.model_flops_dev / PEAK_FLOPS) / \
+        max(cell.bound_time, 1e-12)
+    terms = {"compute": cell.compute_s, "memory": cell.memory_s,
+             "collective": cell.collective_s}
+    cell.dominant = max(terms, key=terms.get)
+    ma = rec.get("memory_analysis", {})
+    peak = ma.get("peak_memory_in_bytes", 0) + ma.get("temp_size_in_bytes", 0)
+    cell.peak_gb = peak / 1e9
+    return cell
+
+
+def load_grid(mesh: str = "16x16", tag: str = "",
+              grid_dir: Path | None = None) -> list[Cell]:
+    cache: dict = {}
+    cells = []
+    suffix = f"_{tag}" if tag else ""
+    for p in sorted((grid_dir or GRID_DIR).glob(f"*__{mesh}{suffix}.json")):
+        if not tag and ("_upd" in p.stem or p.stem.count("__") != 2):
+            continue
+        cells.append(load_cell(p, cache))
+    return cells
+
+
+def markdown_table(cells: list[Cell]) -> str:
+    lines = [
+        "| arch | shape | status | compute s | memory s | collect s | "
+        "dominant | useful MODEL/HLO | roofline frac | mem GB |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if c.status != "ok":
+            lines.append(f"| {c.arch} | {c.shape} | {c.status}: {c.reason}"
+                         " | – | – | – | – | – | – | – |")
+            continue
+        lines.append(
+            f"| {c.arch} | {c.shape} | ok | {c.compute_s:.3f} | "
+            f"{c.memory_s:.3f} | {c.collective_s:.3f} | **{c.dominant}** | "
+            f"{c.useful_ratio:.2f} | {c.roofline_frac:.3f} | "
+            f"{c.peak_gb:.1f} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=str(GRID_DIR),
+                    help="artifact dir (experiments/dryrun_baseline | "
+                         "experiments/dryrun_opt)")
+    ap.add_argument("--out", default="", help="also write markdown here")
+    args = ap.parse_args()
+
+    sections = []
+    for mesh in ("16x16", "2x16x16"):
+        cells = load_grid(mesh, grid_dir=Path(args.dir))
+        if not cells:
+            continue
+        lines = [f"\n### Roofline — mesh {mesh} ({len(cells)} cells, "
+                 f"{Path(args.dir).name})\n", markdown_table(cells)]
+        ok = [c for c in cells if c.status == "ok"]
+        if ok:
+            worst = min(ok, key=lambda c: c.roofline_frac)
+            coll = max(ok, key=lambda c: c.collective_s / max(c.bound_time,
+                                                              1e-12))
+            best = max(ok, key=lambda c: c.roofline_frac)
+            lines.append(
+                f"\nworst roofline fraction: {worst.arch}/{worst.shape} "
+                f"({worst.roofline_frac:.3f})  |  best: {best.arch}/"
+                f"{best.shape} ({best.roofline_frac:.3f})")
+            lines.append(
+                f"most collective-bound:   {coll.arch}/{coll.shape} "
+                f"({coll.collective_s:.2f}s of {coll.bound_time:.2f}s)")
+        section = "\n".join(lines)
+        print(section)
+        sections.append(section)
+    if args.out:
+        Path(args.out).write_text("\n\n".join(sections))
+
+
+if __name__ == "__main__":
+    main()

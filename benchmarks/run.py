@@ -1,0 +1,80 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table2,fig5] [--full]
+
+Prints ``name,us_per_call,derived`` CSV (benchmarks/common.py contract).
+Heavy convergence tables (table1, fig3) run a reduced step count by
+default; pass --full for the longer runs used in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks.common import header, record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset (table1,table2,table9,"
+                         "fig3,fig5,kernels,roofline)")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (fig3_ablation, fig5_ackley, kernels_bench,
+                            table1_pretrain, table2_complexity,
+                            table9_walltime)
+
+    suites = {
+        "table2": table2_complexity.run,
+        "kernels": kernels_bench.run,
+        "fig5": lambda: (fig5_ackley.run(scale_factor=1.0),
+                         fig5_ackley.run(scale_factor=3.0)),
+        "table9": table9_walltime.run,
+        "fig3": lambda: fig3_ablation.run(160 if args.full else 60),
+        "table1": lambda: table1_pretrain.run(160 if args.full else 60),
+    }
+
+    header()
+    t0 = time.time()
+    failures = []
+    for name, fn in suites.items():
+        if only and name not in only:
+            continue
+        t = time.time()
+        try:
+            fn()
+            record(f"{name}/suite_wall_s", (time.time() - t) * 1e6, "ok")
+        except Exception as e:
+            failures.append(name)
+            traceback.print_exc()
+            record(f"{name}/suite_wall_s", (time.time() - t) * 1e6,
+                   f"ERROR {type(e).__name__}")
+
+    # roofline summary (reads dry-run artifacts; cheap)
+    if only is None or "roofline" in only:
+        try:
+            from benchmarks import roofline
+            cells = roofline.load_grid("16x16")
+            ok = [c for c in cells if c.status == "ok"]
+            if ok:
+                worst = min(ok, key=lambda c: c.roofline_frac)
+                record("roofline/cells_ok", 0.0, f"{len(ok)} cells")
+                record("roofline/worst_fraction", 0.0,
+                       f"{worst.arch}/{worst.shape}={worst.roofline_frac:.3f}")
+        except Exception:
+            traceback.print_exc()
+
+    record("total_wall_s", (time.time() - t0) * 1e6, "")
+    if failures:
+        print(f"FAILED suites: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Batched serving demo: prefill + continuous decode on any assigned arch.
+
+    PYTHONPATH=src python examples/serve_demo.py --arch gemma2-27b
+(uses the reduced same-family config so it runs on CPU; drop --smoke on
+real hardware)
+"""
+
+import sys
+
+from repro.launch.serve import serve
+
+args = sys.argv[1:] or ["--arch", "gemma2-27b"]
+if "--smoke" not in args:
+    args.append("--smoke")
+serve(args + ["--requests", "6", "--batch", "3",
+              "--prompt-len", "24", "--gen", "12"])

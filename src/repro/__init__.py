@@ -1,0 +1,18 @@
+"""repro — SubTrack++: Gradient Subspace Tracking for Scalable LLM Training.
+
+A production-grade JAX training/inference framework built around the
+SubTrack++ optimizer (Grassmannian gradient subspace tracking +
+projection-aware Adam + recovery scaling), with a 10-architecture model
+zoo, FSDP x TP x DP distribution via pjit/GSPMD, fault-tolerant
+checkpointing, Pallas TPU kernels for the optimizer hot-spots, and a
+multi-pod dry-run / roofline harness.
+
+Public entry points:
+    repro.core.api.get_optimizer      — optimizer factory (subtrack/galore/fira/adamw/...)
+    repro.models.api.build_model      — model factory for the assigned architectures
+    repro.configs.registry.get_config — named architecture configs
+    repro.launch.train                — fault-tolerant training driver
+    repro.launch.dryrun               — multi-pod lower/compile/roofline harness
+"""
+
+__version__ = "0.1.0"

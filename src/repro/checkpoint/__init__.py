@@ -1,0 +1,5 @@
+"""Fault-tolerant checkpointing."""
+
+from repro.checkpoint.manager import CheckpointManager, load_pytree, save_pytree
+
+__all__ = ["CheckpointManager", "load_pytree", "save_pytree"]

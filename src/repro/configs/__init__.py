@@ -1,0 +1,3 @@
+"""Architecture configs: one module per assigned arch + the paper's own
+Llama pre-training sizes.  Access through ``repro.configs.registry``.
+"""

@@ -1,0 +1,20 @@
+"""stablelm-12b [dense].
+40L d_model=5120 32H (GQA kv=8) d_ff=13824 vocab=100352
+[hf:stabilityai/stablelm-2-12b; hf]  Partial rotary (25%) per the
+StableLM-2 family config.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-12b",
+    family="decoder",
+    n_layers=40,
+    d_model=5120,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=13824,
+    vocab_size=100352,
+    rope_pct=0.25,
+    rope_theta=10000.0,
+)

@@ -1,0 +1,135 @@
+"""Full-rank and block-coordinate baselines (paper Tables 1/8/9).
+
+These share the GradientTransform protocol of :mod:`repro.core.subtrack`
+so the training loop, checkpointing and dry-run treat every optimizer
+identically.  ``warm_start`` is a no-op for both.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lowrank_adam import AdamHP, DenseOptState, dense_adam_step, init_dense_state
+from repro.core.subtrack import GradientTransform, OptState
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    adam: AdamHP = field(default_factory=AdamHP)
+    weight_decay: float = 0.0
+
+
+def adamw(**overrides) -> GradientTransform:
+    """Full-rank AdamW — the paper's "Full-Rank" row.
+
+    Note the GaLore-style ``scale`` does not apply to the full-rank
+    baseline; AdamHP.scale is ignored here (the paper's full-rank runs use
+    plain AdamW).
+    """
+    cfg = AdamWConfig(**overrides)
+    hp = cfg.adam
+
+    def init(params) -> OptState:
+        inner = jax.tree.map(lambda p: init_dense_state(jnp.shape(p)), params)
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        n_updates=jnp.zeros((), jnp.int32), inner=inner)
+
+    def warm_start(state, grads):
+        return state
+
+    def update(grads, state, params, lr, do_subspace_update: bool = False):
+        step = state.step
+
+        def leaf(g, st, p):
+            delta, new_st = dense_adam_step(g, st, step, hp)
+            upd = (-lr * delta).astype(p.dtype)
+            if cfg.weight_decay:
+                upd = upd - (lr * cfg.weight_decay
+                             * p.astype(jnp.float32)).astype(p.dtype)
+            return upd, new_st
+
+        flat = jax.tree.map(leaf, grads, state.inner, params)
+        treedef = jax.tree.structure(params)
+        pairs = treedef.flatten_up_to(flat)
+        updates = jax.tree.unflatten(treedef, [t[0] for t in pairs])
+        new_inner = jax.tree.unflatten(treedef, [t[1] for t in pairs])
+        return updates, OptState(step=step + 1, n_updates=state.n_updates,
+                                 inner=new_inner)
+
+    def state_bytes(params) -> int:
+        return sum(2 * p.size * 4 for p in jax.tree.leaves(params))
+
+    return GradientTransform(init=init, warm_start=warm_start, update=update,
+                             state_bytes=state_bytes, config=cfg)
+
+
+@dataclass(frozen=True)
+class BAdamConfig:
+    adam: AdamHP = field(default_factory=AdamHP)
+    weight_decay: float = 0.0
+    block_interval: int = 100  # paper Table 10 "Block Switch Interval"
+    n_blocks: int = 8
+
+
+def badam(**overrides) -> GradientTransform:
+    """BAdam-style block coordinate descent (Luo et al., 2024).
+
+    Parameters are partitioned into ``n_blocks`` round-robin groups by leaf
+    index; every ``block_interval`` steps the active block advances.  Only
+    the active block's parameters receive updates (and its moments decay).
+
+    Memory caveat (documented in DESIGN.md): true BAdam frees the inactive
+    blocks' optimizer states; XLA's static buffers keep them allocated
+    here, so this baseline reproduces BAdam's *loss behaviour* (partial
+    tuning => reduced accuracy, paper Table 1) but not its memory savings.
+    The paper's memory table is reproduced analytically in
+    benchmarks/table2_complexity.py instead.
+    """
+    cfg = BAdamConfig(**overrides)
+    hp = cfg.adam
+
+    def init(params) -> OptState:
+        inner = jax.tree.map(lambda p: init_dense_state(jnp.shape(p)), params)
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        n_updates=jnp.zeros((), jnp.int32), inner=inner)
+
+    def warm_start(state, grads):
+        return state
+
+    def update(grads, state, params, lr, do_subspace_update: bool = False):
+        step = state.step
+        active_block = (step // cfg.block_interval) % cfg.n_blocks
+        leaves, treedef = jax.tree.flatten(params)
+        g_leaves = treedef.flatten_up_to(grads)
+        s_leaves = treedef.flatten_up_to(state.inner)
+
+        new_updates, new_inner = [], []
+        for i, (g, st, p) in enumerate(zip(g_leaves, s_leaves, leaves)):
+            is_active = (active_block == (i % cfg.n_blocks))
+            delta, cand = dense_adam_step(g, st, step, hp)
+            upd = jnp.where(is_active, (-lr * delta), 0.0).astype(p.dtype)
+            if cfg.weight_decay:
+                wd = (lr * cfg.weight_decay * p.astype(jnp.float32))
+                upd = upd - jnp.where(is_active, wd, 0.0).astype(p.dtype)
+            keep = lambda new, old: jax.tree.map(  # noqa: E731
+                lambda a, b: jnp.where(is_active, a, b), new, old)
+            new_updates.append(upd)
+            new_inner.append(DenseOptState(*keep(cand, st)))
+        return (jax.tree.unflatten(treedef, new_updates),
+                OptState(step=step + 1, n_updates=state.n_updates,
+                         inner=jax.tree.unflatten(treedef, new_inner)))
+
+    def state_bytes(params) -> int:
+        # true BAdam stores states for one block only
+        leaves = jax.tree.leaves(params)
+        biggest_block = max(
+            sum(p.size for i, p in enumerate(leaves) if i % cfg.n_blocks == b)
+            for b in range(min(cfg.n_blocks, len(leaves))))
+        return 2 * biggest_block * 4
+
+    return GradientTransform(init=init, warm_start=warm_start, update=update,
+                             state_bytes=state_bytes, config=cfg)

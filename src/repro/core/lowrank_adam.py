@@ -1,0 +1,238 @@
+"""Low-rank Adam machinery: projected moments, projection-aware rotation,
+recovery scaling — SubTrack++ Alg. 1 minus the subspace geometry (which
+lives in :mod:`repro.core.subspace`).
+
+All functions operate on a single 2-D gradient ``G (m, n)`` with ``m <= n``
+and its per-matrix optimizer state.  fp32 throughout (paper trains bf16
+weights with fp32 optimizer states).
+
+Moment-rotation note (DESIGN.md §4): the paper's Eq. (9) carries an
+``(1 - beta2^{t-1})`` factor inherited from LDAdam's bias-corrected-state
+bookkeeping.  Applied literally to *raw* (uncorrected) moments it breaks the
+invariant "no subspace change => plain Adam update" (set Q = I in Eq. 9 and
+compare Eq. 7).  We store raw moments, so the default implements the
+mathematically consistent form
+
+    V <- beta2 * |Q^2 (V - M^2) + (Q M)^2| + (1 - beta2) * G~^2
+
+which reduces exactly to Eq. (7) at Q = I, and expose
+``ldadam_bias_factor=True`` for the literal Eq. (9).  Both are tested.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+_TINY = 1e-30
+
+
+@dataclass(frozen=True)
+class AdamHP:
+    """Scalar hyperparameters shared by every low-rank optimizer variant."""
+
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    # GaLore-style scale multiplying the back-projected update (Table 10: 0.25)
+    scale: float = 0.25
+    # Fira/SubTrack++ recovery-growth limiter zeta (Eq. 12)
+    zeta: float = 1.01
+    bias_correction: bool = True
+    # literal Eq. (9) factor — see module docstring
+    ldadam_bias_factor: bool = False
+
+
+class MatrixOptState(NamedTuple):
+    """Per-2D-matrix optimizer state (paper Table 2: mr + 2nr fp32).
+
+    ``lam_prev`` is the Frobenius norm of the previous recovery term
+    (Eq. 12's limiter memory); 0 disables the limiter on the first step.
+    """
+
+    S: Array         # (m, r) orthonormal subspace basis
+    M: Array         # (r, n) first moment, raw (bias-uncorrected)
+    V: Array         # (r, n) second moment, raw
+    lam_prev: Array  # () fp32
+
+
+def init_matrix_state(m: int, n: int, rank: int) -> MatrixOptState:
+    """Zero state; S is a placeholder basis until warm_start installs the
+    SVD of the first gradient (Alg. 1 line 1)."""
+    return MatrixOptState(
+        S=jnp.eye(m, rank, dtype=jnp.float32),
+        M=jnp.zeros((rank, n), jnp.float32),
+        V=jnp.zeros((rank, n), jnp.float32),
+        lam_prev=jnp.zeros((), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Projection-aware moment rotation (Eq. 8-9 / Appendix C)
+# ---------------------------------------------------------------------------
+
+
+def rotate_moments_dense(Q: Array, M: Array, V: Array, step: Array,
+                         hp: AdamHP) -> tuple[Array, Array]:
+    """Paper-faithful dense rotation with explicit Q = S_new^T S_old.
+
+    M_rot = Q M                                   (Eq. 8 inner term)
+    V_rot = |Q∘Q (V - M∘M) + (Q M)∘(Q M)|         (Eq. 9 inner term)
+
+    The absolute value implements the paper's "clip negative variance to
+    valid" guard.  Cost O(r^2 n).
+    """
+    QM = Q @ M
+    central = V - M * M                       # central variance, rotates with Q^2
+    V_rot = jnp.abs((Q * Q) @ central + QM * QM)
+    if hp.ldadam_bias_factor:
+        V_rot = (1.0 - hp.beta2 ** jnp.maximum(step, 1).astype(jnp.float32)) * V_rot
+    return QM, V_rot
+
+
+def rotate_moments_rank1(cos_theta: Array, v: Array, M: Array, V: Array,
+                         step: Array, hp: AdamHP) -> tuple[Array, Array]:
+    """O(rn) rotation exploiting Q = I + c v v^T, c = cos(theta) - 1.
+
+    Exact consequence of the rank-1 geodesic (see subspace.track_subspace):
+
+        Q M      = M + c v (v^T M)
+        (Q∘Q)_ij = (δ_ij + c v_i v_j)^2 = δ_ij (1 + 2 c v_i^2) + c^2 v_i^2 v_j^2
+        (Q∘Q) X  = (1 + 2c v^2) ⊙ X + c^2 v^2 ((v^2)^T X)
+
+    No (r, r) matrix is ever formed; everything is rank-1 against (r, n)
+    states.  This is the beyond-paper optimization logged in §Perf.
+    """
+    c = cos_theta - 1.0
+    v2 = v * v
+    QM = M + c * jnp.outer(v, v @ M)
+    central = V - M * M
+    QQc = (1.0 + 2.0 * c * v2)[:, None] * central + (c * c) * jnp.outer(v2, v2 @ central)
+    V_rot = jnp.abs(QQc + QM * QM)
+    if hp.ldadam_bias_factor:
+        V_rot = (1.0 - hp.beta2 ** jnp.maximum(step, 1).astype(jnp.float32)) * V_rot
+    return QM, V_rot
+
+
+# ---------------------------------------------------------------------------
+# The per-matrix optimizer step (Alg. 1 body)
+# ---------------------------------------------------------------------------
+
+
+class MatrixStepOut(NamedTuple):
+    delta: Array              # (m, n) raw update direction (pre learning-rate, sign = descent)
+    state: MatrixOptState
+
+
+def lowrank_adam_step(
+    G: Array,
+    st: MatrixOptState,
+    step: Array,
+    hp: AdamHP,
+    *,
+    rotated: Optional[tuple[Array, Array]] = None,
+    S_new: Optional[Array] = None,
+    recovery: bool = True,
+    precomputed_proj: Optional[Array] = None,
+    backend=None,
+) -> MatrixStepOut:
+    """One Alg. 1 iteration for a single matrix.
+
+    When the subspace just moved, callers pass ``S_new`` plus the already
+    ``rotated`` (M_rot, V_rot) pair; otherwise the plain Adam rules
+    (Eq. 6-7) apply on the stored moments.  ``precomputed_proj`` lets the
+    tracking path reuse ``A = S_old^T G`` when S did not change (GaLore-style
+    refresh reuses nothing; SubTrack++ plain steps reuse nothing either —
+    the projection must use the *current* basis).
+
+    Returns the descent direction ``delta`` such that the weight update is
+    ``W <- W - lr * delta`` (learning rate, weight decay and global clipping
+    are applied by the pytree-level optimizer).
+    """
+    G = G.astype(jnp.float32)
+    S = st.S if S_new is None else S_new
+
+    if precomputed_proj is not None:
+        Gt = precomputed_proj
+    elif backend is not None:
+        Gt = backend.project(S, G)                    # (r, n) kernel path
+    else:
+        Gt = S.T @ G                                  # (r, n)
+
+    M_prev, V_prev = (st.M, st.V) if rotated is None else rotated
+    M = hp.beta1 * M_prev + (1.0 - hp.beta1) * Gt
+    V = hp.beta2 * V_prev + (1.0 - hp.beta2) * (Gt * Gt)
+
+    if hp.bias_correction:
+        t = step.astype(jnp.float32) + 1.0
+        m_hat = M / (1.0 - hp.beta1 ** t)
+        v_hat = V / (1.0 - hp.beta2 ** t)
+    else:
+        m_hat, v_hat = M, V
+
+    Gto = m_hat / (jnp.sqrt(v_hat) + hp.eps)          # optimizer output G~^O (r, n)
+    if backend is not None:
+        Ghat = backend.backproject(S, Gto)            # (m, n) kernel path
+    else:
+        Ghat = S @ Gto                                # back-projection (m, n)
+
+    lam_new = st.lam_prev
+    if recovery:
+        # phi_i = ||G~^O_{:,i}|| / ||G~_{:,i}||  (Eq. 11; columns over r)
+        num = jnp.linalg.norm(Gto, axis=0)
+        den = jnp.linalg.norm(Gt, axis=0)
+        phi = num / jnp.maximum(den, _TINY)           # (n,)
+        if backend is not None:
+            Lam = backend.recovery(S, G, Gt, phi)     # fused resid+scale kernel
+        else:
+            resid = G - S @ Gt                        # (m, n) orthogonal component
+            Lam = resid * phi[None, :]
+        lam_norm = jnp.linalg.norm(Lam)
+        # Eq. 12 growth limiter; inactive until lam_prev is populated.
+        limit = hp.zeta * st.lam_prev
+        do_clip = (st.lam_prev > 0.0) & (lam_norm > limit)
+        scale = jnp.where(do_clip, limit / jnp.maximum(lam_norm, _TINY), 1.0)
+        Lam = Lam * scale
+        lam_new = jnp.where(st.lam_prev > 0.0,
+                            jnp.minimum(lam_norm, limit), lam_norm)
+        delta = hp.scale * (Ghat + Lam)
+    else:
+        delta = hp.scale * Ghat
+
+    return MatrixStepOut(delta=delta,
+                         state=MatrixOptState(S=S, M=M, V=V, lam_prev=lam_new))
+
+
+# ---------------------------------------------------------------------------
+# Dense Adam (1-D params, small matrices, and the full-rank baseline)
+# ---------------------------------------------------------------------------
+
+
+class DenseOptState(NamedTuple):
+    M: Array
+    V: Array
+
+
+def init_dense_state(shape, dtype=jnp.float32) -> DenseOptState:
+    return DenseOptState(M=jnp.zeros(shape, dtype), V=jnp.zeros(shape, dtype))
+
+
+def dense_adam_step(G: Array, st: DenseOptState, step: Array,
+                    hp: AdamHP) -> tuple[Array, DenseOptState]:
+    """Standard Adam direction for non-projected parameters."""
+    G = G.astype(jnp.float32)
+    M = hp.beta1 * st.M + (1.0 - hp.beta1) * G
+    V = hp.beta2 * st.V + (1.0 - hp.beta2) * (G * G)
+    if hp.bias_correction:
+        t = step.astype(jnp.float32) + 1.0
+        m_hat = M / (1.0 - hp.beta1 ** t)
+        v_hat = V / (1.0 - hp.beta2 ** t)
+    else:
+        m_hat, v_hat = M, V
+    delta = m_hat / (jnp.sqrt(v_hat) + hp.eps)
+    return delta, DenseOptState(M=M, V=V)

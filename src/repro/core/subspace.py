@@ -1,0 +1,346 @@
+"""Grassmannian gradient-subspace tracking — the geometric core of SubTrack++.
+
+All functions here operate on a single 2-D gradient matrix ``G`` of shape
+``(m, n)`` with the convention ``m <= n`` (callers transpose as needed; see
+:mod:`repro.core.plan`).  The tracked subspace is an orthonormal basis
+``S in R^{m x r}`` — a point on the Stiefel manifold St(m, r) representing a
+point on the Grassmannian Gr(m, r).
+
+Implements, in paper order:
+
+* subspace initialization from the SVD of the first gradient (Eq. 1), with a
+  randomized range-finder alternative for very large matrices,
+* the least-squares subspace-error objective and its closed form
+  (Eq. 2–3: since S is orthonormal, ``argmin_A ||S A - G||_F = S^T G``),
+* the Grassmann tangent vector ``dF = -2 R A^T`` (Eq. 4), computed in the
+  fused form ``-2 G A^T + 2 S (A A^T)`` that never materializes the
+  residual ``R`` (TPU adaptation, see DESIGN.md §4/§6),
+* the rank-1 geodesic update (Eq. 5 / Theorem 3.6) via the top singular
+  triple of the tangent, extracted with a Gram-matrix power iteration.
+
+Everything is jit-able, vmap-able and shape-static — no data-dependent
+shapes, no host callbacks — so it runs inside pjit on a production mesh.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# Numerical floor used to guard divisions; fp32 throughout the optimizer.
+_TINY = 1e-30
+
+
+class Rank1Triple(NamedTuple):
+    """Top singular triple of the Grassmann tangent ``T in R^{m x r}``."""
+
+    sigma: Array  # () largest singular value
+    u: Array      # (m,) left singular vector (lies in the orthogonal complement of S)
+    v: Array      # (r,) right singular vector
+
+
+# ---------------------------------------------------------------------------
+# Subspace initialization (Eq. 1)
+# ---------------------------------------------------------------------------
+
+
+def init_subspace_svd(G: Array, rank: int) -> Array:
+    """S_0 = U[:, :r] from the (thin) SVD of the first gradient (paper Eq. 1).
+
+    Exact and paper-faithful.  Cost O(n m^2); used by default and always in
+    tests.  ``G``: (m, n) with m <= n.  Returns (m, r) orthonormal.
+    """
+    G = G.astype(jnp.float32)
+    U, _, _ = jnp.linalg.svd(G, full_matrices=False)
+    return U[:, :rank]
+
+
+def init_subspace_randomized(G: Array, rank: int, *, seed: int = 0,
+                             oversample: int = 8, n_iter: int = 2) -> Array:
+    """Randomized range finder: S_0 = orth((G G^T)^q G Omega)[: , :r].
+
+    Halko-Martinsson-Tropp style subspace iteration.  O(mn(r+p)) — much
+    cheaper than a full SVD for the very large matrices met in 7B+ models,
+    and lowers to pure matmuls + one QR of an (m, r+p) matrix, which shards
+    cleanly under GSPMD (TPU adaptation; see DESIGN.md §4).
+    """
+    m, n = G.shape
+    G = G.astype(jnp.float32)
+    k = min(rank + oversample, m)
+    omega = jax.random.normal(jax.random.PRNGKey(seed), (n, k), dtype=jnp.float32)
+    Y = G @ omega                             # (m, k)
+    for _ in range(n_iter):
+        Y = G @ (G.T @ Y)                     # power iteration sharpens spectrum
+    Q, _ = jnp.linalg.qr(Y)                   # (m, k) orthonormal
+    return Q[:, :rank]
+
+
+def init_subspace_identity(G: Array, rank: int) -> Array:
+    """Deterministic fallback: first r canonical basis vectors.
+
+    Cheapest possible init; the Grassmannian tracker converges to the true
+    subspace over updates (Balzano et al., 2011).  Useful as an ablation and
+    for tests of tracking from a deliberately bad starting point.
+    """
+    m = G.shape[0]
+    return jnp.eye(m, rank, dtype=jnp.float32)
+
+
+_INIT_METHODS = {
+    "svd": init_subspace_svd,
+    "randomized": init_subspace_randomized,
+    "identity": init_subspace_identity,
+}
+
+
+def init_subspace(G: Array, rank: int, method: str = "svd") -> Array:
+    """Dispatch subspace init.  G: (m, n), m <= n.  Returns (m, rank) fp32."""
+    try:
+        fn = _INIT_METHODS[method]
+    except KeyError:
+        raise ValueError(
+            f"unknown subspace init {method!r}; options: {sorted(_INIT_METHODS)}"
+        ) from None
+    return fn(G, rank)
+
+
+# ---------------------------------------------------------------------------
+# Least-squares projection + Grassmann tangent (Eq. 2-4)
+# ---------------------------------------------------------------------------
+
+
+def project(S: Array, G: Array) -> Array:
+    """Closed-form least squares A* = argmin_A ||S A - G||_F^2 = S^T G.
+
+    Valid because S is orthonormal (S^T S = I): the normal equations
+    (S^T S) A = S^T G collapse.  This is simultaneously the low-rank
+    projection G~ used by the optimizer.  Returns (r, n) fp32.
+    """
+    return S.T @ G.astype(jnp.float32)
+
+
+def tangent_naive(S: Array, G: Array, A: Array) -> Array:
+    """Paper-literal tangent: R = G - S A;  dF = -2 R A^T.   (reference)
+
+    Materializes the (m, n) residual — 3 HBM passes over m*n data.  Kept as
+    the oracle for the fused schedule and the Pallas kernel.
+    """
+    R = G.astype(jnp.float32) - S @ A
+    return -2.0 * (R @ A.T)
+
+
+def tangent_fused(S: Array, G: Array, A: Array) -> Array:
+    """Fused tangent: dF = -2 G A^T + 2 S (A A^T).
+
+    Identical math (expand R = G - S A), but the (m, n) residual is never
+    formed: one read of G, one (r, r) Gram, one (m, r) matmul.  This is the
+    schedule the Pallas kernel implements on TPU (DESIGN.md §6).
+    """
+    GA = G.astype(jnp.float32) @ A.T          # (m, r)
+    AA = A @ A.T                              # (r, r)
+    return -2.0 * GA + 2.0 * (S @ AA)
+
+
+def top1_power(T: Array, *, n_iter: int = 24) -> Rank1Triple:
+    """Top singular triple of T (m, r) via power iteration on the r x r Gram.
+
+    TPU-native replacement for ``svd(T)``: the Gram ``C = T^T T`` is tiny
+    (r x r), the iteration is a fixed-trip-count ``fori_loop`` (static shape,
+    jit/pjit-friendly, deterministic start vector).  With sigma_1 > sigma_2
+    the iterate converges geometrically; 24 iterations give ~fp32-level
+    accuracy for the gap ratios seen in practice (tested against eigh).
+    """
+    T = T.astype(jnp.float32)
+    C = T.T @ T                                         # (r, r)
+    r = C.shape[0]
+    v0 = jnp.full((r,), 1.0 / jnp.sqrt(r), dtype=jnp.float32)
+
+    def body(_, v):
+        w = C @ v
+        return w / jnp.maximum(jnp.linalg.norm(w), _TINY)
+
+    v = jax.lax.fori_loop(0, n_iter, body, v0)
+    sigma2 = v @ (C @ v)                                # Rayleigh quotient = sigma_1^2
+    sigma = jnp.sqrt(jnp.maximum(sigma2, 0.0))
+    u = (T @ v) / jnp.maximum(sigma, _TINY)             # (m,)
+    return Rank1Triple(sigma=sigma, u=u, v=v)
+
+
+def top1_eigh(T: Array) -> Rank1Triple:
+    """Exact top singular triple via eigh of the r x r Gram (test oracle)."""
+    T = T.astype(jnp.float32)
+    C = T.T @ T
+    evals, evecs = jnp.linalg.eigh(C)                   # ascending
+    v = evecs[:, -1]
+    sigma = jnp.sqrt(jnp.maximum(evals[-1], 0.0))
+    u = (T @ v) / jnp.maximum(sigma, _TINY)
+    return Rank1Triple(sigma=sigma, u=u, v=v)
+
+
+# ---------------------------------------------------------------------------
+# Rank-1 Grassmann geodesic step (Eq. 5)
+# ---------------------------------------------------------------------------
+
+
+def geodesic_step(S: Array, triple: Rank1Triple, eta: float) -> Array:
+    """Move along the Grassmann geodesic by step ``eta`` (paper Eq. 5).
+
+    For the rank-1 tangent approximation ``T ~= sigma * u v^T`` the exponential
+    map collapses to a rank-1 update of the basis:
+
+        S_new = S + (S v) (cos(sigma*eta) - 1) v^T + u sin(sigma*eta) v^T
+
+    (expand Eq. 5 with V_F = v, U_F = u, Sigma_F = sigma; the
+    ``S (I - v v^T)`` term keeps the untouched directions).  Orthonormality
+    is preserved exactly because u ⟂ range(S) and ||u|| = ||v|| = 1.
+    When sigma == 0 (zero tangent: the subspace already contains G's range)
+    u is zeroed by the guard in ``top1_power`` and S is returned unchanged.
+    """
+    theta = triple.sigma * eta
+    Sv = S @ triple.v                                   # (m,)
+    upd = jnp.outer(Sv * (jnp.cos(theta) - 1.0) + triple.u * jnp.sin(theta),
+                    triple.v)
+    return S + upd
+
+
+def geodesic_full(S: Array, triple: Rank1Triple, eta: float) -> Array:
+    """Literal Eq. 5 evaluation (matrix form) — test oracle for geodesic_step."""
+    v = triple.v[:, None]                               # (r, 1)
+    u = triple.u[:, None]                               # (m, 1)
+    theta = triple.sigma * eta
+    left = jnp.concatenate([S @ v, u], axis=1)          # (m, 2)
+    mid = jnp.stack([jnp.cos(theta), jnp.sin(theta)])[:, None]  # (2, 1)
+    r = S.shape[1]
+    return left @ (mid * v.T) + S @ (jnp.eye(r, dtype=S.dtype) - v @ v.T)
+
+
+def reorthonormalize(S: Array) -> Array:
+    """QR-based re-orthonormalization (sign-fixed) to scrub fp drift.
+
+    Optional maintenance pass (config ``reorth_interval``); the geodesic step
+    is exactly orthonormality-preserving in real arithmetic, so this only
+    corrects accumulated roundoff over thousands of rank-1 updates.
+    """
+    Q, R = jnp.linalg.qr(S)
+    # fix signs so the basis is continuous with the input
+    signs = jnp.sign(jnp.diagonal(R))
+    signs = jnp.where(signs == 0, 1.0, signs)
+    return Q * signs[None, :]
+
+
+# ---------------------------------------------------------------------------
+# One full subspace-tracking update (Alg. 1 "if t mod k == 0" block)
+# ---------------------------------------------------------------------------
+
+
+class TrackResult(NamedTuple):
+    S_new: Array          # (m, r) updated orthonormal basis
+    A: Array              # (r, n) least-squares coefficients (= old-basis projection)
+    cos_theta: Array      # () cos(sigma*eta) — used for the O(rn) rotation shortcut
+    v: Array              # (r,) right singular vector of the tangent
+
+
+def track_subspace(
+    S: Array,
+    G: Array,
+    *,
+    eta: float,
+    fused_tangent: bool = True,
+    exact_top1: bool = False,
+    power_iters: int = 24,
+) -> TrackResult:
+    """Grassmannian subspace-tracking update (SubTrack++ Alg. 1, update block).
+
+    Returns the new basis plus the ``(cos_theta, v)`` pair that fully
+    determines the change-of-basis matrix ``Q = S_new^T S_old`` via
+
+        Q = I + (cos(theta) - 1) v v^T
+
+    (derivation: S_new - S_old = p v^T with S_old^T p = (cos-1) v, and
+    u ⟂ S_old).  Downstream projection-aware moment rotation can therefore
+    run in O(rn) instead of O(m r^2 + r^2 n) — see
+    :func:`repro.core.lowrank_adam.rotate_moments`.
+    """
+    G = G.astype(jnp.float32)
+    A = project(S, G)                                   # (r, n)
+    T = (tangent_fused if fused_tangent else tangent_naive)(S, G, A)
+    triple = (top1_eigh if exact_top1 else functools.partial(
+        top1_power, n_iter=power_iters))(T)
+    # DESCENT: the geodesic must follow -grad F to *minimize* the estimation
+    # error (GROUSE / Blocker et al.; paper Fig. 2 intent).  Alg. 1 as
+    # literally printed moves along +grad F, which ascends the LS objective —
+    # empirically verified by tests/test_subspace.py::
+    # test_tracking_reduces_projection_error (see DESIGN.md §4).  The sign
+    # enters only through u (sigma, v come from the sign-invariant Gram).
+    triple = triple._replace(u=-triple.u)
+    triple = stabilize_triple(S, triple)
+    S_new = geodesic_step(S, triple, eta)
+    return TrackResult(S_new=S_new, A=A,
+                       cos_theta=jnp.cos(triple.sigma * eta), v=triple.v)
+
+
+def stabilize_triple(S: Array, triple: Rank1Triple,
+                     rel_tol: float = 1e-6) -> Rank1Triple:
+    """Make the geodesic step unconditionally manifold-preserving.
+
+    In exact arithmetic the tangent satisfies S^T T = 0, so u = T v / sigma
+    is orthogonal to range(S).  Near a critical point of F (e.g. S freshly
+    SVD-initialized on a stationary gradient) sigma ~ 0 and u = tiny/tiny is
+    a *garbage unit vector* with large components inside range(S): the
+    rank-1 update would then leave the Stiefel manifold.  Two guards:
+
+    1. explicitly project u onto the orthogonal complement of S (cost
+       O(mr) — noise floor removal, exact-math no-op);
+    2. if the projected u has negligible norm, zero both u and sigma —
+       with theta = 0 the geodesic step is the exact identity S_new = S.
+    """
+    u_perp = triple.u - S @ (S.T @ triple.u)
+    nu = jnp.linalg.norm(u_perp)
+    ok = (nu > rel_tol).astype(jnp.float32)
+    u = ok * u_perp / jnp.maximum(nu, _TINY)
+    return Rank1Triple(sigma=triple.sigma * ok, u=u, v=triple.v)
+
+
+def change_of_basis(S_new: Array, S_old: Array) -> Array:
+    """Dense Q = S_new^T S_old (r x r) — paper-faithful baseline path."""
+    return S_new.T @ S_old
+
+
+def change_of_basis_rank1(cos_theta: Array, v: Array) -> Array:
+    """Closed-form Q = I + (cos(theta) - 1) v v^T from the geodesic step.
+
+    Exact (not an approximation): follows from the rank-1 geodesic structure.
+    Materializes the small (r, r) matrix; the O(rn) path in lowrank_adam
+    avoids even this.
+    """
+    r = v.shape[0]
+    return jnp.eye(r, dtype=v.dtype) + (cos_theta - 1.0) * jnp.outer(v, v)
+
+
+# ---------------------------------------------------------------------------
+# Baseline subspace refresh rules (GaLore / Fira / GoLore-style)
+# ---------------------------------------------------------------------------
+
+
+def refresh_svd(G: Array, rank: int) -> Array:
+    """GaLore/Fira refresh: full SVD of the current gradient, top-r left
+    singular vectors.  O(n m^2) — the cost SubTrack++ removes (Table 2)."""
+    return init_subspace_svd(G, rank)
+
+
+def refresh_random(G: Array, rank: int, *, step: Array | int) -> Array:
+    """GoLore/random-projection refresh: a fresh random orthonormal basis.
+
+    Used by the ``golore`` baseline; seeded by step so successive refreshes
+    differ, fold_in keeps it deterministic per step.
+    """
+    key = jax.random.fold_in(jax.random.PRNGKey(17), jnp.asarray(step, jnp.int32))
+    m = G.shape[0]
+    gauss = jax.random.normal(key, (m, rank), dtype=jnp.float32)
+    Q, _ = jnp.linalg.qr(gauss)
+    return Q

@@ -1,0 +1,5 @@
+"""Deterministic, stateless, shardable synthetic data pipeline."""
+
+from repro.data.pipeline import DataConfig, SyntheticLMDataset, make_dataset
+
+__all__ = ["DataConfig", "SyntheticLMDataset", "make_dataset"]

@@ -1,0 +1,1 @@
+"""Distributed runtime: mesh context, sharding rules, collective parsing."""

@@ -1,0 +1,110 @@
+"""Mesh context — the one piece of global distribution state.
+
+Model code needs to know (a) the mesh, (b) which axes carry the batch
+(pure data parallel) and (c) which axis is tensor/expert parallel, to place
+sharding constraints and to size expert-parallel parameter layouts.  The
+context is set by launchers (train/serve/dryrun) around model build + step
+execution; tests and CPU smoke runs get a trivial 1x1 mesh by default.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import math
+from dataclasses import dataclass
+from functools import cached_property
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class MeshContext:
+    mesh: Mesh
+    batch_axes: tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+
+    @cached_property
+    def tp(self) -> int:
+        return self.mesh.shape[self.model_axis]
+
+    @cached_property
+    def dp(self) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in self.batch_axes]))
+
+    def expert_layout(self, n_experts: int, d_ff: int) -> tuple[int, int, int]:
+        """(ep, experts_per_rank, ff_shard) for hybrid expert x tensor parallel.
+
+        ep = gcd(E, tp): experts spread over ep groups of the model axis;
+        within a group, the expert FFN hidden dim is tensor-sharded
+        tp/ep ways.  Covers E >= tp (llama4: 128/16 -> 8 experts/rank),
+        E < tp (mixtral: 8 experts x 2-way tensor), and tp == 1 (CPU smoke).
+        """
+        ep = math.gcd(n_experts, self.tp)
+        tp_within = self.tp // ep
+        if d_ff % tp_within:
+            raise ValueError(
+                f"expert d_ff={d_ff} not divisible by within-expert TP "
+                f"{tp_within} (E={n_experts}, tp={self.tp})")
+        return ep, n_experts // ep, d_ff // tp_within
+
+    def batch_spec(self, *rest) -> P:
+        """PartitionSpec with the batch dim over all pure-DP axes."""
+        return P(self.batch_axes, *rest)
+
+
+_CURRENT: MeshContext | None = None
+
+
+def _trivial_context() -> MeshContext:
+    dev = np.array(jax.devices()[:1]).reshape(1, 1)
+    return MeshContext(mesh=Mesh(dev, ("data", "model")),
+                       batch_axes=("data",))
+
+
+def get_mesh_context() -> MeshContext:
+    global _CURRENT
+    if _CURRENT is None:
+        _CURRENT = _trivial_context()
+    return _CURRENT
+
+
+def set_mesh_context(ctx: MeshContext | None) -> None:
+    global _CURRENT
+    _CURRENT = ctx
+
+
+@contextlib.contextmanager
+def mesh_context(ctx: MeshContext):
+    """Install ``ctx`` (and activate its mesh) for the duration of a block."""
+    global _CURRENT
+    prev = _CURRENT
+    _CURRENT = ctx
+    try:
+        with ctx.mesh:
+            yield ctx
+    finally:
+        _CURRENT = prev
+
+
+def shard(x: jax.Array, *spec) -> jax.Array:
+    """with_sharding_constraint against the current context's mesh.
+
+    Axis names that don't divide the corresponding dim are dropped (the
+    constraint is advisory; GSPMD would reject non-divisible specs), so
+    model code can request e.g. head-sharding unconditionally and fall back
+    to replication for archs whose head counts don't divide tp
+    (DESIGN.md §5).
+    """
+    ctx = get_mesh_context()
+    clean = []
+    for dim, names in zip(x.shape, spec):
+        if names is None:
+            clean.append(None)
+            continue
+        tup = names if isinstance(names, tuple) else (names,)
+        size = int(np.prod([ctx.mesh.shape[n] for n in tup]))
+        clean.append(names if dim % size == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*clean)))

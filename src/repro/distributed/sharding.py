@@ -1,0 +1,262 @@
+"""Sharding rules: parameter / optimizer-state / batch / cache
+PartitionSpecs for the production mesh.
+
+Strategy (DESIGN.md §5): FSDP over the ``data`` axis + Megatron TP over
+``model``; the ``pod`` axis is pure DP (batch only).  Rules are name-driven
+(path regex on the params pytree) with divisibility guards — a dim that a
+mesh axis doesn't divide falls back to replication on that axis, so every
+assigned arch gets a *valid* sharding and suboptimal cells surface in the
+roofline rather than failing to compile.
+
+Optimizer states inherit the projected geometry: ``S (m, r)`` shards like
+the weight's m-dim, ``M/V (r, n)`` like the n-dim (respecting the
+canonical-transpose convention of repro.core.plan).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import plan as plan_lib
+from repro.core.lowrank_adam import DenseOptState, MatrixOptState
+from repro.core.subtrack import OptState
+from repro.distributed.context import MeshContext
+
+# (path regex, spec builder(shape) -> tuple of axis names/None per dim)
+# fsdp = "data", tp = "model"; leading stack dims -> None automatically.
+
+
+def _trailing2(row_ax, col_ax):
+    def build(shape):
+        lead = (None,) * (len(shape) - 2)
+        return lead + (row_ax, col_ax)
+    return build
+
+
+_RULES: list[tuple[str, Any]] = [
+    # embeddings: vocab-parallel rows, FSDP cols
+    (r"embed$", _trailing2("model", "data")),
+    (r"lm_head$", _trailing2("data", "model")),
+    # MoE expert banks: physical layout (L, tp, E_loc, d, f_loc) / (..., f_loc, d)
+    (r"mlp/w[gu]$", lambda s: (None, "model", None, "data", None)),
+    (r"mlp/wd$", lambda s: (None, "model", None, None, "data")),
+    (r"router$", lambda s: (None,) * (len(s) - 2) + ("data", None)),
+    # column-parallel projections (inputs d -> wide)
+    (r"(attn/w[qkv]|w_gate|w_up|shared_w[gu]|in_proj|w_in|w_uq|w_dq|w_dkv"
+     r"|w_kr|wq|wk|wv|W)$", _trailing2("data", "model")),
+    # row-parallel projections (wide -> d)
+    (r"(attn/wo|w_down|shared_wd|out_proj|wo)$", _trailing2("model", "data")),
+    # MLA latent expansions (kvr, H, hd): shard latent dim on data
+    (r"w_u[kv]$", lambda s: (None,) * (len(s) - 3) + ("data", None, None)),
+]
+
+
+def _divis_guard(spec: tuple, shape: tuple[int, ...],
+                 ctx: MeshContext) -> P:
+    clean = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            clean.append(None)
+            continue
+        # FSDP widens to all pure-DP axes: on the multi-pod mesh "data"
+        # means ("pod", "data") — params/grads/optimizer shard across pods
+        # too (llama4-scale models need the 32-way FSDP; the pod axis stays
+        # pure DP for activations/batch).
+        if ax == "data" and len(ctx.batch_axes) > 1:
+            ax = tuple(ctx.batch_axes)
+        names = ax if isinstance(ax, tuple) else (ax,)
+        size = int(np.prod([ctx.mesh.shape[n] for n in names]))
+        clean.append(ax if (size and dim % size == 0) else None)
+    return P(*clean)
+
+
+_SERVING_RULES: list[tuple[str, Any]] = [
+    # MoE banks stay fully sharded with the FFN hidden dim over `data` —
+    # resident weights, zero per-step gathers (§Perf it5; matches the
+    # serving-mode shard_map in_specs in repro.models.moe)
+    (r"mlp/w[gu]$", lambda s: (None, "model", None, None, "data")),
+    (r"mlp/wd$", lambda s: (None, "model", None, "data", None)),
+]
+
+
+def spec_for_path(path: str, shape: tuple[int, ...],
+                  ctx: MeshContext, serving: bool = False) -> P:
+    if len(shape) < 2:
+        return P()
+    if serving:
+        for pat, builder in _SERVING_RULES:
+            if re.search(pat, path):
+                return _divis_guard(builder(shape), shape, ctx)
+    for pat, builder in _RULES:
+        if re.search(pat, path):
+            spec = builder(shape)
+            if serving:
+                # decode is latency-bound: weights replicate over `data`
+                # (each arch's dense params fit at 1/tp) so no per-step
+                # FSDP all-gathers
+                spec = tuple(None if a == "data" else a for a in spec)
+            return _divis_guard(spec, shape, ctx)
+    lead = (None,) * (len(shape) - 2)
+    fallback = lead + ((None, "model") if serving else ("data", "model"))
+    return _divis_guard(fallback, shape, ctx)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+    return "/".join(parts)
+
+
+def param_specs(params_shape: Any, ctx: MeshContext,
+                serving: bool = False) -> Any:
+    """Pytree of PartitionSpec mirroring the params pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: spec_for_path(_path_str(path), tuple(leaf.shape),
+                                         ctx, serving),
+        params_shape)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer state specs
+# ---------------------------------------------------------------------------
+
+
+def _used_axes(spec_part) -> set:
+    used = set()
+    for ax in spec_part:
+        if ax is None:
+            continue
+        for a in (ax if isinstance(ax, tuple) else (ax,)):
+            used.add(a)
+    return used
+
+
+def _fallback_axis(preferred, used: set, dim: int, ctx: MeshContext):
+    """Keep the inherited axis if any; else pick a free divisible axis so
+    the (large) low-rank states never sit replicated (memory!)."""
+    if preferred is not None:
+        return preferred
+    for cand in ("data", "model"):
+        if cand in used:
+            continue
+        if dim % ctx.mesh.shape[cand] == 0:
+            return cand
+    return None
+
+
+def _matrix_state_spec(wspec: P, plan: plan_lib.ParamPlan,
+                       shape: tuple[int, ...], ctx: MeshContext
+                       ) -> MatrixOptState:
+    """Specs for MatrixOptState given the weight's spec and plan.
+
+    S (m, r) inherits the weight's m-dim axis; M/V (r, n) inherit the n-dim
+    axis.  When the weight left that dim unsharded (e.g. the MoE bank's
+    per-slice f_loc), the state still picks a free mesh axis — M/V are the
+    dominant optimizer memory (2nr fp32) and MUST be sharded to fit.
+    """
+    nlead = plan.batch_dims
+    lead = tuple(wspec[i] if i < len(wspec) else None for i in range(nlead))
+    row_ax = wspec[nlead] if len(wspec) > nlead else None
+    col_ax = wspec[nlead + 1] if len(wspec) > nlead + 1 else None
+    if plan.transpose:   # canonical m = original cols, n = original rows
+        m_ax, n_ax = col_ax, row_ax
+    else:
+        m_ax, n_ax = row_ax, col_ax
+    m_ax = _fallback_axis(m_ax, _used_axes(lead), plan.m, ctx)
+    n_ax = _fallback_axis(n_ax, _used_axes(lead), plan.n, ctx)
+    S = _divis_guard(lead + (m_ax, None), shape[:nlead] + (plan.m, plan.rank),
+                     ctx)
+    MV = _divis_guard(lead + (None, n_ax),
+                      shape[:nlead] + (plan.rank, plan.n), ctx)
+    return MatrixOptState(S=S, M=MV, V=MV, lam_prev=P(*lead))
+
+
+def opt_state_specs(params_shape: Any, ctx: MeshContext, optimizer) -> Any:
+    """Spec tree matching optimizer.init(params)'s OptState structure."""
+    pspecs = param_specs(params_shape, ctx)
+    cfg = optimizer.config
+    rank = getattr(cfg, "rank", 0)
+
+    def leaf(pshape, wspec):
+        shape = tuple(pshape.shape)
+        plan = plan_lib.plan_for_shape(shape, rank) if rank else \
+            plan_lib.ParamPlan("dense", False, 0, 0, 0, 0)
+        if plan.mode == "dense":
+            return DenseOptState(M=wspec, V=wspec)
+        return _matrix_state_spec(wspec, plan, shape, ctx)
+
+    inner = jax.tree.map(leaf, params_shape, pspecs)
+    return OptState(step=P(), n_updates=P(), inner=inner)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache specs
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(batch_shape: Any, ctx: MeshContext) -> Any:
+    """Training/prefill inputs: shard dim 0 (global batch) over DP axes."""
+    def leaf(x):
+        shape = tuple(x.shape)
+        if not shape:
+            return P()
+        spec = [None] * len(shape)
+        dp = ctx.dp
+        if shape[0] % dp == 0:
+            spec[0] = ctx.batch_axes
+        return P(*spec)
+    return jax.tree.map(leaf, batch_shape)
+
+
+def cache_specs(cache_shape: Any, ctx: MeshContext,
+                global_batch: int) -> Any:
+    """Decode caches: batch over DP axes when divisible; the (long)
+    sequence axis over ``model`` — and over data too when batch
+    isn't shardable (long_500k, batch=1) — so multi-GB caches spread.
+    """
+    dp = ctx.dp
+    batch_ok = global_batch % dp == 0
+
+    def leaf(x):
+        shape = tuple(x.shape)
+        if len(shape) <= 1:
+            return P()
+        spec: list = [None] * len(shape)
+        # find batch dim (first dim equal to global_batch after leading L)
+        seq_axes = ("model",) if batch_ok else ("data", "model")
+        batch_dim = None
+        for i, d in enumerate(shape):
+            if d == global_batch and batch_dim is None and i <= 1:
+                batch_dim = i
+                if batch_ok:
+                    spec[i] = ctx.batch_axes
+                break
+        # longest remaining dim = sequence: shard over seq_axes
+        rest = [(d, i) for i, d in enumerate(shape)
+                if i != batch_dim and d > 1]
+        if rest:
+            d, i = max(rest)
+            size = int(np.prod([ctx.mesh.shape[a] for a in seq_axes]))
+            if d % size == 0 and d >= 4 * size:
+                spec[i] = seq_axes if len(seq_axes) > 1 else seq_axes[0]
+        return P(*spec)
+
+    return jax.tree.map(leaf, cache_shape)
+
+
+def to_named(spec_tree: Any, ctx: MeshContext) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(ctx.mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,87 @@
+"""Jit'd dispatch layer over the Pallas kernels.
+
+``repro.core.lowrank_adam`` calls these three entry points when the
+optimizer is built with ``use_kernels=True``:
+
+    project(S, G)           -> (r, n)
+    backproject(S, X)       -> (m, n)
+    recovery(S, G, Gt, phi) -> (m, n)
+
+Dispatch policy: on TPU the Pallas kernels run compiled; on CPU they run
+in interpret mode only when REPRO_FORCE_KERNELS=1 (tests do this —
+interpret mode is a correctness tool, not a performance path), otherwise
+the pure-jnp reference executes.  Shapes that don't tile evenly fall back
+to the reference (the assigned archs' dims are all 128-aligned; the
+fallback keeps odd user models working).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import grassmann, ref
+
+Array = jax.Array
+
+
+def _mode() -> str:
+    """'compiled' | 'interpret' | 'ref'."""
+    if jax.default_backend() == "tpu":
+        return "compiled"
+    if os.environ.get("REPRO_FORCE_KERNELS") == "1":
+        return "interpret"
+    return "ref"
+
+
+def _tiles_ok(*dims_blocks: tuple[int, int]) -> bool:
+    return all(d % min(b, d) == 0 for d, b in dims_blocks)
+
+
+def project(S: Array, G: Array) -> Array:
+    mode = _mode()
+    m, r = S.shape
+    n = G.shape[1]
+    if mode == "ref" or not _tiles_ok((m, grassmann.BM), (n, grassmann.BN)):
+        return ref.project_ref(S, G)
+    return grassmann.project(S, G, interpret=(mode == "interpret"))
+
+
+def backproject(S: Array, X: Array) -> Array:
+    mode = _mode()
+    m, r = S.shape
+    n = X.shape[1]
+    if mode == "ref" or not _tiles_ok((m, grassmann.BM), (n, grassmann.BN)):
+        return ref.backproject_ref(S, X)
+    return grassmann.backproject(S, X, interpret=(mode == "interpret"))
+
+
+def recovery(S: Array, G: Array, Gt: Array, phi: Array) -> Array:
+    mode = _mode()
+    m, n = G.shape
+    if mode == "ref" or not _tiles_ok((m, grassmann.BM), (n, grassmann.BN)):
+        return ref.recovery_ref(G, S, Gt, phi)
+    return grassmann.recovery(G, S, Gt, phi, interpret=(mode == "interpret"))
+
+
+def tangent(G: Array, A: Array, S: Array) -> Array:
+    mode = _mode()
+    m, n = G.shape
+    if mode == "ref" or not _tiles_ok((m, grassmann.BM), (n, grassmann.BN)):
+        return ref.tangent_ref(G, A, S)
+    return grassmann.tangent(G, A, S, interpret=(mode == "interpret"))
+
+
+def adam_lowrank(Gt: Array, M: Array, V: Array, step: Array, *,
+                 beta1: float = 0.9, beta2: float = 0.999,
+                 eps: float = 1e-8, bias_correction: bool = True):
+    mode = _mode()
+    r, n = Gt.shape
+    if mode == "ref" or not _tiles_ok((r, 128), (n, 512)):
+        return ref.adam_lowrank_ref(Gt, M, V, step, beta1, beta2, eps,
+                                    bias_correction)
+    return grassmann.adam_lowrank(Gt, M, V, step, beta1=beta1, beta2=beta2,
+                                  eps=eps, bias_correction=bias_correction,
+                                  interpret=(mode == "interpret"))

@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics contract: tests sweep shapes/dtypes and
+``assert_allclose`` kernel outputs (interpret=True on CPU) against these.
+They are also the CPU fallback path the framework uses when kernels are
+disabled.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def project_ref(S: Array, G: Array) -> Array:
+    """A = S^T G.  S: (m, r) fp32; G: (m, n) any float.  -> (r, n) fp32."""
+    return S.astype(jnp.float32).T @ G.astype(jnp.float32)
+
+
+def backproject_ref(S: Array, X: Array) -> Array:
+    """S @ X.  S: (m, r); X: (r, n) -> (m, n) fp32."""
+    return S.astype(jnp.float32) @ X.astype(jnp.float32)
+
+
+def tangent_ref(G: Array, A: Array, S: Array) -> Array:
+    """Grassmann tangent T = -2 (G - S A) A^T = -2 G A^T + 2 S (A A^T).
+
+    G: (m, n); A: (r, n); S: (m, r).  -> (m, r) fp32.
+    (The fused form — the kernel's whole point is never materializing the
+    (m, n) residual; see DESIGN.md §6.)
+    """
+    G = G.astype(jnp.float32)
+    A = A.astype(jnp.float32)
+    S = S.astype(jnp.float32)
+    return -2.0 * (G @ A.T) + 2.0 * (S @ (A @ A.T))
+
+
+def recovery_ref(G: Array, S: Array, Gt: Array, phi: Array) -> Array:
+    """Recovery-scaled residual  Lam = (G - S Gt) * phi[None, :].
+
+    G: (m, n); S: (m, r); Gt: (r, n); phi: (n,).  -> (m, n) fp32.
+    """
+    G = G.astype(jnp.float32)
+    resid = G - S.astype(jnp.float32) @ Gt.astype(jnp.float32)
+    return resid * phi.astype(jnp.float32)[None, :]
+
+
+def adam_lowrank_ref(Gt: Array, M: Array, V: Array, step: Array,
+                     beta1: float, beta2: float, eps: float,
+                     bias_correction: bool = True
+                     ) -> tuple[Array, Array, Array]:
+    """Fused low-rank Adam moment update + direction.
+
+    Gt, M, V: (r, n) fp32; returns (M', V', Gto).
+    """
+    Gt = Gt.astype(jnp.float32)
+    M1 = beta1 * M + (1 - beta1) * Gt
+    V1 = beta2 * V + (1 - beta2) * Gt * Gt
+    if bias_correction:
+        t = step.astype(jnp.float32) + 1.0
+        mh = M1 / (1.0 - beta1 ** t)
+        vh = V1 / (1.0 - beta2 ** t)
+    else:
+        mh, vh = M1, V1
+    return M1, V1, mh / (jnp.sqrt(vh) + eps)

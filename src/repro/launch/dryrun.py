@@ -1,0 +1,272 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count="
+    + os.environ.get("REPRO_DRYRUN_DEVICES", "512")
+    + " " + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell against placeholder host devices, and extract the roofline raw
+material (cost_analysis FLOPs/bytes, memory_analysis, collective bytes from
+the post-SPMD HLO).
+
+The XLA_FLAGS line above MUST precede any jax import (jax locks the device
+count at first init) — which is why it is the first statement of this file
+and why nothing else in the package sets it globally.
+
+Usage:
+    python -m repro.launch.dryrun --arch mixtral-8x22b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+Each cell writes one JSON under --out; existing files are skipped (the full
+grid is resumable).
+"""
+
+import argparse
+import functools
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import ASSIGNED_ARCHS, get_config
+from repro.core.api import get_optimizer
+from repro.distributed import sharding as sh
+from repro.distributed.context import mesh_context
+from repro.distributed.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_context
+from repro.launch.steps import (TrainState, default_accum, default_rank,
+                                make_serve_steps, make_train_step)
+from repro.models.api import SHAPE_GRID, build_model, shape_applicable
+
+
+def _cost_dict(compiled):
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float))}
+
+
+def _memory_dict(compiled):
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover - backend-dependent
+        return {"error": str(e)}
+    out = {}
+    for k in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "temp_size_in_bytes",
+              "alias_size_in_bytes", "host_generated_code_size_in_bytes",
+              "host_argument_size_in_bytes", "host_output_size_in_bytes",
+              "host_temp_size_in_bytes", "peak_memory_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if not out:
+        out["repr"] = str(ma)[:2000]
+    return out
+
+
+def make_cell_program(arch: str, shape_name: str, ctx, *,
+                      optimizer_name: str = "subtrack",
+                      do_subspace_update: bool = False,
+                      remat: str = "full",
+                      rank: int | None = None,
+                      accum: int | None = None,
+                      accum_dtype: str = "float32",
+                      opt_overrides: dict | None = None,
+                      model_overrides: dict | None = None):
+    """Build (jitted_fn, abstract_args) for one grid cell. Must run inside
+    mesh_context(ctx)."""
+    cfg = get_config(arch)
+    if model_overrides:
+        cfg = cfg.with_(**model_overrides)
+    bundle = build_model(cfg)
+    shape = SHAPE_GRID[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return None, None, why
+
+    key = jax.random.PRNGKey(0)
+    params_shape = jax.eval_shape(bundle.init, key)
+    serving = SHAPE_GRID[shape_name].kind in ("prefill", "decode") \
+        and os.environ.get("REPRO_DRYRUN_NO_SERVING") != "1"
+    pspecs = sh.param_specs(params_shape, ctx, serving=serving)
+    p_shard = sh.to_named(pspecs, ctx)
+
+    if shape.kind == "train":
+        overrides = dict(opt_overrides or {})
+        overrides.setdefault("rank", rank or default_rank(cfg.d_model))
+        overrides.setdefault("update_interval", 200)
+        opt = get_optimizer(optimizer_name, **overrides)
+        accum = accum or default_accum(shape.global_batch, shape.seq_len,
+                                       ctx.dp)
+        train_step = make_train_step(bundle, opt, remat=remat, accum=accum,
+                                     grad_shardings=p_shard,
+                                     accum_dtype=jnp.dtype(accum_dtype))
+        opt_shape = jax.eval_shape(opt.init, params_shape)
+        state_shape = TrainState(params=params_shape, opt=opt_shape)
+        ospecs = sh.opt_state_specs(params_shape, ctx, opt)
+        state_shard = TrainState(params=p_shard,
+                                 opt=sh.to_named(ospecs, ctx))
+        batch_shape = bundle.input_specs(shape)
+        b_shard = sh.to_named(sh.batch_specs(batch_shape, ctx), ctx)
+        lr_sds = jax.ShapeDtypeStruct((), jnp.float32)
+        fn = jax.jit(
+            functools.partial(train_step,
+                              do_subspace_update=do_subspace_update),
+            in_shardings=(state_shard, b_shard,
+                          NamedSharding(ctx.mesh, P())),
+            donate_argnums=(0,))
+        return fn, (state_shape, batch_shape, lr_sds), None
+
+    if shape.kind == "prefill":
+        prefill_step, _ = make_serve_steps(bundle, shape.seq_len)
+        batch_shape = bundle.input_specs(shape)
+        b_shard = sh.to_named(sh.batch_specs(batch_shape, ctx), ctx)
+        # pin the emitted KV cache to the decode-cell layout (batch over
+        # DP, long axis over model) — left unconstrained, XLA may keep a
+        # replicated multi-GB cache (qwen1.5 prefill: 17.3 GB peak)
+        out_shape = jax.eval_shape(prefill_step, params_shape, batch_shape)
+        logits_spec = sh.batch_specs(out_shape[0], ctx)
+        cache_spec = sh.cache_specs(out_shape[1], ctx, shape.global_batch)
+        out_shard = (sh.to_named(logits_spec, ctx),
+                     sh.to_named(cache_spec, ctx))
+        fn = jax.jit(prefill_step, in_shardings=(p_shard, b_shard),
+                     out_shardings=out_shard)
+        return fn, (params_shape, batch_shape), None
+
+    # decode
+    _, decode_step = make_serve_steps(bundle, shape.seq_len)
+    specs = bundle.input_specs(shape)
+    cache_shape, token_shape = specs["cache"], specs["token"]
+    c_shard = sh.to_named(
+        sh.cache_specs(cache_shape, ctx, shape.global_batch), ctx)
+    t_shard = sh.to_named(sh.batch_specs(token_shape, ctx), ctx)
+    fn = jax.jit(decode_step, in_shardings=(p_shard, c_shard, t_shard),
+                 donate_argnums=(1,))
+    return fn, (params_shape, cache_shape, token_shape), None
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             out_dir: Path, optimizer_name: str = "subtrack",
+             do_subspace_update: bool = False, remat: str = "full",
+             force: bool = False, tag: str = "", accum: int | None = None,
+             accum_dtype: str = "float32",
+             opt_overrides: dict | None = None,
+             model_overrides: dict | None = None) -> dict:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    suffix = (f"_{tag}" if tag else "") + \
+        ("_upd" if do_subspace_update else "")
+    out_path = out_dir / f"{arch}__{shape_name}__{mesh_name}{suffix}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "optimizer": optimizer_name, "remat": remat,
+           "subspace_update_step": do_subspace_update, "tag": tag,
+           "status": "error"}
+    t0 = time.time()
+    try:
+        ctx = make_context(multi_pod=multi_pod)
+        with mesh_context(ctx):
+            fn, args, skip = make_cell_program(
+                arch, shape_name, ctx, optimizer_name=optimizer_name,
+                do_subspace_update=do_subspace_update, remat=remat,
+                accum=accum, accum_dtype=accum_dtype,
+                opt_overrides=opt_overrides,
+                model_overrides=model_overrides)
+            if skip:
+                rec.update(status="skipped", reason=skip)
+            else:
+                t_lower = time.time()
+                lowered = fn.lower(*args)
+                rec["lower_s"] = round(time.time() - t_lower, 2)
+                t_comp = time.time()
+                compiled = lowered.compile()
+                rec["compile_s"] = round(time.time() - t_comp, 2)
+                rec["cost_analysis"] = _cost_dict(compiled)
+                rec["memory_analysis"] = _memory_dict(compiled)
+                n_dev = int(np.prod(list(ctx.mesh.shape.values())))
+                rec["n_devices"] = n_dev
+                hlo = compiled.as_text()
+                rec["hlo_chars"] = len(hlo)
+                t_an = time.time()
+                hs = analyze_hlo(hlo, n_dev)
+                rec["analyze_s"] = round(time.time() - t_an, 2)
+                rec["hlo_analysis"] = {
+                    "flops_per_device": hs.flops,
+                    "traffic_bytes_per_device": hs.traffic_bytes,
+                    "collective_bytes_per_device": hs.collective_bytes,
+                    "collective_bytes_corrected": hs.collective_bytes_corrected,
+                    "collective_by_kind": hs.collective_by_kind,
+                    "collective_counts": hs.collective_counts,
+                    "top_dot_flops": hs.dot_flops_by_name,
+                    "top_collectives": hs.top_collectives,
+                    "unknown_trip_whiles": hs.unknown_trip_whiles,
+                }
+                rec["status"] = "ok"
+    except Exception as e:
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["total_s"] = round(time.time() - t0, 2)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(rec, indent=2, default=str))
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="one arch id (default: all)")
+    ap.add_argument("--shape", default=None,
+                    choices=list(SHAPE_GRID), help="one shape (default: all)")
+    ap.add_argument("--all", action="store_true", help="run the full grid")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--optimizer", default="subtrack")
+    ap.add_argument("--remat", default="full",
+                    choices=["full", "dots", "none", "collectives"])
+    ap.add_argument("--accum-dtype", default="float32",
+                    choices=["float32", "bfloat16"])
+    ap.add_argument("--subspace-update-step", action="store_true",
+                    help="lower the k-th (tracking) step variant")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    archs = [args.arch] if args.arch else list(ASSIGNED_ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPE_GRID)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    n_ok = n_skip = n_err = 0
+    for multi_pod in meshes:
+        for arch in archs:
+            for shape in shapes:
+                rec = run_cell(arch, shape, multi_pod=multi_pod,
+                               out_dir=out_dir,
+                               optimizer_name=args.optimizer,
+                               do_subspace_update=args.subspace_update_step,
+                               remat=args.remat, force=args.force,
+                               tag=args.tag, accum_dtype=args.accum_dtype)
+                status = rec["status"]
+                n_ok += status == "ok"
+                n_skip += status == "skipped"
+                n_err += status == "error"
+                msg = rec.get("error", rec.get("reason", ""))
+                print(f"[{status:7s}] {arch:28s} {shape:12s} "
+                      f"{'2x16x16' if multi_pod else '16x16':8s} "
+                      f"{rec.get('total_s', 0):8.1f}s  {msg[:80]}",
+                      flush=True)
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_err} errors", flush=True)
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state — required for the
+dry-run's placeholder-device trick and for keeping smoke tests on 1 device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.distributed.context import MeshContext
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips) mesh.
+
+    Axes: ``data`` carries batch + FSDP; ``model`` carries TP/EP; ``pod``
+    (multi-pod only) is pure DP across pods — ICI-dense collectives stay
+    within a pod, only the gradient all-reduce crosses DCN.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_context(*, multi_pod: bool = False) -> MeshContext:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    batch_axes = ("pod", "data") if multi_pod else ("data",)
+    return MeshContext(mesh=mesh, batch_axes=batch_axes, model_axis="model")
+
+
+def smoke_context() -> MeshContext:
+    """Single-device (1, 1) mesh for CPU smoke tests and benches."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    dev = np.array(jax.devices()[:1]).reshape(1, 1)
+    return MeshContext(mesh=Mesh(dev, ("data", "model")),
+                       batch_axes=("data",))

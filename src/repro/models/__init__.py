@@ -1,0 +1,15 @@
+"""Model zoo: the 10 assigned architectures as composable JAX modules.
+
+Families:
+    decoder     — unified decoder-only transformer (GQA/MLA, MoE, softcap,
+                  sliding-window/global alternation, QKV bias, M-RoPE):
+                  minicpm3-4b, stablelm-12b, gemma2-27b, qwen1.5-4b,
+                  mixtral-8x22b, llama4-maverick, qwen2-vl-2b
+    zamba       — Mamba2 backbone with a shared attention block (zamba2-7b)
+    xlstm       — mLSTM (chunkwise-parallel) + sLSTM (recurrent) (xlstm-125m)
+    encdec      — encoder-decoder with cross-attention (seamless-m4t-large-v2)
+
+All models expose the same bundle API (see models/api.py): ``init``,
+``loss`` (training), ``prefill`` and ``decode_step`` (serving), and
+``input_specs`` (ShapeDtypeStruct stand-ins for the dry-run).
+"""

@@ -1,0 +1,204 @@
+"""Model factory: one bundle API across all four families, plus the
+(architecture x input-shape) grid definitions and ShapeDtypeStruct
+``input_specs`` used by the multi-pod dry-run.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, ssm, transformer, xlstm, zamba
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    """One cell of the assigned shape grid."""
+
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPE_GRID: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """Spec-mandated skips: long_500k only for sub-quadratic attention."""
+    if shape.name == "long_500k" and not cfg.is_subquadratic:
+        return False, ("full-attention arch: long_500k requires "
+                       "sub-quadratic attention (skip per assignment)")
+    return True, ""
+
+
+@dataclass(frozen=True)
+class ModelBundle:
+    cfg: ModelConfig
+    init: Callable[..., Any]
+    loss: Callable[..., Any]                   # (params, batch) -> (loss, metrics)
+    prefill: Callable[..., Any]                # (params, batch, max_len) -> (logits, cache)
+    decode_step: Callable[..., Any]            # (params, cache, token) -> (logits, cache)
+    init_cache: Callable[..., Any]             # (params?, batch, max_len) -> cache
+    input_specs: Callable[..., Any]            # (shape) -> batch pytree of SDS
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _decoder_bundle(cfg: ModelConfig) -> ModelBundle:
+    def loss(params, batch, remat="full"):
+        return transformer.decoder_loss(params, batch, cfg, remat)
+
+    def prefill(params, batch, max_len):
+        extras = {k: v for k, v in batch.items() if k != "tokens"}
+        return transformer.decoder_prefill(params, batch["tokens"], cfg,
+                                           max_len, extras)
+
+    def decode_step(params, cache, token):
+        extras = {}
+        if cfg.mrope:
+            B = token.shape[0]
+            extras["mrope_positions"] = jnp.broadcast_to(
+                cache.length, (B, 3, 1)).astype(jnp.int32)
+        return transformer.decoder_decode_step(params, cache, token, cfg,
+                                               extras)
+
+    def init_cache(batch, max_len):
+        return transformer.init_decoder_cache(cfg, batch, max_len)
+
+    def input_specs(shape: ShapeSpec):
+        B, S = shape.global_batch, shape.seq_len
+        if shape.kind in ("train", "prefill"):
+            batch = {"tokens": _sds((B, S), jnp.int32)}
+            if cfg.vision_tokens:
+                batch["vision_embeds"] = _sds(
+                    (B, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+            if cfg.mrope:
+                batch["mrope_positions"] = _sds((B, 3, S), jnp.int32)
+            return batch
+        cache = jax.eval_shape(lambda: init_cache(B, S))
+        return {"cache": cache, "token": _sds((B,), jnp.int32)}
+
+    return ModelBundle(cfg=cfg,
+                       init=lambda key: transformer.init_decoder(key, cfg),
+                       loss=loss, prefill=prefill, decode_step=decode_step,
+                       init_cache=init_cache, input_specs=input_specs)
+
+
+def _zamba_bundle(cfg: ModelConfig) -> ModelBundle:
+    def input_specs(shape: ShapeSpec):
+        B, S = shape.global_batch, shape.seq_len
+        if shape.kind in ("train", "prefill"):
+            return {"tokens": _sds((B, S), jnp.int32)}
+        cache = jax.eval_shape(
+            lambda: zamba.init_zamba_cache(cfg, B, S))
+        return {"cache": cache, "token": _sds((B,), jnp.int32)}
+
+    return ModelBundle(
+        cfg=cfg,
+        init=lambda key: zamba.init_zamba(key, cfg),
+        loss=lambda params, batch, remat="full": zamba.zamba_loss(
+            params, batch, cfg, remat),
+        prefill=lambda params, batch, max_len: zamba.zamba_prefill(
+            params, batch["tokens"], cfg, max_len),
+        decode_step=lambda params, cache, token: zamba.zamba_decode_step(
+            params, cache, token, cfg),
+        init_cache=lambda batch, max_len: zamba.init_zamba_cache(
+            cfg, batch, max_len),
+        input_specs=input_specs)
+
+
+def _xlstm_bundle(cfg: ModelConfig) -> ModelBundle:
+    def input_specs(shape: ShapeSpec):
+        B, S = shape.global_batch, shape.seq_len
+        if shape.kind in ("train", "prefill"):
+            return {"tokens": _sds((B, S), jnp.int32)}
+        cache = jax.eval_shape(lambda: xlstm.init_xlstm_cache(cfg, B))
+        return {"cache": cache, "token": _sds((B,), jnp.int32)}
+
+    return ModelBundle(
+        cfg=cfg,
+        init=lambda key: xlstm.init_xlstm(key, cfg),
+        loss=lambda params, batch, remat="full": xlstm.xlstm_loss(
+            params, batch, cfg, remat),
+        prefill=lambda params, batch, max_len: xlstm.xlstm_prefill(
+            params, batch["tokens"], cfg, max_len),
+        decode_step=lambda params, cache, token: xlstm.xlstm_decode_step(
+            params, cache, token, cfg),
+        init_cache=lambda batch, max_len: xlstm.init_xlstm_cache(cfg, batch),
+        input_specs=input_specs)
+
+
+def _encdec_bundle(cfg: ModelConfig) -> ModelBundle:
+    def input_specs(shape: ShapeSpec):
+        B, S = shape.global_batch, shape.seq_len
+        if shape.kind == "train":
+            return {"frames": _sds((B, S, cfg.d_model), jnp.bfloat16),
+                    "tokens": _sds((B, S), jnp.int32)}
+        if shape.kind == "prefill":
+            # encode S frames; teacher-prefill a short decoder prefix
+            dec_len = min(S, cfg.enc_memory_len)
+            return {"frames": _sds((B, S, cfg.d_model), jnp.bfloat16),
+                    "tokens": _sds((B, dec_len), jnp.int32)}
+        cache = jax.eval_shape(
+            lambda: _encdec_cache_spec(cfg, B, S))
+        return {"cache": cache, "token": _sds((B,), jnp.int32)}
+
+    def prefill(params, batch, max_len):
+        return encdec.encdec_prefill(params, batch["frames"],
+                                     batch["tokens"], cfg, max_len)
+
+    return ModelBundle(
+        cfg=cfg,
+        init=lambda key: encdec.init_encdec(key, cfg),
+        loss=lambda params, batch, remat="full": encdec.encdec_loss(
+            params, batch, cfg, remat),
+        prefill=prefill,
+        decode_step=lambda params, cache, token: encdec.encdec_decode_step(
+            params, cache, token, cfg),
+        init_cache=lambda batch, max_len: _encdec_cache_spec(
+            cfg, batch, max_len),
+        input_specs=input_specs)
+
+
+def _encdec_cache_spec(cfg: ModelConfig, batch: int, max_len: int):
+    L, hd = cfg.n_dec_layers, cfg.hd
+    Tm = cfg.enc_memory_len
+    z = jnp.zeros
+    return encdec.EncDecCache(
+        self_k=z((L, batch, max_len, cfg.n_kv_heads, hd), jnp.bfloat16),
+        self_v=z((L, batch, max_len, cfg.n_kv_heads, hd), jnp.bfloat16),
+        self_pos=jnp.full((L, max_len), -1, jnp.int32),
+        cross_k=z((L, batch, Tm, cfg.n_kv_heads, hd), jnp.bfloat16),
+        cross_v=z((L, batch, Tm, cfg.n_kv_heads, hd), jnp.bfloat16),
+        length=jnp.zeros((), jnp.int32))
+
+
+_FAMILIES = {
+    "decoder": _decoder_bundle,
+    "zamba": _zamba_bundle,
+    "xlstm": _xlstm_bundle,
+    "encdec": _encdec_bundle,
+}
+
+
+def build_model(cfg: ModelConfig) -> ModelBundle:
+    try:
+        ctor = _FAMILIES[cfg.family]
+    except KeyError:
+        raise ValueError(f"unknown model family {cfg.family!r}; "
+                         f"options: {sorted(_FAMILIES)}") from None
+    return ctor(cfg)

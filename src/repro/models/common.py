@@ -1,0 +1,169 @@
+"""Shared building blocks for the model zoo: norms, rotary embeddings
+(standard + M-RoPE), initializers, softcaps, cross-entropy.
+
+Parameters are plain nested dicts of jnp arrays (no framework dependency);
+layer stacks are leading-axis-stacked for ``lax.scan``.  All matmuls take
+an explicit ``dtype`` (bf16 activations by default, fp32 where numerics
+demand it — norms, softmax statistics, loss).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, in_axis: int = -2, dtype=jnp.bfloat16) -> Array:
+    """Truncated-normal fan-in init (LLaMA-style 1/sqrt(fan_in))."""
+    fan_in = shape[in_axis]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -3.0, 3.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.bfloat16) -> Array:
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def stacked(key, n: int, init_fn, *args, **kw) -> Array:
+    """n independent inits stacked on axis 0 (for scan-over-layers)."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: init_fn(k, *args, **kw))(keys)
+
+
+def key_iter(key):
+    while True:
+        key, sub = jax.random.split(key)
+        yield sub
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def softcap(x: Array, cap: float) -> Array:
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if not cap:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+def swiglu(x_gate: Array, x_up: Array) -> Array:
+    return jax.nn.silu(x_gate) * x_up
+
+
+def gelu(x: Array) -> Array:
+    return jax.nn.gelu(x, approximate=True)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    """Inverse frequencies (head_dim/2,) fp32."""
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """Standard RoPE.  x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                                   # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * inv       # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                           # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: Array, positions: Array, theta: float,
+                sections: tuple[int, ...]) -> Array:
+    """Qwen2-VL multimodal RoPE: 3-D (t, h, w) position ids.
+
+    x: (..., S, H, hd); positions: (..., 3, S).  The hd/2 frequency slots are
+    partitioned into ``sections`` (t/h/w); each section rotates by its own
+    positional stream.  Text tokens carry identical t=h=w ids, reducing to
+    standard RoPE — tested.
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    assert sum(sections) == half, (sections, half)
+    inv = rope_freqs(hd, theta)                                   # (half,)
+    # split frequency slots by section and pair with its position stream
+    angle_parts = []
+    start = 0
+    for i, sec in enumerate(sections):
+        pos_i = positions[..., i, :]                              # (..., S)
+        ang = pos_i[..., None].astype(jnp.float32) * inv[start:start + sec]
+        angle_parts.append(ang)
+        start += sec
+    angles = jnp.concatenate(angle_parts, axis=-1)                # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits: Array, labels: Array, mask: Array | None = None,
+                  vocab_size: int | None = None) -> Array:
+    """Token-mean cross entropy, fp32 statistics, vocab-padding-safe.
+
+    logits: (..., Vp) possibly vocab-padded and vocab-sharded (the reduce
+    over the sharded axis lowers to an all-reduce under GSPMD); labels ids
+    are < vocab_size so padded columns never win; we additionally mask the
+    padded logits to -inf so the logsumexp is exact.
+    """
+    logits = logits.astype(jnp.float32)
+    vp = logits.shape[-1]
+    if vocab_size is not None and vocab_size < vp:
+        pad_mask = jnp.arange(vp) >= vocab_size
+        logits = jnp.where(pad_mask, -1e30, logits)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    label_logit = jnp.take_along_axis(
+        logits, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    nll = lse - label_logit
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def shift_labels(tokens: Array) -> tuple[Array, Array]:
+    """Next-token prediction targets: inputs tokens[:, :-1] predict tokens[:, 1:].
+
+    Returns (labels, mask) aligned with the *full* sequence (last position
+    masked), so callers keep a single (B, S) forward shape.
+    """
+    labels = jnp.concatenate(
+        [tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], axis=1)
+    mask = jnp.concatenate(
+        [jnp.ones_like(tokens[:, 1:]), jnp.zeros_like(tokens[:, :1])], axis=1)
+    return labels, mask

@@ -1,0 +1,252 @@
+"""Encoder-decoder transformer for seamless-m4t-large-v2.
+
+The speech frontend is a STUB per the assignment: the encoder consumes
+precomputed frame embeddings (B, S_enc, d) supplied by ``input_specs``.
+Encoder: bidirectional self-attention blocks.  Decoder: causal
+self-attention + cross-attention over the encoder memory.  Decode serving
+precomputes the cross-attention K/V once (standard enc-dec serving layout)
+and carries a self-attention KV cache.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import get_mesh_context, shard
+from repro.models import attention as attn_lib
+from repro.models.common import (
+    cross_entropy, dense_init, embed_init, key_iter, rms_norm, shift_labels,
+    stacked,
+)
+from repro.models.config import ModelConfig
+from repro.models.transformer import _logits, _rope_q_k
+
+Array = jax.Array
+
+
+def _init_attn(ks, cfg: ModelConfig, dtype, cross=False):
+    d, hd = cfg.d_model, cfg.hd
+    return {
+        "wq": dense_init(next(ks), (d, cfg.n_heads * hd), dtype=dtype),
+        "wk": dense_init(next(ks), (d, cfg.n_kv_heads * hd), dtype=dtype),
+        "wv": dense_init(next(ks), (d, cfg.n_kv_heads * hd), dtype=dtype),
+        "wo": dense_init(next(ks), (cfg.n_heads * hd, d), dtype=dtype),
+    }
+
+
+def _init_ffn(ks, cfg: ModelConfig, dtype):
+    return {
+        "w_gate": dense_init(next(ks), (cfg.d_model, cfg.d_ff), dtype=dtype),
+        "w_up": dense_init(next(ks), (cfg.d_model, cfg.d_ff), dtype=dtype),
+        "w_down": dense_init(next(ks), (cfg.d_ff, cfg.d_model), dtype=dtype),
+    }
+
+
+def _init_enc_layer(key, cfg: ModelConfig, dtype):
+    ks = key_iter(key)
+    return {"ln1": jnp.zeros((cfg.d_model,), dtype),
+            "attn": _init_attn(ks, cfg, dtype),
+            "ln2": jnp.zeros((cfg.d_model,), dtype),
+            "mlp": _init_ffn(ks, cfg, dtype)}
+
+
+def _init_dec_layer(key, cfg: ModelConfig, dtype):
+    ks = key_iter(key)
+    return {"ln1": jnp.zeros((cfg.d_model,), dtype),
+            "attn": _init_attn(ks, cfg, dtype),
+            "lnx": jnp.zeros((cfg.d_model,), dtype),
+            "xattn": _init_attn(ks, cfg, dtype, cross=True),
+            "ln2": jnp.zeros((cfg.d_model,), dtype),
+            "mlp": _init_ffn(ks, cfg, dtype)}
+
+
+def init_encdec(key, cfg: ModelConfig, ctx=None) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    ks = key_iter(key)
+    return {
+        "embed": embed_init(next(ks), (cfg.padded_vocab, cfg.d_model), dtype),
+        "enc_layers": stacked(next(ks), cfg.n_enc_layers, _init_enc_layer,
+                              cfg, dtype),
+        "enc_norm": jnp.zeros((cfg.d_model,), dtype),
+        "dec_layers": stacked(next(ks), cfg.n_dec_layers, _init_dec_layer,
+                              cfg, dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        "lm_head": dense_init(next(ks), (cfg.d_model, cfg.padded_vocab),
+                              dtype=dtype),
+    }
+
+
+def _self_attn(h, p, cfg, positions, causal, ctx):
+    B, S, _ = h.shape
+    hd = cfg.hd
+    q = (h @ p["wq"]).reshape(B, S, cfg.n_heads, hd)
+    k = (h @ p["wk"]).reshape(B, S, cfg.n_kv_heads, hd)
+    v = (h @ p["wv"]).reshape(B, S, cfg.n_kv_heads, hd)
+    q, k = _rope_q_k(cfg, q, k, positions, {})
+    out = attn_lib.blocked_attention(q, k, v, causal=causal,
+                                     q_block=cfg.q_block,
+                                     kv_block=cfg.kv_block)
+    return out.reshape(B, S, -1) @ p["wo"], (k, v)
+
+
+def _cross_attn(h, memory_kv, p, cfg):
+    """h: (B,S,d); memory_kv: precomputed (k, v) each (B,Tm,Hkv,hd)."""
+    B, S, _ = h.shape
+    hd = cfg.hd
+    q = (h @ p["wq"]).reshape(B, S, cfg.n_heads, hd)
+    k, v = memory_kv
+    out = attn_lib.blocked_attention(q, k, v, causal=False,
+                                     q_block=cfg.q_block,
+                                     kv_block=cfg.kv_block)
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+def _ffn(h, p):
+    return (jax.nn.silu(h @ p["w_gate"]) * (h @ p["w_up"])) @ p["w_down"]
+
+
+def encode(params, frames: Array, cfg: ModelConfig,
+           remat: str = "full") -> Array:
+    """frames: (B, S_enc, d) precomputed frontend embeddings -> memory."""
+    ctx = get_mesh_context()
+    B, S, _ = frames.shape
+    positions = jnp.arange(S)[None, :]
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    x = shard(x, ctx.batch_axes, None, None)
+
+    def block(x, p):
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        a, _ = _self_attn(h, p["attn"], cfg, positions, causal=False, ctx=ctx)
+        x = x + a
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        return x + _ffn(h, p["mlp"]), None
+
+    if remat in ("full", "dots"):
+        block = jax.checkpoint(block, prevent_cse=False)
+    x, _ = jax.lax.scan(block, x, params["enc_layers"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def decode_train(params, memory: Array, tokens: Array, cfg: ModelConfig,
+                 remat: str = "full") -> Array:
+    """Teacher-forced decoder forward -> logits (B, S_dec, Vp)."""
+    ctx = get_mesh_context()
+    B, S = tokens.shape
+    positions = jnp.arange(S)[None, :]
+    x = params["embed"][tokens]
+
+    def block(x, p):
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        a, _ = _self_attn(h, p["attn"], cfg, positions, causal=True, ctx=ctx)
+        x = x + a
+        h = rms_norm(x, p["lnx"], cfg.norm_eps)
+        hd = cfg.hd
+        Tm = memory.shape[1]
+        mk = (memory @ p["xattn"]["wk"]).reshape(B, Tm, cfg.n_kv_heads, hd)
+        mv = (memory @ p["xattn"]["wv"]).reshape(B, Tm, cfg.n_kv_heads, hd)
+        x = x + _cross_attn(h, (mk, mv), p["xattn"], cfg)
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        return x + _ffn(h, p["mlp"]), None
+
+    if remat in ("full", "dots"):
+        block = jax.checkpoint(block, prevent_cse=False)
+    x, _ = jax.lax.scan(block, x, params["dec_layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _logits(params, x, cfg)
+
+
+def encdec_loss(params, batch, cfg: ModelConfig, remat: str = "full"):
+    memory = encode(params, batch["frames"], cfg, remat)
+    logits = decode_train(params, memory, batch["tokens"], cfg, remat)
+    labels, mask = shift_labels(batch["tokens"])
+    loss = cross_entropy(logits, labels, mask, cfg.vocab_size)
+    return loss, {"ce_loss": loss, "aux_loss": jnp.zeros((), jnp.float32)}
+
+
+class EncDecCache(NamedTuple):
+    self_k: Array     # (L, B, T, Hkv, hd)
+    self_v: Array
+    self_pos: Array   # (L, T)
+    cross_k: Array    # (L, B, Tm, Hkv, hd) — precomputed from memory
+    cross_v: Array
+    length: Array
+
+
+def encdec_prefill(params, frames: Array, tokens: Array, cfg: ModelConfig,
+                   max_len: int) -> tuple[Array, EncDecCache]:
+    """Encode frames, precompute cross K/V, prefill decoder with tokens."""
+    ctx = get_mesh_context()
+    memory = encode(params, frames, cfg, remat="none")
+    B, S = tokens.shape
+    Tm = memory.shape[1]
+    positions = jnp.arange(S)[None, :]
+    x = params["embed"][tokens]
+    hd = cfg.hd
+
+    def block(x, p):
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        a, (k, v) = _self_attn(h, p["attn"], cfg, positions, causal=True,
+                               ctx=ctx)
+        x = x + a
+        h = rms_norm(x, p["lnx"], cfg.norm_eps)
+        mk = (memory @ p["xattn"]["wk"]).reshape(B, Tm, cfg.n_kv_heads, hd)
+        mv = (memory @ p["xattn"]["wv"]).reshape(B, Tm, cfg.n_kv_heads, hd)
+        x = x + _cross_attn(h, (mk, mv), p["xattn"], cfg)
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + _ffn(h, p["mlp"])
+        return x, (attn_lib.pad_to(k, max_len), attn_lib.pad_to(v, max_len),
+                   mk, mv)
+
+    x, (ks, vs, mks, mvs) = jax.lax.scan(block, x, params["dec_layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, x[:, -1:, :], cfg)[:, 0]
+    pos_tags = jnp.where(jnp.arange(max_len)[None, :] < S,
+                         jnp.arange(max_len)[None, :], -1)
+    cache = EncDecCache(
+        self_k=ks, self_v=vs,
+        self_pos=jnp.broadcast_to(pos_tags, (cfg.n_dec_layers, max_len)),
+        cross_k=mks, cross_v=mvs,
+        length=jnp.asarray(S, jnp.int32))
+    return logits, cache
+
+
+def encdec_decode_step(params, cache: EncDecCache, token: Array,
+                       cfg: ModelConfig) -> tuple[Array, EncDecCache]:
+    ctx = get_mesh_context()
+    B = token.shape[0]
+    pos = cache.length
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    x = params["embed"][token][:, None, :]
+    hd = cfg.hd
+
+    def block(x, inp):
+        p, k_c, v_c, pos_c, mk, mv = inp
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        q = (h @ p["attn"]["wq"]).reshape(B, 1, cfg.n_heads, hd)
+        k = (h @ p["attn"]["wk"]).reshape(B, 1, cfg.n_kv_heads, hd)
+        v = (h @ p["attn"]["wv"]).reshape(B, 1, cfg.n_kv_heads, hd)
+        q, k = _rope_q_k(cfg, q, k, positions, {})
+        k_c, v_c, pos_c = attn_lib.cache_write(k_c, v_c, pos_c, k, v, pos,
+                                               ring=False)
+        a = attn_lib.decode_attention(q[:, 0], k_c, v_c, pos,
+                                      cache_positions=pos_c)
+        x = x + a.reshape(B, 1, -1) @ p["attn"]["wo"]
+        h = rms_norm(x, p["lnx"], cfg.norm_eps)
+        qx = (h @ p["xattn"]["wq"]).reshape(B, cfg.n_heads, hd)
+        ax = attn_lib.decode_attention(
+            qx, mk, mv, jnp.asarray(mk.shape[1], jnp.int32))
+        x = x + ax.reshape(B, 1, -1) @ p["xattn"]["wo"]
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + _ffn(h, p["mlp"])
+        return x, (k_c, v_c, pos_c)
+
+    x, (k_new, v_new, pos_new) = jax.lax.scan(
+        block, x, (params["dec_layers"], cache.self_k, cache.self_v,
+                   cache.self_pos, cache.cross_k, cache.cross_v))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, x, cfg)[:, 0]
+    return logits, cache._replace(self_k=k_new, self_v=v_new,
+                                  self_pos=pos_new, length=pos + 1)

@@ -1,0 +1,236 @@
+"""Mamba2 (State Space Duality) blocks — the backbone of zamba2-7b.
+
+Implements the chunkwise-parallel SSD algorithm (Dao & Gu, 2024): within a
+chunk the recurrence is evaluated as a masked attention-like contraction;
+across chunks a (short) scan carries the (H, P, N) state.  This is the
+TPU-appropriate schedule — MXU-friendly matmuls inside chunks, a
+sequence-length/chunk-length scan outside — as opposed to the CUDA
+selective-scan kernel of the GPU reference (DESIGN.md §4).
+
+Decode is the exact recurrent form with a per-layer (state, conv-window)
+cache: O(1) per token — the reason zamba2 runs the long_500k shape.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, key_iter, rms_norm
+from repro.models.config import ModelConfig, SSMConfig
+
+Array = jax.Array
+
+
+def ssm_dims(cfg: ModelConfig) -> tuple[int, int, int]:
+    """(d_inner, n_heads, conv_dim) for the Mamba2 block."""
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.d_state
+    return d_inner, n_heads, conv_dim
+
+
+def init_mamba_params(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di, H, conv_dim = ssm_dims(cfg)
+    ks = key_iter(key)
+    # in_proj emits [z (di), x (di), B (N), C (N), dt (H)]
+    return {
+        "ln": jnp.zeros((d,), dtype),
+        "in_proj": dense_init(next(ks), (d, 2 * di + 2 * s.d_state + H),
+                              dtype=dtype),
+        "conv_w": dense_init(next(ks), (s.conv_kernel, conv_dim), in_axis=0,
+                             dtype=dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(next(ks), (H,), jnp.float32,
+                                       math.log(1e-3), math.log(1e-1))))),
+        "norm": jnp.zeros((di,), dtype),
+        "out_proj": dense_init(next(ks), (di, d), dtype=dtype),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv along the sequence.  x: (B,S,C); w: (K,C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    # sum of K shifted slices — lowers to cheap adds, no im2col blowup
+    S = x.shape[1]
+    out = sum(xp[:, i:i + S, :] * w[i][None, None, :] for i in range(K))
+    return out + b[None, None, :]
+
+
+def _segsum_mask(a_cum: Array) -> Array:
+    """L[i, j] = exp(a_cum_i - a_cum_j) for i >= j else 0.
+
+    a_cum: (..., Q) inclusive cumulative log-decay.  Safe: entries are
+    exp of non-positive numbers.
+    """
+    diff = a_cum[..., :, None] - a_cum[..., None, :]       # (..., Q, Q)
+    Q = a_cum.shape[-1]
+    tril = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(tril, jnp.exp(diff), 0.0)
+
+
+def ssd_chunked(x: Array, dt: Array, A: Array, Bm: Array, Cm: Array,
+                chunk: int, h0: Array | None = None
+                ) -> tuple[Array, Array]:
+    """Chunkwise SSD.  Shapes:
+        x:  (B, S, H, P)   inputs per head
+        dt: (B, S, H)      positive step sizes
+        A:  (H,)           negative per-head decay rates
+        Bm: (B, S, N)      input projections (single group, broadcast to heads)
+        Cm: (B, S, N)      output projections
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    B_, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    if S % Q:
+        # pad to a chunk multiple: dt=0 padding is exact (decay exp(0)=1
+        # keeps the state, zero dt*x adds nothing); padded outputs sliced off
+        pad = Q - S % Q
+        y, h = ssd_chunked(
+            jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            jnp.pad(dt, ((0, 0), (0, pad), (0, 0))), A,
+            jnp.pad(Bm, ((0, 0), (0, pad), (0, 0))),
+            jnp.pad(Cm, ((0, 0), (0, pad), (0, 0))), chunk, h0)
+        return y[:, :S], h
+    nc = S // Q
+
+    a = (dt * A[None, None, :]).astype(jnp.float32)        # (B,S,H) log-decay <= 0
+    xdt = (x * dt[..., None]).astype(jnp.float32)          # dt-weighted input
+
+    # chunked views
+    ac = a.reshape(B_, nc, Q, H)
+    xc = xdt.reshape(B_, nc, Q, H, P)
+    Bc = Bm.reshape(B_, nc, Q, N).astype(jnp.float32)
+    Cc = Cm.reshape(B_, nc, Q, N).astype(jnp.float32)
+
+    a_cum = jnp.cumsum(ac, axis=2)                         # (B,nc,Q,H)
+    a_total = a_cum[:, :, -1]                              # (B,nc,H)
+
+    # ---- intra-chunk (attention-like, masked by decay kernel) ----
+    L = _segsum_mask(a_cum.transpose(0, 1, 3, 2))          # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bcqn,bcsn->bcqs", Cc, Bc)         # (B,nc,Q,Q)
+    y_intra = jnp.einsum("bchqs,bcshp->bcqhp",
+                         L * scores[:, :, None], xc)       # (B,nc,Q,H,P)
+
+    # ---- chunk summaries: state contribution of each chunk ----
+    decay_to_end = jnp.exp(a_total[:, :, None] - a_cum)    # (B,nc,Q,H)
+    states = jnp.einsum("bcsh,bcsn,bcshp->bchpn",
+                        decay_to_end, Bc, xc)              # (B,nc,H,P,N)
+
+    # ---- inter-chunk scan ----
+    def step(h, inp):
+        st, dec = inp                                      # (B,H,P,N), (B,H)
+        h_new = h * dec[:, :, None, None] + st
+        return h_new, h                                    # emit state BEFORE chunk
+
+    h_init = (jnp.zeros((B_, H, P, N), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+    chunk_decay = jnp.exp(a_total)                         # (B,nc,H)
+    h_last, h_prevs = jax.lax.scan(
+        step, h_init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)             # (B,nc,H,P,N)
+
+    # ---- inter-chunk output: decayed read of the carried state ----
+    decay_in = jnp.exp(a_cum)                              # (B,nc,Q,H)
+    y_inter = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", Cc, h_prevs, decay_in)
+
+    y = (y_intra + y_inter).reshape(B_, S, H, P)
+    return y, h_last
+
+
+def ssd_decode_step(x, dt, A, Bm, Cm, h):
+    """Exact recurrence for one token.
+        x: (B,H,P)  dt: (B,H)  Bm,Cm: (B,N)  h: (B,H,P,N)
+    Returns (y (B,H,P), h_new).
+    """
+    a = jnp.exp(dt * A[None, :]).astype(jnp.float32)       # (B,H)
+    upd = jnp.einsum("bhp,bn->bhpn", (x * dt[..., None]).astype(jnp.float32),
+                     Bm.astype(jnp.float32))
+    h_new = h * a[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", h_new, Cm.astype(jnp.float32))
+    return y, h_new
+
+
+class MambaState(NamedTuple):
+    """Per-layer decode cache: SSD state + causal-conv window."""
+
+    h: Array          # (B, H, P, N) fp32
+    conv: Array       # (B, K-1, conv_dim)
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int) -> MambaState:
+    s = cfg.ssm
+    di, H, conv_dim = ssm_dims(cfg)
+    return MambaState(
+        h=jnp.zeros((batch, H, s.head_dim, s.d_state), jnp.float32),
+        conv=jnp.zeros((batch, s.conv_kernel - 1, conv_dim), jnp.bfloat16),
+    )
+
+
+def _split_proj(proj: Array, cfg: ModelConfig):
+    s = cfg.ssm
+    di, H, _ = ssm_dims(cfg)
+    z, xin, Bm, Cm, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + s.d_state, 2 * di + 2 * s.d_state], axis=-1)
+    return z, xin, Bm, Cm, dt
+
+
+def mamba_block(x: Array, p: dict, cfg: ModelConfig) -> Array:
+    """Training/prefill Mamba2 block.  x: (B,S,d) -> (B,S,d)."""
+    s = cfg.ssm
+    di, H, conv_dim = ssm_dims(cfg)
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    proj = h @ p["in_proj"]
+    z, xin, Bm, Cm, dt = _split_proj(proj, cfg)
+
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)      # (B,S,conv_dim)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"], p["conv_b"]))
+    xin, Bm, Cm = jnp.split(conv_out, [di, di + s.d_state], axis=-1)
+
+    dt_pos = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xin.reshape(*xin.shape[:-1], H, s.head_dim)
+    y, _ = ssd_chunked(xh, dt_pos, A, Bm, Cm, s.chunk)
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(*x.shape[:-1], di)
+    y = rms_norm(y.astype(x.dtype) * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"]
+
+
+def mamba_decode_block(x: Array, p: dict, st: MambaState, cfg: ModelConfig
+                       ) -> tuple[Array, MambaState]:
+    """One-token Mamba2 block.  x: (B,1,d)."""
+    s = cfg.ssm
+    di, H, conv_dim = ssm_dims(cfg)
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    proj = (h @ p["in_proj"])[:, 0]                        # (B, ...)
+    z, xin, Bm, Cm, dt = _split_proj(proj, cfg)
+
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)      # (B, conv_dim)
+    window = jnp.concatenate(
+        [st.conv, conv_in[:, None, :].astype(st.conv.dtype)], axis=1)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32)) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out)
+    xin, Bm, Cm = jnp.split(conv_out, [di, di + s.d_state], axis=-1)
+
+    dt_pos = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xin.reshape(-1, H, s.head_dim)
+    y, h_new = ssd_decode_step(xh, dt_pos, A, Bm, Cm, st.h)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(-1, 1, di).astype(x.dtype) * jax.nn.silu(z)[:, None, :]
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"], MambaState(h=h_new, conv=window[:, 1:])

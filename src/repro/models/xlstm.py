@@ -1,0 +1,468 @@
+"""xLSTM (Beck et al., 2024): mLSTM (matrix-memory, chunkwise-parallel)
+and sLSTM (scalar-memory, inherently sequential) blocks.
+
+The mLSTM cell is implemented with the stabilized chunkwise schedule
+(log-space gates, per-row running-max stabilizers, (C, n, m) state carried
+across chunks) — MXU-matmul-heavy inside chunks, a seq/chunk-length scan
+outside, mirroring the SSD layout in ssm.py.  The sLSTM recurrence is a
+``lax.scan`` over time with block-diagonal per-head recurrent weights; its
+sequential nature is intrinsic to the architecture (that's the sLSTM
+trade-off the paper embraces), noted in DESIGN.md.
+
+Layer pattern: every ``slstm_every``-th block is an sLSTM, the rest are
+mLSTMs, scanned as uniform groups of (slstm_every-1 mLSTM + 1 sLSTM).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import get_mesh_context, shard
+from repro.models.common import (
+    cross_entropy, dense_init, embed_init, key_iter, rms_norm, shift_labels,
+    stacked,
+)
+from repro.models.config import ModelConfig
+from repro.models.transformer import _logits
+
+Array = jax.Array
+
+
+def _mlstm_dims(cfg: ModelConfig) -> tuple[int, int]:
+    di = int(cfg.xlstm.mlstm_proj_factor * cfg.d_model)
+    return di, di // cfg.n_heads          # (inner dim, per-head dim)
+
+
+def _slstm_ff(cfg: ModelConfig) -> int:
+    return int(cfg.xlstm.slstm_proj_factor * cfg.d_model)
+
+
+def init_mlstm_params(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    di, hd = _mlstm_dims(cfg)
+    H = cfg.n_heads
+    K = cfg.xlstm.conv_kernel
+    ks = key_iter(key)
+    return {
+        "ln": jnp.zeros((d,), dtype),
+        "w_up": dense_init(next(ks), (d, 2 * di), dtype=dtype),
+        "conv_w": dense_init(next(ks), (K, di), in_axis=0, dtype=dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "wq": dense_init(next(ks), (di, di), dtype=dtype),
+        "wk": dense_init(next(ks), (di, di), dtype=dtype),
+        "wv": dense_init(next(ks), (di, di), dtype=dtype),
+        "w_i": dense_init(next(ks), (di, H), dtype=jnp.float32),
+        "b_i": jnp.zeros((H,), jnp.float32),
+        "w_f": dense_init(next(ks), (di, H), dtype=jnp.float32),
+        "b_f": jnp.full((H,), 3.0, jnp.float32),   # open forget gates at init
+        "norm": jnp.zeros((di,), dtype),
+        "w_down": dense_init(next(ks), (di, d), dtype=dtype),
+    }
+
+
+def init_slstm_params(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    H = cfg.n_heads
+    hd = d // H
+    ff = _slstm_ff(cfg)
+    ks = key_iter(key)
+    return {
+        "ln": jnp.zeros((d,), dtype),
+        "W": dense_init(next(ks), (d, 4 * d), dtype=dtype),
+        "b": jnp.concatenate([jnp.zeros((d,)), jnp.full((d,), 3.0),
+                              jnp.zeros((2 * d,))]).astype(jnp.float32),
+        "R": dense_init(next(ks), (H, hd, 4 * hd), in_axis=1, dtype=dtype),
+        "norm": jnp.zeros((d,), dtype),
+        "ln2": jnp.zeros((d,), dtype),
+        "w_gate": dense_init(next(ks), (d, ff), dtype=dtype),
+        "w_up": dense_init(next(ks), (d, ff), dtype=dtype),
+        "w_down": dense_init(next(ks), (ff, d), dtype=dtype),
+    }
+
+
+def init_xlstm(key, cfg: ModelConfig, ctx=None) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    every = cfg.xlstm.slstm_every
+    if cfg.n_layers % every:
+        raise ValueError("xlstm n_layers must be divisible by slstm_every")
+    G = cfg.n_layers // every
+    ks = key_iter(key)
+    return {
+        "embed": embed_init(next(ks), (cfg.padded_vocab, cfg.d_model), dtype),
+        "mlstm_layers": stacked(next(ks), G * (every - 1),
+                                init_mlstm_params, cfg, dtype),
+        "slstm_layers": stacked(next(ks), G, init_slstm_params, cfg, dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        "lm_head": dense_init(next(ks), (cfg.d_model, cfg.padded_vocab),
+                              dtype=dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell — stabilized chunkwise
+# ---------------------------------------------------------------------------
+
+
+class MLSTMState(NamedTuple):
+    C: Array    # (B, H, dk, dv) matrix memory
+    n: Array    # (B, H, dk) normalizer
+    m: Array    # (B, H) log-space stabilizer
+
+
+def init_mlstm_state(batch: int, H: int, hd: int) -> MLSTMState:
+    return MLSTMState(C=jnp.zeros((batch, H, hd, hd), jnp.float32),
+                      n=jnp.zeros((batch, H, hd), jnp.float32),
+                      m=jnp.full((batch, H), -1e30, jnp.float32))
+
+
+def mlstm_chunked(q, k, v, log_i, log_f, chunk: int,
+                  state: MLSTMState | None = None
+                  ) -> tuple[Array, MLSTMState]:
+    """q,k,v: (B,S,H,hd); log_i/log_f: (B,S,H).  Returns (h, final state)."""
+    B, S, H, hd = q.shape
+    Q = min(chunk, S)
+    if S % Q:
+        # pad to a chunk multiple: log_f=0 (f=1) preserves the state,
+        # log_i=-1e30 (i=0) adds nothing; padded outputs sliced off
+        pad = Q - S % Q
+        pad3 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        pad2 = ((0, 0), (0, pad), (0, 0))
+        y, st = mlstm_chunked(
+            jnp.pad(q, pad3), jnp.pad(k, pad3), jnp.pad(v, pad3),
+            jnp.pad(log_i, pad2, constant_values=-1e30),
+            jnp.pad(log_f, pad2), chunk, state)
+        return y[:, :S], st
+    nc = S // Q
+    scale = 1.0 / math.sqrt(hd)
+
+    q = q.astype(jnp.float32) * scale
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+
+    qc, kc, vc = (x.reshape(B, nc, Q, H, hd).transpose(1, 0, 2, 3, 4)
+                  for x in (q, k, v))
+    lic = log_i.reshape(B, nc, Q, H).transpose(1, 0, 2, 3)
+    lfc = log_f.reshape(B, nc, Q, H).transpose(1, 0, 2, 3)
+
+    if state is None:
+        state = init_mlstm_state(B, H, hd)
+
+    def chunk_step(carry, inp):
+        C, n, m = carry                                # (B,H,dk,dv) (B,H,dk) (B,H)
+        qb, kb, vb, li, lf = inp                       # (B,Q,H,hd) ... (B,Q,H)
+        b = jnp.cumsum(lf, axis=1)                     # inclusive cumlogf (B,Q,H)
+        g = li - b                                     # (B,Q,H)
+        G_run = jax.lax.cummax(g, axis=1)              # rowwise max_{j<=i} g_j
+        m_row = b + jnp.maximum(m[:, None, :], G_run)  # (B,Q,H) row stabilizers
+
+        # intra-chunk weights: w_ij = exp(g_j + b_i - m_i) for j <= i
+        wmat = jnp.exp(g[:, None, :, :] + b[:, :, None, :]
+                       - m_row[:, :, None, :])         # (B,Q_i,Q_j,H)
+        tri = jnp.tril(jnp.ones((Q, Q), bool))[None, :, :, None]
+        wmat = jnp.where(tri, wmat, 0.0)
+        scores = jnp.einsum("biht,bjht->bijh", qb, kb)  # (B,Q,Q,H)
+        num_intra = jnp.einsum("bijh,bjhd->bihd", scores * wmat, vb)
+        n_intra = jnp.einsum("bijh,bjht->biht", wmat, kb)  # normalizer rows
+
+        # inter-chunk (carried state), decayed by exp(m + b_i - m_row)
+        dec = jnp.exp(m[:, None, :] + b - m_row)       # (B,Q,H)
+        num_inter = jnp.einsum("biht,bhtd->bihd", qb, C) * dec[..., None]
+        n_row = n[:, None, :, :] * dec[..., None] + n_intra
+        num = num_intra + num_inter
+        den = jnp.maximum(jnp.abs(jnp.einsum("biht,biht->bih", qb, n_row)),
+                          jnp.exp(-m_row))
+        h = num / den[..., None]                       # (B,Q,H,hd)
+
+        # ---- state update across the chunk ----
+        b_tot = b[:, -1]                               # (B,H)
+        m_new = b_tot + jnp.maximum(m, jnp.max(g, axis=1))
+        carry_dec = jnp.exp(m + b_tot - m_new)         # (B,H)
+        w_state = jnp.exp(g + b_tot[:, None, :] - m_new[:, None, :])  # (B,Q,H)
+        C_new = C * carry_dec[..., None, None] + jnp.einsum(
+            "bqht,bqhd,bqh->bhtd", kb, vb, w_state)
+        n_new = n * carry_dec[..., None] + jnp.einsum(
+            "bqht,bqh->bht", kb, w_state)
+        return (C_new, n_new, m_new), h
+
+    (C, n, m), hs = jax.lax.scan(chunk_step, tuple(state),
+                                 (qc, kc, vc, lic, lfc))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+    return h, MLSTMState(C=C, n=n, m=m)
+
+
+def mlstm_decode(q, k, v, log_i, log_f, state: MLSTMState
+                 ) -> tuple[Array, MLSTMState]:
+    """One step.  q,k,v: (B,H,hd); log_i/log_f: (B,H)."""
+    hd = q.shape[-1]
+    q = q.astype(jnp.float32) / math.sqrt(hd)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    m_new = jnp.maximum(log_f + state.m, log_i)
+    f_p = jnp.exp(log_f + state.m - m_new)
+    i_p = jnp.exp(log_i - m_new)
+    C = state.C * f_p[..., None, None] + \
+        i_p[..., None, None] * k[..., :, None] * v[..., None, :]
+    n = state.n * f_p[..., None] + i_p[..., None] * k
+    num = jnp.einsum("bht,bhtd->bhd", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bht,bht->bh", q, n)),
+                      jnp.exp(-m_new))
+    return num / den[..., None], MLSTMState(C=C, n=n, m=m_new)
+
+
+def _causal_conv(x, w, b):
+    K = w.shape[0]
+    S = x.shape[1]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    return sum(xp[:, i:i + S, :] * w[i][None, None, :]
+               for i in range(K)) + b[None, None, :]
+
+
+def mlstm_block(x, p, cfg: ModelConfig, state=None, decode=False):
+    """Full mLSTM residual block.  Train: x (B,S,d); decode: x (B,1,d)."""
+    di, hd = _mlstm_dims(cfg)
+    H = cfg.n_heads
+    B = x.shape[0]
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    up = h @ p["w_up"]
+    xm, z = jnp.split(up, 2, axis=-1)                  # (B,S,di) each
+    if decode:
+        # maintain the conv window inside the state tuple
+        st, conv_win = state
+        win = jnp.concatenate([conv_win, xm.astype(conv_win.dtype)], axis=1)
+        c = jnp.einsum("bkc,kc->bc", win.astype(jnp.float32),
+                       p["conv_w"].astype(jnp.float32)) + p["conv_b"]
+        c = jax.nn.silu(c)[:, None, :]
+        conv_new = win[:, 1:]
+    else:
+        c = jax.nn.silu(_causal_conv(xm, p["conv_w"], p["conv_b"]))
+    q = (c @ p["wq"]).reshape(B, -1, H, hd)
+    k = (c @ p["wk"]).reshape(B, -1, H, hd)
+    v = (xm @ p["wv"]).reshape(B, -1, H, hd)
+    gate_in = xm.astype(jnp.float32)
+    log_i = gate_in @ p["w_i"] + p["b_i"]              # (B,S,H)
+    log_f = jax.nn.log_sigmoid(gate_in @ p["w_f"] + p["b_f"])
+    if decode:
+        y, st_new = mlstm_decode(q[:, 0], k[:, 0], v[:, 0],
+                                 log_i[:, 0], log_f[:, 0], st)
+        y = y[:, None]
+        new_state = (st_new, conv_new)
+    else:
+        y, st_new = mlstm_chunked(q, k, v, log_i, log_f, cfg.xlstm.chunk,
+                                  state)
+        new_state = st_new
+    y = y.reshape(B, -1, di).astype(x.dtype)
+    y = rms_norm(y, p["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return x + y @ p["w_down"], new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM — sequential scalar-memory cell
+# ---------------------------------------------------------------------------
+
+
+class SLSTMState(NamedTuple):
+    h: Array    # (B, H, hd)
+    c: Array    # (B, H, hd)
+    n: Array    # (B, H, hd)
+    m: Array    # (B, H, hd)
+
+
+def init_slstm_state(batch: int, H: int, hd: int) -> SLSTMState:
+    z = jnp.zeros((batch, H, hd), jnp.float32)
+    return SLSTMState(h=z, c=z, n=z, m=jnp.full_like(z, -1e30))
+
+
+def _slstm_cell(xw, st: SLSTMState, R) -> SLSTMState:
+    """xw: (B, 4d) pre-computed input projection for one step."""
+    B = xw.shape[0]
+    H, hd = st.h.shape[1:]
+    rec = jnp.einsum("bht,htk->bhk", st.h, R.astype(jnp.float32))  # (B,H,4hd)
+    raw = xw.reshape(B, H, 4 * hd) + rec
+    i_r, f_r, z_r, o_r = jnp.split(raw, 4, axis=-1)
+    log_i = i_r
+    log_f = jax.nn.log_sigmoid(f_r)
+    m_new = jnp.maximum(log_f + st.m, log_i)
+    i_p = jnp.exp(log_i - m_new)
+    f_p = jnp.exp(log_f + st.m - m_new)
+    c = f_p * st.c + i_p * jnp.tanh(z_r)
+    n = f_p * st.n + i_p
+    h = jax.nn.sigmoid(o_r) * c / jnp.maximum(n, 1e-6)
+    return SLSTMState(h=h, c=c, n=n, m=m_new)
+
+
+def slstm_block(x, p, cfg: ModelConfig, state: SLSTMState | None = None,
+                decode=False):
+    """sLSTM residual block + its post-FFN.  Sequential over time."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    hn = rms_norm(x, p["ln"], cfg.norm_eps)
+    xw = hn.astype(jnp.float32) @ p["W"].astype(jnp.float32) + p["b"]  # (B,S,4d)
+    if state is None:
+        state = init_slstm_state(B, H, hd)
+
+    if decode:
+        st_new = _slstm_cell(xw[:, 0], state, p["R"])
+        hs = st_new.h[:, None]
+    else:
+        def step(st, xw_t):
+            st_new = _slstm_cell(xw_t, st, p["R"])
+            return st_new, st_new.h
+
+        st_new, hs = jax.lax.scan(step, state, xw.transpose(1, 0, 2))
+        hs = hs.transpose(1, 0, 2, 3)                  # (B,S,H,hd)
+
+    y = rms_norm(hs.reshape(B, -1, d).astype(x.dtype), p["norm"],
+                 cfg.norm_eps)
+    x = x + y
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    f = jax.nn.silu(h2 @ p["w_gate"]) * (h2 @ p["w_up"])
+    return x + f @ p["w_down"], st_new
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+
+def _grouped(tree, G: int):
+    return jax.tree.map(lambda a: a.reshape(G, a.shape[0] // G, *a.shape[1:]),
+                        tree)
+
+
+def xlstm_forward(params, tokens, cfg: ModelConfig, remat: str = "full"):
+    ctx = get_mesh_context()
+    every = cfg.xlstm.slstm_every
+    G = cfg.n_layers // every
+    x = params["embed"][tokens]
+    x = shard(x, ctx.batch_axes, None, None)
+
+    def m_step(x, p_l):
+        x, _ = mlstm_block(x, p_l, cfg)
+        return x, None
+
+    def group(x, ps):
+        p_m, p_s = ps
+        x, _ = jax.lax.scan(m_step, x, p_m)
+        x, _ = slstm_block(x, p_s, cfg)
+        return shard(x, ctx.batch_axes, None, None), None
+
+    if remat in ("full", "dots"):
+        group = jax.checkpoint(group, prevent_cse=False)
+
+    x, _ = jax.lax.scan(group, x, (_grouped(params["mlstm_layers"], G),
+                                   params["slstm_layers"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _logits(params, x, cfg), jnp.zeros((), jnp.float32)
+
+
+def xlstm_loss(params, batch, cfg: ModelConfig, remat: str = "full"):
+    tokens = batch["tokens"]
+    logits, aux = xlstm_forward(params, tokens, cfg, remat)
+    labels, mask = shift_labels(tokens)
+    loss = cross_entropy(logits, labels, mask, cfg.vocab_size)
+    return loss, {"ce_loss": loss, "aux_loss": aux}
+
+
+class XLSTMCache(NamedTuple):
+    mlstm: Any        # MLSTMState stacked (G*(every-1), ...)
+    mlstm_conv: Array  # (G*(every-1), B, K-1, di)
+    slstm: Any        # SLSTMState stacked (G, ...)
+    length: Array
+
+
+def init_xlstm_cache(cfg: ModelConfig, batch: int, max_len: int = 0
+                     ) -> XLSTMCache:
+    every = cfg.xlstm.slstm_every
+    G = cfg.n_layers // every
+    nm = G * (every - 1)
+    di, hd = _mlstm_dims(cfg)
+    H = cfg.n_heads
+    ms = init_mlstm_state(batch, H, hd)
+    ss = init_slstm_state(batch, H, cfg.d_model // H)
+    K = cfg.xlstm.conv_kernel
+    return XLSTMCache(
+        mlstm=MLSTMState(*[jnp.broadcast_to(a, (nm,) + a.shape) for a in ms]),
+        mlstm_conv=jnp.zeros((nm, batch, K - 1, di), jnp.bfloat16),
+        slstm=SLSTMState(*[jnp.broadcast_to(a, (G,) + a.shape) for a in ss]),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def xlstm_prefill(params, tokens, cfg: ModelConfig, max_len: int = 0
+                  ) -> tuple[Array, XLSTMCache]:
+    every = cfg.xlstm.slstm_every
+    G = cfg.n_layers // every
+    B, S = tokens.shape
+    K = cfg.xlstm.conv_kernel
+    x = params["embed"][tokens]
+
+    def m_step(x, p_l):
+        di, _ = _mlstm_dims(cfg)
+        h = rms_norm(x, p_l["ln"], cfg.norm_eps)
+        xm = jnp.split(h @ p_l["w_up"], 2, axis=-1)[0]
+        conv_tail = xm[:, -(K - 1):, :].astype(jnp.bfloat16)
+        x, st = mlstm_block(x, p_l, cfg)
+        return x, (st, conv_tail)
+
+    def group(x, ps):
+        p_m, p_s = ps
+        x, m_states = jax.lax.scan(m_step, x, p_m)
+        x, s_state = slstm_block(x, p_s, cfg)
+        return x, (m_states, s_state)
+
+    x, (m_all, s_all) = jax.lax.scan(
+        group, x, (_grouped(params["mlstm_layers"], G),
+                   params["slstm_layers"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, x[:, -1:, :], cfg)[:, 0]
+    (m_states, conv_tails) = m_all
+    nm = G * (every - 1)
+    cache = XLSTMCache(
+        mlstm=MLSTMState(*[a.reshape(nm, *a.shape[2:]) for a in m_states]),
+        mlstm_conv=conv_tails.reshape(nm, B, K - 1, -1),
+        slstm=s_all,
+        length=jnp.asarray(S, jnp.int32),
+    )
+    return logits, cache
+
+
+def xlstm_decode_step(params, cache: XLSTMCache, token: Array,
+                      cfg: ModelConfig) -> tuple[Array, XLSTMCache]:
+    every = cfg.xlstm.slstm_every
+    G = cfg.n_layers // every
+    x = params["embed"][token][:, None, :]
+
+    def m_step(x, inp):
+        p_l, st, conv = inp
+        x, (st_new, conv_new) = mlstm_block(x, p_l, cfg,
+                                            state=(st, conv), decode=True)
+        return x, (st_new, conv_new)
+
+    def group(x, inp):
+        p_m, p_s, m_st, m_conv, s_st = inp
+        x, (m_new, conv_new) = jax.lax.scan(m_step, x, (p_m, m_st, m_conv))
+        x, s_new = slstm_block(x, p_s, cfg, state=s_st, decode=True)
+        return x, (m_new, conv_new, s_new)
+
+    per = every - 1
+    m_st_g = jax.tree.map(lambda a: a.reshape(G, per, *a.shape[1:]),
+                          cache.mlstm)
+    m_conv_g = cache.mlstm_conv.reshape(G, per, *cache.mlstm_conv.shape[1:])
+    x, (m_new, conv_new, s_new) = jax.lax.scan(
+        group, x, (_grouped(params["mlstm_layers"], G),
+                   params["slstm_layers"], m_st_g, m_conv_g, cache.slstm))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, x, cfg)[:, 0]
+    nm = G * per
+    cache = XLSTMCache(
+        mlstm=MLSTMState(*[a.reshape(nm, *a.shape[2:]) for a in m_new]),
+        mlstm_conv=conv_new.reshape(nm, *conv_new.shape[2:]),
+        slstm=s_new,
+        length=cache.length + 1,
+    )
+    return logits, cache

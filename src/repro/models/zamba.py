@@ -1,0 +1,260 @@
+"""Zamba2-style hybrid: a Mamba2 backbone with a *shared* attention+MLP
+block woven in every ``attn_every`` layers (weight reuse across
+invocations, Zamba's signature trick).  The shared block consumes
+``concat(original_embeddings, current_hidden)`` through a 2d->d projection,
+exactly as in Zamba/Zamba2.
+
+Simplifications vs the released checkpoints (noted in DESIGN.md): no
+per-invocation LoRA deltas on the shared weights, and ``attn_every`` is
+chosen to divide n_layers (81 = 9 x 9) so the stack scans as 9 uniform
+groups of (9 mamba layers + 1 shared-block application).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import get_mesh_context, shard
+from repro.models import attention as attn_lib
+from repro.models import ssm
+from repro.models.common import (
+    cross_entropy, dense_init, embed_init, key_iter, rms_norm, shift_labels,
+    stacked,
+)
+from repro.models.config import ModelConfig
+from repro.models.transformer import _logits, _rope_q_k
+
+Array = jax.Array
+
+
+def _n_groups(cfg: ModelConfig) -> int:
+    if cfg.n_layers % cfg.attn_every:
+        raise ValueError(
+            f"zamba n_layers={cfg.n_layers} must be divisible by "
+            f"attn_every={cfg.attn_every}")
+    return cfg.n_layers // cfg.attn_every
+
+
+def init_zamba(key, cfg: ModelConfig, ctx=None) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    ks = key_iter(key)
+    d, hd = cfg.d_model, cfg.hd
+    shared = {
+        "w_in": dense_init(next(ks), (2 * d, d), dtype=dtype),
+        "ln1": jnp.zeros((d,), dtype),
+        "wq": dense_init(next(ks), (d, cfg.n_heads * hd), dtype=dtype),
+        "wk": dense_init(next(ks), (d, cfg.n_kv_heads * hd), dtype=dtype),
+        "wv": dense_init(next(ks), (d, cfg.n_kv_heads * hd), dtype=dtype),
+        "wo": dense_init(next(ks), (cfg.n_heads * hd, d), dtype=dtype),
+        "ln2": jnp.zeros((d,), dtype),
+        "w_gate": dense_init(next(ks), (d, cfg.d_ff), dtype=dtype),
+        "w_up": dense_init(next(ks), (d, cfg.d_ff), dtype=dtype),
+        "w_down": dense_init(next(ks), (cfg.d_ff, d), dtype=dtype),
+    }
+    return {
+        "embed": embed_init(next(ks), (cfg.padded_vocab, d), dtype),
+        "mamba_layers": stacked(next(ks), cfg.n_layers,
+                                ssm.init_mamba_params, cfg, dtype),
+        "shared": shared,
+        "final_norm": jnp.zeros((d,), dtype),
+        "lm_head": dense_init(next(ks), (d, cfg.padded_vocab), dtype=dtype),
+    }
+
+
+def _shared_block(x, x0, p, cfg: ModelConfig, positions, ctx,
+                  kv_cache=None, pos=None):
+    """The weight-shared attention+MLP block.  Returns (delta, new_kv)."""
+    B = x.shape[0]
+    hd = cfg.hd
+    h = jnp.concatenate([x0, x], axis=-1) @ p["w_in"]
+    h = rms_norm(h, p["ln1"], cfg.norm_eps)
+    q = (h @ p["wq"]).reshape(B, -1, cfg.n_heads, hd)
+    k = (h @ p["wk"]).reshape(B, -1, cfg.n_kv_heads, hd)
+    v = (h @ p["wv"]).reshape(B, -1, cfg.n_kv_heads, hd)
+    q, k = _rope_q_k(cfg, q, k, positions, {})
+    if kv_cache is None:                                   # train/prefill
+        out = attn_lib.blocked_attention(
+            q, k, v, causal=True, q_block=cfg.q_block, kv_block=cfg.kv_block)
+        new_kv = (k, v)
+    else:
+        k_c, v_c, pos_c = kv_cache
+        k_c, v_c, pos_c = attn_lib.cache_write(k_c, v_c, pos_c, k, v, pos,
+                                               ring=False)
+        out = attn_lib.decode_attention(q[:, 0], k_c, v_c, pos,
+                                        cache_positions=pos_c)[:, None]
+        new_kv = (k_c, v_c, pos_c)
+    a = out.reshape(B, -1, cfg.n_heads * hd) @ p["wo"]
+    h2 = rms_norm(a, p["ln2"], cfg.norm_eps)
+    f = jax.nn.silu(h2 @ p["w_gate"]) * (h2 @ p["w_up"])
+    return a + f @ p["w_down"], new_kv
+
+
+def _grouped(tree, G: int):
+    """Reshape stacked layer params (L, ...) -> (G, L/G, ...)."""
+    return jax.tree.map(lambda a: a.reshape(G, a.shape[0] // G, *a.shape[1:]),
+                        tree)
+
+
+def zamba_forward(params, tokens, cfg: ModelConfig, remat: str = "full"):
+    ctx = get_mesh_context()
+    G = _n_groups(cfg)
+    B, S = tokens.shape
+    positions = jnp.arange(S)[None, :]
+    x0 = params["embed"][tokens]
+    x0 = shard(x0, ctx.batch_axes, None, None)
+    shared = params["shared"]
+
+    def mamba_step(x, p_l):
+        return x + ssm.mamba_block(x, p_l, cfg), None
+
+    def group(x, p_group):
+        x, _ = jax.lax.scan(mamba_step, x, p_group)
+        delta, _ = _shared_block(x, x0, shared, cfg, positions, ctx)
+        x = x + delta
+        return shard(x, ctx.batch_axes, None, None), None
+
+    if remat in ("full", "dots"):
+        group = jax.checkpoint(group, prevent_cse=False)
+
+    x, _ = jax.lax.scan(group, x0, _grouped(params["mamba_layers"], G))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _logits(params, x, cfg), jnp.zeros((), jnp.float32)
+
+
+def zamba_loss(params, batch, cfg: ModelConfig, remat: str = "full"):
+    tokens = batch["tokens"]
+    logits, aux = zamba_forward(params, tokens, cfg, remat)
+    labels, mask = shift_labels(tokens)
+    loss = cross_entropy(logits, labels, mask, cfg.vocab_size)
+    return loss, {"ce_loss": loss, "aux_loss": aux}
+
+
+class ZambaCache(NamedTuple):
+    mamba: Any        # ssm.MambaState stacked over (L,)
+    shared_k: Array   # (G, B, T, Hkv, hd)
+    shared_v: Array
+    shared_pos: Array  # (G, T)
+    length: Array
+
+
+def init_zamba_cache(cfg: ModelConfig, batch: int, max_len: int,
+                     dtype=jnp.bfloat16) -> ZambaCache:
+    G = _n_groups(cfg)
+    st = ssm.init_mamba_state(cfg, batch)
+    L = cfg.n_layers
+    return ZambaCache(
+        mamba=ssm.MambaState(
+            h=jnp.broadcast_to(st.h, (L,) + st.h.shape),
+            conv=jnp.broadcast_to(st.conv, (L,) + st.conv.shape)),
+        shared_k=jnp.zeros((G, batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+        shared_v=jnp.zeros((G, batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+        shared_pos=jnp.full((G, max_len), -1, jnp.int32),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def zamba_prefill(params, tokens, cfg: ModelConfig, max_len: int
+                  ) -> tuple[Array, ZambaCache]:
+    """Prefill by running the chunked forward while collecting terminal
+    SSD states and shared-block K/V (re-derived per group)."""
+    ctx = get_mesh_context()
+    G = _n_groups(cfg)
+    B, S = tokens.shape
+    positions = jnp.arange(S)[None, :]
+    x0 = params["embed"][tokens]
+    shared = params["shared"]
+
+    def mamba_step(x, p_l):
+        # capture the final SSD state + conv tail for decode continuation
+        s = cfg.ssm
+        di, H, conv_dim = ssm.ssm_dims(cfg)
+        h = rms_norm(x, p_l["ln"], cfg.norm_eps)
+        proj = h @ p_l["in_proj"]
+        z, xin, Bm, Cm, dt = ssm._split_proj(proj, cfg)
+        conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)
+        K = s.conv_kernel
+        conv_tail = conv_in[:, -(K - 1):, :] if S >= K - 1 else jnp.pad(
+            conv_in, ((0, 0), (K - 1 - S, 0), (0, 0)))
+        conv_out = jax.nn.silu(
+            ssm._causal_conv(conv_in, p_l["conv_w"], p_l["conv_b"]))
+        xin, Bm, Cm = jnp.split(conv_out, [di, di + s.d_state], axis=-1)
+        dt_pos = jax.nn.softplus(dt.astype(jnp.float32) + p_l["dt_bias"])
+        A = -jnp.exp(p_l["A_log"])
+        xh = xin.reshape(B, S, H, s.head_dim)
+        y, h_last = ssm.ssd_chunked(xh, dt_pos, A, Bm, Cm, s.chunk)
+        y = y + xh.astype(jnp.float32) * p_l["D"][None, None, :, None]
+        y = y.reshape(B, S, di)
+        y = rms_norm(y.astype(x.dtype) * jax.nn.silu(z), p_l["norm"],
+                     cfg.norm_eps)
+        state = ssm.MambaState(h=h_last,
+                               conv=conv_tail.astype(jnp.bfloat16))
+        return x + y @ p_l["out_proj"], state
+
+    def group(x, p_group):
+        x, states = jax.lax.scan(mamba_step, x, p_group)
+        delta, (k, v) = _shared_block(x, x0, shared, cfg, positions, ctx)
+        kv = (attn_lib.pad_to(k, max_len), attn_lib.pad_to(v, max_len))
+        return x + delta, (states, kv)
+
+    x, (states, kvs) = jax.lax.scan(group, x0,
+                                    _grouped(params["mamba_layers"], G))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, x[:, -1:, :], cfg)[:, 0]
+
+    L = cfg.n_layers
+    pos_tags = jnp.where(jnp.arange(max_len)[None, :] < S,
+                         jnp.arange(max_len)[None, :], -1)
+    cache = ZambaCache(
+        mamba=ssm.MambaState(
+            h=states.h.reshape(L, *states.h.shape[2:]),
+            conv=states.conv.reshape(L, *states.conv.shape[2:])),
+        shared_k=kvs[0], shared_v=kvs[1],
+        shared_pos=jnp.broadcast_to(pos_tags, (G, max_len)),
+        length=jnp.asarray(S, jnp.int32),
+    )
+    return logits, cache
+
+
+def zamba_decode_step(params, cache: ZambaCache, token: Array,
+                      cfg: ModelConfig) -> tuple[Array, ZambaCache]:
+    ctx = get_mesh_context()
+    G = _n_groups(cfg)
+    B = token.shape[0]
+    pos = cache.length
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    x0 = params["embed"][token][:, None, :]
+    shared = params["shared"]
+
+    def mamba_step(x, inp):
+        p_l, st = inp
+        y, st_new = ssm.mamba_decode_block(x, p_l, st, cfg)
+        return x + y, st_new
+
+    def group(carry, inp):
+        x = carry
+        p_group, st_group, k_c, v_c, pos_c = inp
+        x, st_new = jax.lax.scan(mamba_step, x, (p_group, st_group))
+        delta, (k_c, v_c, pos_c) = _shared_block(
+            x, x0, shared, cfg, positions, ctx,
+            kv_cache=(k_c, v_c, pos_c), pos=pos)
+        return x + delta, (st_new, k_c, v_c, pos_c)
+
+    Lg = cfg.attn_every
+    grouped_states = jax.tree.map(
+        lambda a: a.reshape(G, Lg, *a.shape[1:]), cache.mamba)
+    x, (st_new, k_new, v_new, pos_new) = jax.lax.scan(
+        group, x0,
+        (_grouped(params["mamba_layers"], G), grouped_states,
+         cache.shared_k, cache.shared_v, cache.shared_pos))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, x, cfg)[:, 0]
+    L = cfg.n_layers
+    cache = ZambaCache(
+        mamba=ssm.MambaState(h=st_new.h.reshape(L, *st_new.h.shape[2:]),
+                             conv=st_new.conv.reshape(L, *st_new.conv.shape[2:])),
+        shared_k=k_new, shared_v=v_new, shared_pos=pos_new,
+        length=pos + 1)
+    return logits, cache

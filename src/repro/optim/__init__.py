@@ -1,0 +1,6 @@
+"""Generic optimization infrastructure (schedules; the optimizers
+themselves — the paper's contribution — live in repro.core)."""
+
+from repro.optim.schedules import constant, cosine_with_warmup
+
+__all__ = ["constant", "cosine_with_warmup"]

@@ -1,0 +1,25 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here on purpose — smoke tests and
+benches must see the single real CPU device; only the dry-run subprocesses
+request placeholder devices (see repro/launch/dryrun.py)."""
+
+import os
+import sys
+from pathlib import Path
+
+import pytest
+
+SRC = Path(__file__).resolve().parent.parent / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
+
+
+@pytest.fixture(scope="session")
+def smoke_ctx():
+    from repro.launch.mesh import smoke_context
+    return smoke_context()
+
+
+@pytest.fixture()
+def rng():
+    import jax
+    return jax.random.PRNGKey(0)

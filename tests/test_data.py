@@ -1,0 +1,78 @@
+"""Data pipeline: determinism, shardability, learnable structure."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.pipeline import DataConfig, SyntheticLMDataset
+
+
+def _ds(vocab=128, seq=16, batch=8, seed=0, **kw):
+    return SyntheticLMDataset(DataConfig(vocab_size=vocab, seq_len=seq,
+                                         global_batch=batch, seed=seed, **kw))
+
+
+class TestDeterminism:
+    def test_same_step_same_batch(self):
+        ds = _ds()
+        a = ds.global_batch_at(7)["tokens"]
+        b = ds.global_batch_at(7)["tokens"]
+        np.testing.assert_array_equal(a, b)
+
+    def test_different_steps_differ(self):
+        ds = _ds()
+        a = ds.global_batch_at(1)["tokens"]
+        b = ds.global_batch_at(2)["tokens"]
+        assert np.any(np.asarray(a) != np.asarray(b))
+
+    def test_restart_resumes_exact_stream(self):
+        """The step counter IS the data state: no separate data checkpoint."""
+        ds1, ds2 = _ds(seed=3), _ds(seed=3)
+        stream1 = [ds1.global_batch_at(s)["tokens"] for s in range(6)]
+        # "restart" at step 4
+        resumed = [ds2.global_batch_at(s)["tokens"] for s in range(4, 6)]
+        np.testing.assert_array_equal(stream1[4], resumed[0])
+        np.testing.assert_array_equal(stream1[5], resumed[1])
+
+
+class TestSharding:
+    @settings(max_examples=10, deadline=None)
+    @given(step=st.integers(0, 100), n_shards=st.sampled_from([1, 2, 4, 8]))
+    def test_shards_partition_global_batch(self, step, n_shards):
+        ds = _ds(batch=8)
+        parts = [np.asarray(ds.batch_at(step, i, n_shards)["tokens"])
+                 for i in range(n_shards)]
+        full = np.asarray(ds.global_batch_at(step)["tokens"])
+        # shards are disjoint deterministic slices; same content per (step, shard)
+        assert all(p.shape == (8 // n_shards, 16) for p in parts)
+        again = np.asarray(ds.batch_at(step, 0, n_shards)["tokens"])
+        np.testing.assert_array_equal(parts[0], again)
+
+    def test_uneven_shards_rejected(self):
+        with pytest.raises(ValueError):
+            _ds(batch=8).batch_at(0, 0, 3)
+
+
+class TestStructure:
+    def test_tokens_in_range(self):
+        toks = np.asarray(_ds(vocab=50).global_batch_at(0)["tokens"])
+        assert toks.min() >= 0 and toks.max() < 50
+
+    def test_markov_structure_learnable(self):
+        """With markov_strength > 0 successor pairs repeat far more often
+        than chance — the signal models learn in the convergence benches."""
+        ds = _ds(vocab=64, seq=128, batch=16, markov_strength=0.9)
+        toks = np.asarray(ds.global_batch_at(0)["tokens"])
+        succ = np.asarray(ds._succ)
+        pred = succ[toks[:, :-1] % len(succ)] % 64
+        hit = (pred == toks[:, 1:]).mean()
+        assert hit > 0.5, f"markov hit rate {hit}"
+
+    def test_zipf_marginal_is_skewed(self):
+        # markov_strength=0 isolates the Zipf base draw
+        toks = np.asarray(_ds(vocab=1000, seq=256, batch=16,
+                              markov_strength=0.0
+                              ).global_batch_at(0)["tokens"])
+        top_frac = (toks < 10).mean()
+        assert top_frac > 0.2  # top-10 of 1000 tokens cover >20% of stream

@@ -1,0 +1,57 @@
+"""Flash-attention Pallas kernel vs the blocked-attention reference —
+shape/feature sweep in interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention, flash_traffic_bytes
+from repro.models.attention import blocked_attention
+
+
+def _qkv(B, S, T, Hq, Hkv, hd, dtype=jnp.float32, seed=0):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    return (jax.random.normal(ks[0], (B, S, Hq, hd), dtype),
+            jax.random.normal(ks[1], (B, T, Hkv, hd), dtype),
+            jax.random.normal(ks[2], (B, T, Hkv, hd), dtype))
+
+
+@pytest.mark.parametrize("B,S,Hq,Hkv,hd", [
+    (1, 128, 2, 2, 128),       # MHA
+    (2, 256, 4, 2, 128),       # GQA group 2
+    (1, 128, 4, 1, 128),       # MQA
+])
+@pytest.mark.parametrize("causal,window,softcap", [
+    (True, 0, 0.0), (True, 64, 0.0), (True, 0, 30.0), (False, 0, 0.0),
+])
+def test_flash_matches_blocked(B, S, Hq, Hkv, hd, causal, window, softcap):
+    q, k, v = _qkv(B, S, S, Hq, Hkv, hd)
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=softcap, bq=64, bk=64, interpret=True)
+    want = blocked_attention(q, k, v, causal=causal,
+                             window=window or None, softcap=softcap,
+                             q_block=64, kv_block=64)
+    np.testing.assert_allclose(got, want, atol=2e-3, rtol=1e-2)
+
+
+def test_flash_bf16():
+    q, k, v = _qkv(1, 128, 128, 2, 2, 128, dtype=jnp.bfloat16)
+    got = flash_attention(q, k, v, bq=64, bk=64, interpret=True)
+    want = blocked_attention(q, k, v, q_block=64, kv_block=64)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=3e-2, rtol=5e-2)
+
+
+def test_traffic_model_far_below_naive():
+    """The §Perf before/after: flash HBM traffic << logits-through-HBM."""
+    B, S, H, hd = 2, 32768, 40, 128
+    flash = flash_traffic_bytes(B, S, S, H, H, hd, hd)
+    # naive lower bound: the (S x S) fp32 logits written+read once per head
+    naive_logits = B * H * S * S * 4 * 2
+    assert flash < naive_logits / 5          # MHA: KV streaming dominates
+    # GQA shrinks the streamed KV by the group factor
+    flash_gqa = flash_traffic_bytes(B, S, S, H, 8, hd, hd)
+    assert flash_gqa < naive_logits / 25

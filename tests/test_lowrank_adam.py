@@ -1,0 +1,125 @@
+"""Tests for the projected Adam machinery: projection-aware rotation
+(Eq. 8-9 / Appendix C) and recovery scaling (Eq. 10-12)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import subspace as sub
+from repro.core.lowrank_adam import (
+    AdamHP, MatrixOptState, dense_adam_step, init_dense_state,
+    init_matrix_state, lowrank_adam_step, rotate_moments_dense,
+    rotate_moments_rank1,
+)
+
+HP = AdamHP()
+
+
+def _rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+class TestRotation:
+    def test_identity_rotation_is_noop(self):
+        """Q = I  =>  rotated moments == raw moments (the consistency
+        invariant Eq. 9's literal transcription breaks — DESIGN.md §4)."""
+        M, V = _rand(0, 8, 32), jnp.abs(_rand(1, 8, 32)) + 0.5
+        QM, V_rot = rotate_moments_dense(jnp.eye(8), M, V,
+                                         jnp.int32(5), HP)
+        np.testing.assert_allclose(QM, M, atol=1e-6)
+        np.testing.assert_allclose(V_rot, V, atol=1e-5)
+
+    def test_rank1_matches_dense(self):
+        """The O(rn) rotation equals the dense Q path exactly."""
+        r, n = 8, 32
+        v = _rand(2, r)
+        v = v / jnp.linalg.norm(v)
+        cos_t = jnp.float32(0.83)
+        Q = sub.change_of_basis_rank1(cos_t, v)
+        M, V = _rand(3, r, n), jnp.abs(_rand(4, r, n)) + 0.5
+        d = rotate_moments_dense(Q, M, V, jnp.int32(3), HP)
+        f = rotate_moments_rank1(cos_t, v, M, V, jnp.int32(3), HP)
+        np.testing.assert_allclose(d[0], f[0], rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(d[1], f[1], rtol=1e-4, atol=1e-4)
+
+    def test_variance_nonnegative(self):
+        """|...| clip (paper: 'clip any negative values to zero')."""
+        r, n = 6, 20
+        Q = sub.refresh_random(_rand(5, r, n), r, step=0).T[:r, :r]
+        M, V = _rand(6, r, n), jnp.abs(_rand(7, r, n)) * 0.01
+        _, V_rot = rotate_moments_dense(Q, M, V, jnp.int32(2), HP)
+        assert float(V_rot.min()) >= 0.0
+
+    def test_ldadam_bias_factor_flag(self):
+        hp_lit = AdamHP(ldadam_bias_factor=True)
+        M, V = _rand(8, 4, 16), jnp.abs(_rand(9, 4, 16))
+        _, v_default = rotate_moments_dense(jnp.eye(4), M, V, jnp.int32(10), HP)
+        _, v_literal = rotate_moments_dense(jnp.eye(4), M, V, jnp.int32(10),
+                                            hp_lit)
+        factor = 1.0 - HP.beta2 ** 10
+        # fp32 pow on device vs float64 on host: ~1e-5 relative slack
+        np.testing.assert_allclose(v_literal, factor * v_default, rtol=1e-3)
+
+
+class TestRecovery:
+    def _step(self, st, G, step, hp=HP):
+        return lowrank_adam_step(G, st, jnp.int32(step), hp, recovery=True)
+
+    def test_recovery_direction_includes_orthogonal_component(self):
+        m, n, r = 16, 32, 4
+        G = _rand(10, m, n)
+        st = init_matrix_state(m, n, r)
+        st = st._replace(S=sub.init_subspace(G, r, "svd"))
+        out_rec = lowrank_adam_step(G, st, jnp.int32(0), HP, recovery=True)
+        out_no = lowrank_adam_step(G, st, jnp.int32(0), HP, recovery=False)
+        diff = out_rec.delta - out_no.delta
+        # the extra term lies (approximately) in the orthogonal complement
+        proj = st.S.T @ diff
+        assert float(jnp.abs(proj).max()) < 1e-3 * float(
+            jnp.abs(diff).max() + 1e-9)
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 1000), scale=st.floats(1.5, 100.0))
+    def test_limiter_bounds_growth(self, seed, scale):
+        """Eq. 12: after the limiter, ||Λ_t|| <= ζ ||Λ_{t-1}||."""
+        m, n, r = 12, 24, 4
+        key = jax.random.PRNGKey(seed)
+        G1 = jax.random.normal(key, (m, n))
+        st = init_matrix_state(m, n, r)
+        st = st._replace(S=sub.init_subspace(G1, r, "svd"))
+        out1 = lowrank_adam_step(G1, st, jnp.int32(0), HP, recovery=True)
+        lam1 = float(out1.state.lam_prev)
+        if lam1 <= 0:
+            return
+        G2 = G1 * scale + jax.random.normal(jax.random.fold_in(key, 1),
+                                            (m, n)) * scale
+        out2 = lowrank_adam_step(G2, out1.state, jnp.int32(1), HP,
+                                 recovery=True)
+        assert float(out2.state.lam_prev) <= HP.zeta * lam1 * (1 + 1e-5)
+
+    def test_plain_step_matches_manual_adam(self):
+        """Projected-space moments follow Eq. 6-7 exactly."""
+        m, n, r = 10, 20, 3
+        G = _rand(11, m, n)
+        st = init_matrix_state(m, n, r)
+        st = st._replace(S=sub.init_subspace(G, r, "svd"))
+        out = lowrank_adam_step(G, st, jnp.int32(0), HP, recovery=False)
+        Gt = st.S.T @ G
+        M_want = (1 - HP.beta1) * Gt
+        V_want = (1 - HP.beta2) * Gt * Gt
+        np.testing.assert_allclose(out.state.M, M_want, rtol=1e-5)
+        np.testing.assert_allclose(out.state.V, V_want, rtol=1e-5)
+        mh = M_want / (1 - HP.beta1)
+        vh = V_want / (1 - HP.beta2)
+        want = HP.scale * (st.S @ (mh / (jnp.sqrt(vh) + HP.eps)))
+        np.testing.assert_allclose(out.delta, want, rtol=1e-4, atol=1e-5)
+
+
+class TestDense:
+    def test_dense_adam_first_step_is_sign_like(self):
+        G = _rand(12, 8, 8)
+        st = init_dense_state((8, 8))
+        delta, _ = dense_adam_step(G, st, jnp.int32(0), HP)
+        # bias-corrected first step: m_hat/sqrt(v_hat) = G/|G| elementwise
+        np.testing.assert_allclose(delta, jnp.sign(G), atol=1e-3)

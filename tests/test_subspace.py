@@ -1,0 +1,171 @@
+"""Unit + property tests for the Grassmannian subspace-tracking core
+(paper §2 Eq. 1-5, §3 Thm 3.6)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import subspace as sub
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(key, m, n):
+    return jax.random.normal(jax.random.PRNGKey(key), (m, n), jnp.float32)
+
+
+class TestInit:
+    def test_svd_init_orthonormal(self):
+        G = _rand(0, 48, 96)
+        S = sub.init_subspace(G, 8, "svd")
+        np.testing.assert_allclose(S.T @ S, np.eye(8), atol=1e-5)
+
+    def test_svd_init_spans_top_directions(self):
+        # exact recovery for an exactly-rank-4 matrix
+        A = _rand(1, 32, 4)
+        B = _rand(2, 4, 64)
+        G = A @ B
+        S = sub.init_subspace(G, 4, "svd")
+        resid = G - S @ (S.T @ G)
+        assert float(jnp.linalg.norm(resid)) < 1e-3 * float(jnp.linalg.norm(G))
+
+    @pytest.mark.parametrize("method", ["svd", "randomized", "identity"])
+    def test_all_methods_orthonormal(self, method):
+        G = _rand(3, 40, 80)
+        S = sub.init_subspace(G, 8, method)
+        np.testing.assert_allclose(S.T @ S, np.eye(8), atol=1e-4)
+
+    def test_randomized_captures_lowrank(self):
+        A = _rand(4, 64, 6)
+        B = _rand(5, 6, 128)
+        G = A @ B
+        S = sub.init_subspace(G, 6, "randomized")
+        resid = G - S @ (S.T @ G)
+        assert float(jnp.linalg.norm(resid)) < 1e-2 * float(jnp.linalg.norm(G))
+
+
+class TestProjection:
+    def test_project_is_least_squares_solution(self):
+        """A* = S^T G solves min_A ||S A - G|| (Eq. 2): residual ⟂ range(S)."""
+        G = _rand(6, 24, 48)
+        S = sub.init_subspace(G, 4, "svd")
+        A = sub.project(S, G)
+        R = G - S @ A
+        np.testing.assert_allclose(S.T @ R, 0.0, atol=1e-4)
+
+    def test_tangent_fused_equals_naive(self):
+        G = _rand(7, 32, 64)
+        S = sub.init_subspace(1.3 * _rand(8, 32, 64), 8, "svd")
+        A = sub.project(S, G)
+        np.testing.assert_allclose(sub.tangent_naive(S, G, A),
+                                   sub.tangent_fused(S, G, A),
+                                   rtol=2e-4, atol=2e-3)
+
+    def test_tangent_orthogonal_to_subspace(self):
+        """S^T T = 0 — the tangent lies in the horizontal space (Eq. 4)."""
+        G = _rand(9, 32, 64)
+        S = sub.init_subspace(_rand(10, 32, 64), 8, "svd")
+        A = sub.project(S, G)
+        T = sub.tangent_fused(S, G, A)
+        rel = float(jnp.abs(S.T @ T).max() / (jnp.abs(T).max() + 1e-9))
+        assert rel < 1e-4
+
+
+class TestTop1:
+    def test_power_matches_eigh(self):
+        T = _rand(11, 48, 12)
+        p = sub.top1_power(T, n_iter=48)
+        e = sub.top1_eigh(T)
+        np.testing.assert_allclose(p.sigma, e.sigma, rtol=1e-4)
+        assert abs(float(p.v @ e.v)) > 1 - 1e-3
+
+    def test_sigma_is_largest_singular_value(self):
+        T = _rand(12, 40, 10)
+        svals = jnp.linalg.svd(T, compute_uv=False)
+        p = sub.top1_power(T, n_iter=48)
+        np.testing.assert_allclose(p.sigma, svals[0], rtol=1e-3)
+
+
+class TestGeodesic:
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 10_000), eta=st.floats(0.001, 20.0),
+           r=st.integers(2, 8))
+    def test_orthonormality_preserved(self, seed, eta, r):
+        """Property (paper: 'update rule preserves orthonormality of S')."""
+        m, n = 24, 40
+        key = jax.random.PRNGKey(seed)
+        k1, k2 = jax.random.split(key)
+        G0 = jax.random.normal(k1, (m, n))
+        G1 = G0 + 0.5 * jax.random.normal(k2, (m, n))
+        S = sub.init_subspace(G0, r, "svd")
+        res = sub.track_subspace(S, G1, eta=eta)
+        err = np.abs(res.S_new.T @ res.S_new - np.eye(r)).max()
+        assert err < 5e-5
+
+    def test_geodesic_rank1_matches_full_eq5(self):
+        G = _rand(13, 32, 64)
+        S = sub.init_subspace(_rand(14, 32, 64), 8, "svd")
+        A = sub.project(S, G)
+        T = sub.tangent_fused(S, G, A)
+        tr = sub.stabilize_triple(S, sub.top1_eigh(T))
+        np.testing.assert_allclose(sub.geodesic_step(S, tr, 0.3),
+                                   sub.geodesic_full(S, tr, 0.3),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_zero_tangent_is_identity(self):
+        """Critical point (S = SVD of G): geodesic must not move/corrupt S."""
+        G = _rand(15, 32, 64)
+        S = sub.init_subspace(G, 8, "svd")
+        res = sub.track_subspace(S, 2.0 * G, eta=5.0)  # same subspace
+        np.testing.assert_allclose(res.S_new.T @ res.S_new, np.eye(8),
+                                   atol=1e-5)
+        # displacement bounded by the fp32 noise-floor tangent angle
+        # (sigma_noise * eta); orthonormality above is the hard invariant.
+        assert np.abs(res.S_new - S).max() < 1e-2
+
+    def test_tracking_reduces_projection_error(self):
+        """Moving along the geodesic reduces ||G - S S^T G|| (the cost F)."""
+        m, n, r = 32, 64, 6
+        G_old = _rand(16, m, n)
+        G_new = _rand(17, m, n)   # completely different subspace
+        S = sub.init_subspace(G_old, r, "svd")
+        err0 = float(jnp.linalg.norm(G_new - S @ (S.T @ G_new)))
+        for _ in range(60):
+            res = sub.track_subspace(S, G_new, eta=0.002)
+            S = res.S_new
+        err1 = float(jnp.linalg.norm(G_new - S @ (S.T @ G_new)))
+        assert err1 < err0 - 1e-3
+
+    def test_change_of_basis_rank1_closed_form(self):
+        """Q = S_new^T S_old == I + (cos θ - 1) v v^T  (exact identity that
+        the O(rn) projection-aware rotation relies on)."""
+        G = _rand(18, 32, 64)
+        S = sub.init_subspace(_rand(19, 32, 64), 8, "svd")
+        res = sub.track_subspace(S, G, eta=1.0)
+        Q_dense = sub.change_of_basis(res.S_new, S)
+        Q_r1 = sub.change_of_basis_rank1(res.cos_theta, res.v)
+        np.testing.assert_allclose(Q_dense, Q_r1, atol=5e-5)
+
+    def test_reorthonormalize(self):
+        S = sub.init_subspace(_rand(20, 32, 64), 8, "svd")
+        S_dirty = S + 1e-3 * _rand(21, 32, 8)
+        S_clean = sub.reorthonormalize(S_dirty)
+        np.testing.assert_allclose(S_clean.T @ S_clean, np.eye(8), atol=1e-5)
+        # sign-fixed: stays close to the input basis
+        assert np.abs(S_clean - S).max() < 0.05
+
+
+class TestRefresh:
+    def test_refresh_svd_matches_init(self):
+        G = _rand(22, 24, 48)
+        np.testing.assert_allclose(sub.refresh_svd(G, 4),
+                                   sub.init_subspace(G, 4, "svd"), atol=1e-6)
+
+    def test_refresh_random_orthonormal_and_step_dependent(self):
+        G = _rand(23, 24, 48)
+        S1 = sub.refresh_random(G, 4, step=1)
+        S2 = sub.refresh_random(G, 4, step=2)
+        np.testing.assert_allclose(S1.T @ S1, np.eye(4), atol=1e-5)
+        assert np.abs(S1 - S2).max() > 1e-3
