@@ -150,6 +150,33 @@ def markdown_table(cells: list[Cell]) -> str:
     return "\n".join(lines)
 
 
+def hotpath_table(shapes=((1024, 2736, 256), (2048, 5461, 512),
+                          (4096, 11008, 1024))) -> str:
+    """Optimizer hot-path HBM model at this roofline's bandwidth: the
+    per-matrix non-tracking step, unfused (seed) vs fused single-pass
+    schedule, and the projected memory-bound step time on one chip.
+
+    The paper's k-1-of-k plain steps are memory-bound at r << m, so
+    bytes / HBM_BW is the step-time model the fused pipeline attacks."""
+    from repro.kernels.traffic import fused_step_bytes, unfused_step_bytes
+
+    lines = [
+        "\n### Optimizer hot-path traffic (per matrix per plain step, "
+        "bf16 grads/params, fp32 state)\n",
+        "| m | n | r | unfused MB | fused MB | ratio | unfused us "
+        "@HBM | fused us @HBM |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for (m, n, r) in shapes:
+        unf = unfused_step_bytes(m, n, r, grad_bytes=2, param_bytes=2)
+        fus = fused_step_bytes(m, n, r, grad_bytes=2, param_bytes=2)
+        lines.append(
+            f"| {m} | {n} | {r} | {unf.total/1e6:.1f} | "
+            f"{fus.total/1e6:.1f} | {fus.total/unf.total:.3f} | "
+            f"{unf.total/HBM_BW*1e6:.1f} | {fus.total/HBM_BW*1e6:.1f} |")
+    return "\n".join(lines)
+
+
 def main() -> None:
     import argparse
     ap = argparse.ArgumentParser()
@@ -157,7 +184,17 @@ def main() -> None:
                     help="artifact dir (experiments/dryrun_baseline | "
                          "experiments/dryrun_opt)")
     ap.add_argument("--out", default="", help="also write markdown here")
+    ap.add_argument("--hotpath", action="store_true",
+                    help="print the optimizer hot-path HBM-traffic model "
+                         "(no dry-run artifacts needed)")
     args = ap.parse_args()
+
+    if args.hotpath:
+        section = hotpath_table()
+        print(section)
+        if args.out:
+            Path(args.out).write_text(section)
+        return
 
     sections = []
     for mesh in ("16x16", "2x16x16"):

@@ -30,6 +30,16 @@ import jax.numpy as jnp
 Array = jax.Array
 
 _TINY = 1e-30
+# Relative noise floor for the closed-form residual energy ||G_:,j||^2 -
+# ||Gt_:,j||^2 (exact in real arithmetic since S is orthonormal, but a
+# catastrophic cancellation in fp32 when the column lies inside the
+# subspace: the clamped difference is then ~eps * ||G_:,j||^2 of pure
+# rounding noise, which phi = ||Gto||/||Gt|| can amplify by orders of
+# magnitude).  Columns below the floor have a true residual of at most
+# sqrt(floor) ~ 0.3% of the column's gradient mass, so the fused path
+# drops their recovery contribution entirely — both the Eq. 12 norm and
+# the epilogue term — instead of feeding amplified noise into the update.
+_RESID_REL_FLOOR = 1e-5
 
 
 @dataclass(frozen=True)
@@ -125,8 +135,75 @@ def rotate_moments_rank1(cos_theta: Array, v: Array, M: Array, V: Array,
 
 
 class MatrixStepOut(NamedTuple):
-    delta: Array              # (m, n) raw update direction (pre learning-rate, sign = descent)
+    """``delta`` is the fp32 descent direction when ``lr`` was not given
+    (legacy contract: the caller applies ``W <- W - lr * delta``), or the
+    ready-to-add final-dtype update ``W <- W + delta`` when ``lr`` was
+    threaded down (the fused hot-path contract)."""
+
+    delta: Array
     state: MatrixOptState
+
+
+def _limiter(lam_norm: Array, lam_prev: Array, zeta: float
+             ) -> tuple[Array, Array]:
+    """Eq. 12 recovery-growth limiter: returns (clip_scale, lam_new).
+    Inactive until ``lam_prev`` is populated (first recovery step)."""
+    limit = zeta * lam_prev
+    do_clip = (lam_prev > 0.0) & (lam_norm > limit)
+    scale = jnp.where(do_clip, limit / jnp.maximum(lam_norm, _TINY), 1.0)
+    lam_new = jnp.where(lam_prev > 0.0, jnp.minimum(lam_norm, limit),
+                        lam_norm)
+    return scale, lam_new
+
+
+def _fused_step(G, st, step, hp, rotated, S, recovery, backend, lr,
+                weight_decay, param, out_dtype) -> MatrixStepOut:
+    """Single-pass hot-path schedule (one read of G per pass, final-dtype
+    write):
+
+        project_colnorms     Gt = S^T G  (+ ||G_:,j||^2 byproduct)
+        adam_lowrank_norms   M', V', Gto (+ ||Gt_:,j||^2, ||Gto_:,j||^2)
+        fused_update         upd = -lr*scale*(S Gto + (G - S Gt) phi clip)
+
+    The Eq. 12 clip scalar is known *before* the epilogue runs via the
+    exact identity (S orthonormal):
+
+        ||Lam||^2 = sum_j phi_j^2 (||G_:,j||^2 - ||Gt_:,j||^2)
+
+    so the (m, n) residual is never materialized and the epilogue's output
+    is the final parameter-dtype update.
+    """
+    Gt, gsq = backend.project_colnorms(S, G)
+    M_prev, V_prev = (st.M, st.V) if rotated is None else rotated
+    M, V, Gto, gtsq, gtosq = backend.adam_lowrank_norms(
+        Gt, M_prev, V_prev, step, beta1=hp.beta1, beta2=hp.beta2,
+        eps=hp.eps, bias_correction=hp.bias_correction)
+
+    coef = lr * hp.scale
+    wd_param = param if (weight_decay and param is not None) else None
+    wd_coef = lr * weight_decay if wd_param is not None else None
+
+    if recovery:
+        # phi_i = ||G~^O_{:,i}|| / ||G~_{:,i}||  (Eq. 11; columns over r),
+        # zeroed where the column's residual energy sits below the fp32
+        # cancellation floor (see _RESID_REL_FLOOR).
+        resid_sq = jnp.maximum(gsq - gtsq, 0.0)
+        keep = (resid_sq > _RESID_REL_FLOOR * gsq).astype(jnp.float32)
+        phi = keep * jnp.sqrt(gtosq) / jnp.maximum(jnp.sqrt(gtsq), _TINY)
+        lam_sq = jnp.sum(phi * phi * resid_sq)
+        lam_norm = jnp.sqrt(lam_sq)
+        clip, lam_new = _limiter(lam_norm, st.lam_prev, hp.zeta)
+        upd = backend.fused_update(G, S, Gt, Gto, phi, coef, clip,
+                                   out_dtype=out_dtype, param=wd_param,
+                                   wd_coef=wd_coef)
+    else:
+        lam_new = st.lam_prev
+        upd = backend.fused_update(None, S, None, Gto, None, coef,
+                                   jnp.float32(1.0), out_dtype=out_dtype,
+                                   param=wd_param, wd_coef=wd_coef)
+    return MatrixStepOut(delta=upd,
+                         state=MatrixOptState(S=S, M=M, V=V,
+                                              lam_prev=lam_new))
 
 
 def lowrank_adam_step(
@@ -140,6 +217,10 @@ def lowrank_adam_step(
     recovery: bool = True,
     precomputed_proj: Optional[Array] = None,
     backend=None,
+    lr: Optional[Array] = None,
+    weight_decay: float = 0.0,
+    param: Optional[Array] = None,
+    out_dtype=None,
 ) -> MatrixStepOut:
     """One Alg. 1 iteration for a single matrix.
 
@@ -148,14 +229,29 @@ def lowrank_adam_step(
     (Eq. 6-7) apply on the stored moments.  ``precomputed_proj`` lets the
     tracking path reuse ``A = S_old^T G`` when S did not change (GaLore-style
     refresh reuses nothing; SubTrack++ plain steps reuse nothing either —
-    the projection must use the *current* basis).
+    the projection must use the *current* basis; the fused backend path
+    ignores it because the projection pass also harvests column norms).
 
-    Returns the descent direction ``delta`` such that the weight update is
-    ``W <- W - lr * delta`` (learning rate, weight decay and global clipping
-    are applied by the pytree-level optimizer).
+    With ``lr=None`` (legacy contract) returns the fp32 descent direction
+    ``delta`` such that the weight update is ``W <- W - lr * delta``.
+    With ``lr`` given, returns the *final-dtype* update to be added to the
+    parameter directly — learning rate, ``hp.scale``, recovery clip and
+    optional decoupled weight decay all folded in, so the pytree layer
+    performs no further (m, n)-sized pass.  When ``backend`` is also set
+    this runs the fused single-pass schedule (see :func:`_fused_step`).
     """
-    G = G.astype(jnp.float32)
     S = st.S if S_new is None else S_new
+    out_dtype = out_dtype or jnp.float32
+
+    if backend is not None and lr is not None:
+        # no fp32 upcast here: the kernels (and their ref fallbacks) cast
+        # per tile, so a bf16 gradient streams at 2 bytes/elem instead of
+        # materializing an (m, n) fp32 copy first (the traffic model in
+        # repro.kernels.traffic charges G reads at the gradient dtype).
+        return _fused_step(G, st, step, hp, rotated, S, recovery, backend,
+                           lr, weight_decay, param, out_dtype)
+
+    G = G.astype(jnp.float32)
 
     if precomputed_proj is not None:
         Gt = precomputed_proj
@@ -193,19 +289,19 @@ def lowrank_adam_step(
             resid = G - S @ Gt                        # (m, n) orthogonal component
             Lam = resid * phi[None, :]
         lam_norm = jnp.linalg.norm(Lam)
-        # Eq. 12 growth limiter; inactive until lam_prev is populated.
-        limit = hp.zeta * st.lam_prev
-        do_clip = (st.lam_prev > 0.0) & (lam_norm > limit)
-        scale = jnp.where(do_clip, limit / jnp.maximum(lam_norm, _TINY), 1.0)
+        scale, lam_new = _limiter(lam_norm, st.lam_prev, hp.zeta)
         Lam = Lam * scale
-        lam_new = jnp.where(st.lam_prev > 0.0,
-                            jnp.minimum(lam_norm, limit), lam_norm)
         delta = hp.scale * (Ghat + Lam)
     else:
         delta = hp.scale * Ghat
 
-    return MatrixStepOut(delta=delta,
-                         state=MatrixOptState(S=S, M=M, V=V, lam_prev=lam_new))
+    new_state = MatrixOptState(S=S, M=M, V=V, lam_prev=lam_new)
+    if lr is None:
+        return MatrixStepOut(delta=delta, state=new_state)
+    upd = -lr * delta
+    if weight_decay and param is not None:
+        upd = upd - lr * weight_decay * param.astype(jnp.float32)
+    return MatrixStepOut(delta=upd.astype(out_dtype), state=new_state)
 
 
 # ---------------------------------------------------------------------------

@@ -135,6 +135,42 @@ def map_rank(fn, batch_dims: int, total_elems: int):
     return mapped
 
 
+# ---------------------------------------------------------------------------
+# Bucketed leaf execution: leaves with identical canonical (m, n, rank) and
+# parameter dtype are stacked along one leading axis and run through a single
+# vmapped optimizer-step launch, instead of one kernel dispatch per leaf.
+# ---------------------------------------------------------------------------
+
+
+def bucket_key(plan: ParamPlan, param_dtype) -> tuple:
+    """Leaves sharing this key can execute as one stacked batch."""
+    return (plan.m, plan.n, plan.rank, jax.numpy.dtype(param_dtype).name)
+
+
+def matrix_count(plan: ParamPlan, shape: tuple[int, ...]) -> int:
+    """Number of independent (m, n) matrices a leaf contributes."""
+    if plan.batch_dims == 0:
+        return 1
+    return int(np.prod(shape[: plan.batch_dims]))
+
+
+def flatten_stack(x: jax.Array, batch_dims: int) -> jax.Array:
+    """Collapse all leading stack dims into one (introducing it if absent):
+    (L, E, m, n) -> (L*E, m, n);  (m, n) -> (1, m, n);  () lam -> (1,)."""
+    if batch_dims == 0:
+        return x[None]
+    lead = int(np.prod(x.shape[:batch_dims]))
+    return x.reshape((lead,) + x.shape[batch_dims:])
+
+
+def unflatten_stack(x: jax.Array, batch_dims: int,
+                    lead_shape: tuple[int, ...]) -> jax.Array:
+    """Inverse of :func:`flatten_stack`."""
+    if batch_dims == 0:
+        return x[0]
+    return x.reshape(tuple(lead_shape) + x.shape[1:])
+
+
 def state_bytes(plan: ParamPlan, shape: tuple[int, ...]) -> int:
     """fp32 optimizer-state bytes this leaf costs (paper Table 2 accounting)."""
     if plan.mode == "dense":

@@ -39,6 +39,7 @@ from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import plan as plan_lib
 from repro.core import subspace as sub
@@ -74,7 +75,15 @@ class LowRankConfig:
     power_iters: int = 24
     exact_top1: bool = False            # eigh instead of power iteration
     reorth_interval: int = 0            # QR scrub every N subspace updates (0=off)
-    use_kernels: bool = False           # Pallas kernels for project/backproject/recovery
+    use_kernels: bool = False           # Pallas kernels (fused single-pass hot path)
+    # Stack same-(m, n, rank) leaves into one vmapped launch per step instead
+    # of one dispatch per leaf.  None (default) = auto: enabled only on
+    # single-device runs.  On a sharded mesh the flatten + concatenate can
+    # force GSPMD to reshard differently-laid-out leaves into a common
+    # layout every step (cf. the refuted lax.map experiment in plan.py —
+    # a measured 10x memory blow-up on sharded expert banks), so
+    # multi-device runs must opt in explicitly with True.
+    bucket_leaves: Optional[bool] = None
     osd_lr: float = 1e-2                # Oja step size for method="osd"
     adam: AdamHP = field(default_factory=AdamHP)
     weight_decay: float = 0.0
@@ -110,9 +119,12 @@ def _get_backend(cfg: LowRankConfig):
 
 
 def _plain_matrix_step(cfg: LowRankConfig, hp: AdamHP, G: Array,
-                       st: MatrixOptState, step: Array):
+                       st: MatrixOptState, step: Array, lr: Array,
+                       param: Optional[Array], out_dtype):
     out = lowrank_adam_step(G, st, step, hp, recovery=cfg.recovery,
-                            backend=_get_backend(cfg))
+                            backend=_get_backend(cfg), lr=lr,
+                            weight_decay=cfg.weight_decay, param=param,
+                            out_dtype=out_dtype)
     return out.delta, out.state
 
 
@@ -152,7 +164,8 @@ def _refresh_subspace(cfg: LowRankConfig, G: Array, st: MatrixOptState,
 
 
 def _tracking_matrix_step(cfg: LowRankConfig, hp: AdamHP, G: Array,
-                          st: MatrixOptState, step: Array, n_updates: Array):
+                          st: MatrixOptState, step: Array, n_updates: Array,
+                          lr: Array, param: Optional[Array], out_dtype):
     G32 = G.astype(jnp.float32)
     S_new, rank1_info = _refresh_subspace(cfg, G32, st, step, n_updates)
 
@@ -166,7 +179,9 @@ def _tracking_matrix_step(cfg: LowRankConfig, hp: AdamHP, G: Array,
             rotated = rotate_moments_dense(Q, st.M, st.V, step, hp)
 
     out = lowrank_adam_step(G32, st, step, hp, rotated=rotated, S_new=S_new,
-                            recovery=cfg.recovery, backend=_get_backend(cfg))
+                            recovery=cfg.recovery, backend=_get_backend(cfg),
+                            lr=lr, weight_decay=cfg.weight_decay, param=param,
+                            out_dtype=out_dtype)
     return out.delta, out.state
 
 
@@ -226,45 +241,131 @@ def lowrank_optimizer(cfg: LowRankConfig) -> GradientTransform:
 
     def update(grads, state: OptState, params, lr,
                do_subspace_update: bool = False):
-        """Returns (updates, new_state); updates are added to params."""
+        """Returns (updates, new_state); updates are added to params.
+
+        Low-rank leaves emit the *final-dtype* update directly from the
+        matrix step (lr, hp.scale, recovery clip and weight decay folded
+        in — no pytree-level (m, n) pass), and leaves with identical
+        canonical (m, n, rank) and parameter dtype are stacked into one
+        vmapped launch per step (``cfg.bucket_leaves``).
+        """
         plans = plan_lib.make_plans(grads, cfg.rank)
         step = state.step
         n_upd = state.n_updates
+        lr32 = jnp.asarray(lr, jnp.float32)
+        bucket = (cfg.bucket_leaves if cfg.bucket_leaves is not None
+                  else jax.device_count() == 1)
 
-        def leaf(plan, g, st, p):
-            if plan.mode == "dense":
-                delta, new_st = dense_adam_step(g, st, step, hp)
+        def matrix_fn(out_dtype):
+            """Per-(m, n)-matrix step closure; ``p`` is threaded only when
+            weight decay needs it (it is DCE'd otherwise)."""
+            if do_subspace_update:
+                def base(G, s, p=None):
+                    return _tracking_matrix_step(cfg, hp, G, s, step, n_upd,
+                                                 lr32, p, out_dtype)
             else:
-                g2 = plan_lib.canonical_grad(g, plan)
-                # total stacked element count drives vmap vs batched lax.map
-                import numpy as _np
-                total_elems = int(_np.prod(g2.shape))
-                if do_subspace_update:
-                    base = functools.partial(_tracking_matrix_step, cfg, hp)
-                    fn = plan_lib.map_rank(
-                        lambda G, s, _f=base: _f(G, s, step, n_upd),
-                        plan.batch_dims, total_elems)
-                else:
-                    base = functools.partial(_plain_matrix_step, cfg, hp)
-                    fn = plan_lib.map_rank(
-                        lambda G, s, _f=base: _f(G, s, step),
-                        plan.batch_dims, total_elems)
-                delta, new_st = fn(g2, st)
-                delta = plan_lib.uncanonical_update(delta, plan)
-            upd = (-lr * delta).astype(p.dtype)
+                def base(G, s, p=None):
+                    return _plain_matrix_step(cfg, hp, G, s, step, lr32, p,
+                                              out_dtype)
+            return base
+
+        def run_stacked(g2, st, p2, batch_dims, out_dtype):
+            """Run the matrix step over a (possibly stacked) canonical
+            gradient; returns (delta_stacked, new_state_stacked)."""
+            total_elems = int(np.prod(g2.shape))
+            base = matrix_fn(out_dtype)
             if cfg.weight_decay:
-                upd = upd - (lr * cfg.weight_decay * p.astype(jnp.float32)
-                             ).astype(p.dtype)
-            return upd, new_st
+                fn = plan_lib.map_rank(lambda G, s, p: base(G, s, p),
+                                       batch_dims, total_elems)
+                return fn(g2, st, p2)
+            fn = plan_lib.map_rank(lambda G, s: base(G, s),
+                                   batch_dims, total_elems)
+            return fn(g2, st)
+
+        def leaf_single(plan, g, st, p):
+            """Unbucketed path: one launch for one leaf (original layout —
+            no extra reshapes, so sharded stacks keep their layout)."""
+            g2 = plan_lib.canonical_grad(g, plan)
+            p2 = plan_lib.canonical_grad(p, plan) if cfg.weight_decay else None
+            delta, new_st = run_stacked(g2, st, p2, plan.batch_dims, p.dtype)
+            return plan_lib.uncanonical_update(delta, plan), new_st
 
         is_plan = lambda x: isinstance(x, plan_lib.ParamPlan)  # noqa: E731
-        flat = jax.tree.map(leaf, plans, grads, state.inner, params,
-                            is_leaf=is_plan)
-        # unzip the per-leaf (update, new_state) tuples at the plan treedef
         treedef = jax.tree.structure(plans, is_leaf=is_plan)
-        pairs = treedef.flatten_up_to(flat)
-        updates = jax.tree.unflatten(treedef, [p[0] for p in pairs])
-        new_inner = jax.tree.unflatten(treedef, [p[1] for p in pairs])
+        plan_leaves = treedef.flatten_up_to(plans)
+        grad_leaves = treedef.flatten_up_to(grads)
+        state_leaves = treedef.flatten_up_to(state.inner)
+        param_leaves = treedef.flatten_up_to(params)
+
+        updates_out: list = [None] * len(plan_leaves)
+        states_out: list = [None] * len(plan_leaves)
+
+        # group low-rank leaves into same-(m, n, rank, dtype) buckets
+        buckets: dict[tuple, list[int]] = {}
+        for i, plan in enumerate(plan_leaves):
+            if plan.mode == "dense":
+                delta, new_st = dense_adam_step(grad_leaves[i],
+                                                state_leaves[i], step, hp)
+                p = param_leaves[i]
+                upd = (-lr32 * delta).astype(p.dtype)
+                if cfg.weight_decay:
+                    upd = upd - (lr32 * cfg.weight_decay
+                                 * p.astype(jnp.float32)).astype(p.dtype)
+                updates_out[i], states_out[i] = upd, new_st
+            else:
+                key = plan_lib.bucket_key(plan, param_leaves[i].dtype)
+                buckets.setdefault(key, []).append(i)
+
+        for key, idxs in buckets.items():
+            if not bucket or len(idxs) == 1:
+                for i in idxs:
+                    updates_out[i], states_out[i] = leaf_single(
+                        plan_leaves[i], grad_leaves[i], state_leaves[i],
+                        param_leaves[i])
+                continue
+
+            # stack every member's matrices along one leading axis
+            sizes, g_parts, p_parts, st_parts = [], [], [], []
+            for i in idxs:
+                plan = plan_leaves[i]
+                g2 = plan_lib.canonical_grad(grad_leaves[i], plan)
+                sizes.append(plan_lib.matrix_count(plan, g2.shape))
+                g_parts.append(plan_lib.flatten_stack(g2, plan.batch_dims))
+                if cfg.weight_decay:
+                    p2 = plan_lib.canonical_grad(param_leaves[i], plan)
+                    p_parts.append(plan_lib.flatten_stack(p2,
+                                                          plan.batch_dims))
+                st_parts.append(jax.tree.map(
+                    lambda a, bd=plan.batch_dims: plan_lib.flatten_stack(
+                        a, bd), state_leaves[i]))
+
+            g_all = jnp.concatenate(g_parts, axis=0)
+            p_all = jnp.concatenate(p_parts, axis=0) if cfg.weight_decay \
+                else None
+            st_all = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                                  *st_parts)
+            delta_all, st_new_all = run_stacked(
+                g_all, st_all, p_all, 1, param_leaves[idxs[0]].dtype)
+
+            # split back to leaves and restore each one's stack layout
+            splits = list(np.cumsum(sizes)[:-1])
+            delta_split = jnp.split(delta_all, splits, axis=0)
+            st_flat, st_def = jax.tree.flatten(st_new_all)
+            st_pieces = [jnp.split(f, splits, axis=0) for f in st_flat]
+            st_split = [jax.tree.unflatten(st_def, [p[k] for p in st_pieces])
+                        for k in range(len(idxs))]
+            for k, i in enumerate(idxs):
+                plan = plan_leaves[i]
+                lead = grad_leaves[i].shape[:plan.batch_dims]
+                delta = plan_lib.unflatten_stack(delta_split[k],
+                                                 plan.batch_dims, lead)
+                updates_out[i] = plan_lib.uncanonical_update(delta, plan)
+                states_out[i] = jax.tree.map(
+                    lambda a, bd=plan.batch_dims, ls=lead:
+                        plan_lib.unflatten_stack(a, bd, ls), st_split[k])
+
+        updates = jax.tree.unflatten(treedef, updates_out)
+        new_inner = jax.tree.unflatten(treedef, states_out)
         return updates, OptState(
             step=step + 1,
             n_updates=n_upd + (1 if do_subspace_update else 0),

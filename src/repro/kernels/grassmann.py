@@ -6,12 +6,35 @@ stream, so the kernels are tiled to read G exactly once per pass with
 fp32 MXU accumulation in VMEM:
 
     project   A = S^T G                 (one read of G, A accumulated)
+    project_colnorms                    (same pass also emits ||G_:,j||^2)
     tangent   T = -2 G A^T + 2 S (A A^T)  (fused: the (m,n) residual R is
                                            never materialized — 2mn HBM
                                            bytes saved vs the paper-literal
                                            3-pass schedule)
     recovery  Lam = (G - S G~) * phi     (residual + column scale fused)
     backproject  Ghat = S G~^O           (plain tiled matmul)
+    adam_lowrank[_norms]                 (moments + direction in one (r, n)
+                                          pass; _norms also emits the Gt/Gto
+                                          column norms that feed phi)
+    fused_update  upd = -coef (S Gto + (G - S Gt) phi clip)
+                                         (the whole k-1-of-k hot-path
+                                          epilogue in one pass over G,
+                                          written in the parameter dtype)
+
+Hot-path HBM traffic accounting (per matrix per non-tracking step, mn
+terms only; r << m so the (r, n) state traffic is secondary — the full
+model lives in repro.kernels.traffic):
+
+    unfused (seed schedule): ~7-8 x mn fp32 — project reads G; backproject
+    writes Ghat; recovery re-reads G and writes Lam; ||Lam|| re-reads Lam;
+    the Ghat + Lam combine reads both; the pytree layer's -lr*delta scale
+    + param-dtype cast moves mn once more.
+
+    fused (this schedule): project_colnorms reads G once,
+    adam_lowrank_norms stays in (r, n), and fused_update reads G once and
+    writes the final-dtype update once — ~2 x mn reads + 1 x mn write,
+    with the Eq. 12 clip scalar known *before* the epilogue thanks to the
+    exact identity ||Lam||^2 = sum_j phi_j^2 (||G_:,j||^2 - ||Gt_:,j||^2).
 
 Block shapes are MXU-aligned (multiples of 128 on the minor dims) and
 sized for ~1-2 MB VMEM residency per operand tile.  All kernels run in
@@ -163,6 +186,142 @@ def recovery(G: Array, S: Array, Gt: Array, phi: Array, *,
     )(G, S, Gt, phi2)
 
 
+def _project_colnorms_kernel(s_ref, g_ref, a_ref, sq_ref):
+    """grid = (n/bn, m/bm); accumulate A and per-column ||G||^2 over m."""
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        a_ref[...] = jnp.zeros_like(a_ref)
+        sq_ref[...] = jnp.zeros_like(sq_ref)
+
+    s = s_ref[...].astype(jnp.float32)              # (bm, r)
+    g = g_ref[...].astype(jnp.float32)              # (bm, bn)
+    a_ref[...] += jnp.dot(s.T, g, preferred_element_type=jnp.float32)
+    sq_ref[...] += jnp.sum(g * g, axis=0, keepdims=True)
+
+
+def project_colnorms(S: Array, G: Array, *, bm: int = BM, bn: int = BN,
+                     interpret: bool = False) -> tuple[Array, Array]:
+    """A = S^T G plus the per-column squared norms ||G_:,j||^2 as a free
+    byproduct of the same single pass over G.  The norms feed the O(n)
+    closed form of ||Lam|| (Eq. 12) so the recovery-growth clip scalar is
+    known before the fused epilogue runs — the (m, n) residual is never
+    materialized just to take its norm.
+
+    S: (m, r); G: (m, n) -> ((r, n) fp32, (n,) fp32).
+    """
+    m, r = S.shape
+    _, n = G.shape
+    bm, bn = min(bm, m), min(bn, n)
+    A, sq = pl.pallas_call(
+        _project_colnorms_kernel,
+        grid=(n // bn, m // bm),
+        in_specs=[
+            pl.BlockSpec((bm, r), lambda j, i: (i, 0)),
+            pl.BlockSpec((bm, bn), lambda j, i: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((r, bn), lambda j, i: (0, j)),
+            pl.BlockSpec((1, bn), lambda j, i: (0, j)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((r, n), jnp.float32),
+                   jax.ShapeDtypeStruct((1, n), jnp.float32)],
+        interpret=interpret,
+    )(S, G)
+    return A, sq.reshape(n)
+
+
+def _fused_update_kernel(*refs, recovery: bool, decay: bool):
+    """One tile of  upd = -coef (S Gto + (G - S Gt) * phi * clip) [- wd p].
+
+    The only pass that touches (m, n) data besides project: reads the G
+    tile once, runs both (bm, r) x (r, bn) MXU contractions against the
+    in-VMEM panels, applies the recovery epilogue element-wise and writes
+    the final update directly in the parameter dtype.
+    """
+    if recovery:
+        g_ref, s_ref, gt_ref, gto_ref, phi_ref, sc_ref = refs[:6]
+        rest = refs[6:]
+    else:
+        s_ref, gto_ref, sc_ref = refs[:3]
+        rest = refs[3:]
+    if decay:
+        p_ref, out_ref = rest
+    else:
+        (out_ref,) = rest
+
+    s = s_ref[...].astype(jnp.float32)              # (bm, r)
+    gto = gto_ref[...].astype(jnp.float32)          # (r, bn)
+    coef = sc_ref[0, 0]                             # lr * hp.scale
+    acc = jnp.dot(s, gto, preferred_element_type=jnp.float32)
+    if recovery:
+        g = g_ref[...].astype(jnp.float32)          # (bm, bn)
+        gt = gt_ref[...].astype(jnp.float32)        # (r, bn)
+        phi = phi_ref[...].astype(jnp.float32)      # (1, bn)
+        clip = sc_ref[0, 1]                         # Eq. 12 limiter scale
+        sgt = jnp.dot(s, gt, preferred_element_type=jnp.float32)
+        acc = acc + (g - sgt) * (phi * clip)
+    upd = -coef * acc
+    if decay:
+        upd = upd - sc_ref[0, 2] * p_ref[...].astype(jnp.float32)
+    out_ref[...] = upd.astype(out_ref.dtype)
+
+
+def fused_update(G: Array | None, S: Array, Gt: Array | None, Gto: Array,
+                 phi: Array | None, coef: Array, clip: Array, *,
+                 out_dtype=None, param: Array | None = None,
+                 wd_coef: Array | None = None,
+                 bm: int = BM, bn: int = BN,
+                 interpret: bool = False) -> Array:
+    """The fused hot-path epilogue: back-projection, recovery residual,
+    column scaling, Eq. 12 clip, lr scaling and the final-dtype cast in a
+    single pass over G.  Replaces backproject + recovery + (Ghat + Lam)
+    combine + (-lr * delta).astype(...) — ~3 x mn reads and ~3 x mn
+    writes saved per matrix per step.
+
+    Pass ``G=None`` (with Gt/phi None) for the no-recovery variant
+    ``upd = -coef S Gto`` which never touches G at all.  ``param`` +
+    ``wd_coef`` fold decoupled weight decay into the same write.
+    """
+    recovery = G is not None
+    decay = param is not None
+    m, r = S.shape
+    n = Gto.shape[1]
+    bm, bn = min(bm, m), min(bn, n)
+    wd = (jnp.zeros((), jnp.float32) if wd_coef is None
+          else jnp.asarray(wd_coef, jnp.float32))
+    scalars = jnp.stack([jnp.asarray(coef, jnp.float32),
+                         jnp.asarray(clip, jnp.float32), wd]).reshape(1, 3)
+    out_dtype = out_dtype or jnp.float32
+
+    s_spec = pl.BlockSpec((bm, r), lambda i, j: (i, 0))
+    rn_spec = pl.BlockSpec((r, bn), lambda i, j: (0, j))
+    mn_spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    sc_spec = pl.BlockSpec((1, 3), lambda i, j: (0, 0))
+
+    if recovery:
+        inputs = [G, S, Gt, Gto, phi.reshape(1, n), scalars]
+        in_specs = [mn_spec, s_spec, rn_spec, rn_spec,
+                    pl.BlockSpec((1, bn), lambda i, j: (0, j)), sc_spec]
+    else:
+        inputs = [S, Gto, scalars]
+        in_specs = [s_spec, rn_spec, sc_spec]
+    if decay:
+        inputs.append(param)
+        in_specs.append(mn_spec)
+
+    kernel = functools.partial(_fused_update_kernel, recovery=recovery,
+                               decay=decay)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn),
+        in_specs=in_specs,
+        out_specs=mn_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        interpret=interpret,
+    )(*inputs)
+
+
 def _adam_kernel(gt_ref, m_ref, v_ref, sc_ref, m_out, v_out, o_out,
                  *, beta1: float, beta2: float, eps: float):
     gt = gt_ref[...].astype(jnp.float32)
@@ -207,3 +366,66 @@ def adam_lowrank(Gt: Array, M: Array, V: Array, step: Array, *,
         out_shape=[out_sds, out_sds, out_sds],
         interpret=interpret,
     )(Gt, M, V, scalars)
+
+
+def _adam_norms_kernel(gt_ref, m_ref, v_ref, sc_ref, m_out, v_out, o_out,
+                       gtsq_out, gtosq_out, *, beta1: float, beta2: float,
+                       eps: float):
+    """grid = (n/bn, r/br); r is the accumulation (minor) axis for the
+    per-column norm outputs, everything else is visited once."""
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        gtsq_out[...] = jnp.zeros_like(gtsq_out)
+        gtosq_out[...] = jnp.zeros_like(gtosq_out)
+
+    gt = gt_ref[...].astype(jnp.float32)
+    m = m_ref[...]
+    v = v_ref[...]
+    m1 = beta1 * m + (1.0 - beta1) * gt
+    v1 = beta2 * v + (1.0 - beta2) * gt * gt
+    o = (m1 * sc_ref[0, 0]) / (jnp.sqrt(v1 * sc_ref[0, 1]) + eps)
+    m_out[...] = m1
+    v_out[...] = v1
+    o_out[...] = o
+    gtsq_out[...] += jnp.sum(gt * gt, axis=0, keepdims=True)
+    gtosq_out[...] += jnp.sum(o * o, axis=0, keepdims=True)
+
+
+def adam_lowrank_norms(Gt: Array, M: Array, V: Array, step: Array, *,
+                       beta1: float = 0.9, beta2: float = 0.999,
+                       eps: float = 1e-8, bias_correction: bool = True,
+                       br: int = 128, bn: int = 512,
+                       interpret: bool = False
+                       ) -> tuple[Array, Array, Array, Array, Array]:
+    """``adam_lowrank`` that additionally emits the per-column squared
+    norms ||Gt_:,j||^2 and ||Gto_:,j||^2 in the same (r, n) pass — exactly
+    the quantities the recovery scaling phi (Eq. 11) and the closed-form
+    ||Lam|| (Eq. 12) need, so neither costs an extra read of the states.
+
+    Returns (M', V', Gto, gt_sq (n,), gto_sq (n,)).
+    """
+    r, n = Gt.shape
+    br, bn = min(br, r), min(bn, n)
+    t = step.astype(jnp.float32) + 1.0
+    if bias_correction:
+        scalars = jnp.stack([1.0 / (1.0 - beta1 ** t),
+                             1.0 / (1.0 - beta2 ** t)]).reshape(1, 2)
+    else:
+        scalars = jnp.ones((1, 2), jnp.float32)
+    kernel = functools.partial(_adam_norms_kernel, beta1=beta1, beta2=beta2,
+                               eps=eps)
+    rn_sds = jax.ShapeDtypeStruct((r, n), jnp.float32)
+    n_sds = jax.ShapeDtypeStruct((1, n), jnp.float32)
+    rn_spec = pl.BlockSpec((br, bn), lambda j, i: (i, j))
+    n_spec = pl.BlockSpec((1, bn), lambda j, i: (0, j))
+    M1, V1, Gto, gtsq, gtosq = pl.pallas_call(
+        kernel,
+        grid=(n // bn, r // br),
+        in_specs=[rn_spec, rn_spec, rn_spec,
+                  pl.BlockSpec((1, 2), lambda j, i: (0, 0))],
+        out_specs=[rn_spec, rn_spec, rn_spec, n_spec, n_spec],
+        out_shape=[rn_sds, rn_sds, rn_sds, n_sds, n_sds],
+        interpret=interpret,
+    )(Gt, M, V, scalars)
+    return M1, V1, Gto, gtsq.reshape(n), gtosq.reshape(n)

@@ -1,7 +1,15 @@
 """Jit'd dispatch layer over the Pallas kernels.
 
-``repro.core.lowrank_adam`` calls these three entry points when the
-optimizer is built with ``use_kernels=True``:
+``repro.core.lowrank_adam`` calls these entry points when the optimizer
+is built with ``use_kernels=True``.  The fused hot path uses exactly
+three per non-tracking step:
+
+    project_colnorms(S, G)       -> ((r, n), (n,))  one read of G
+    adam_lowrank_norms(...)      -> (M', V', Gto, gt_sq, gto_sq)  (r, n) pass
+    fused_update(...)            -> (m, n) final-dtype update  one read of G
+
+The unfused building blocks remain for the tracking step and as
+baselines:
 
     project(S, G)           -> (r, n)
     backproject(S, X)       -> (m, n)
@@ -84,4 +92,46 @@ def adam_lowrank(Gt: Array, M: Array, V: Array, step: Array, *,
                                     bias_correction)
     return grassmann.adam_lowrank(Gt, M, V, step, beta1=beta1, beta2=beta2,
                                   eps=eps, bias_correction=bias_correction,
+                                  interpret=(mode == "interpret"))
+
+
+# --- fused hot-path entry points (single-pass update pipeline) -------------
+
+
+def project_colnorms(S: Array, G: Array) -> tuple[Array, Array]:
+    mode = _mode()
+    m, r = S.shape
+    n = G.shape[1]
+    if mode == "ref" or not _tiles_ok((m, grassmann.BM), (n, grassmann.BN)):
+        return ref.project_colnorms_ref(S, G)
+    return grassmann.project_colnorms(S, G, interpret=(mode == "interpret"))
+
+
+def adam_lowrank_norms(Gt: Array, M: Array, V: Array, step: Array, *,
+                       beta1: float = 0.9, beta2: float = 0.999,
+                       eps: float = 1e-8, bias_correction: bool = True):
+    mode = _mode()
+    r, n = Gt.shape
+    if mode == "ref" or not _tiles_ok((r, 128), (n, 512)):
+        return ref.adam_lowrank_norms_ref(Gt, M, V, step, beta1, beta2, eps,
+                                          bias_correction)
+    return grassmann.adam_lowrank_norms(
+        Gt, M, V, step, beta1=beta1, beta2=beta2, eps=eps,
+        bias_correction=bias_correction, interpret=(mode == "interpret"))
+
+
+def fused_update(G: Array | None, S: Array, Gt: Array | None, Gto: Array,
+                 phi: Array | None, coef: Array, clip: Array, *,
+                 out_dtype=None, param: Array | None = None,
+                 wd_coef: Array | None = None) -> Array:
+    mode = _mode()
+    m, r = S.shape
+    n = Gto.shape[1]
+    if mode == "ref" or not _tiles_ok((m, grassmann.BM), (n, grassmann.BN)):
+        return ref.fused_update_ref(G, S, Gt, Gto, phi, coef, clip,
+                                    out_dtype=out_dtype, param=param,
+                                    wd_coef=wd_coef)
+    return grassmann.fused_update(G, S, Gt, Gto, phi, coef, clip,
+                                  out_dtype=out_dtype, param=param,
+                                  wd_coef=wd_coef,
                                   interpret=(mode == "interpret"))

@@ -47,6 +47,35 @@ def recovery_ref(G: Array, S: Array, Gt: Array, phi: Array) -> Array:
     return resid * phi.astype(jnp.float32)[None, :]
 
 
+def project_colnorms_ref(S: Array, G: Array) -> tuple[Array, Array]:
+    """(A = S^T G, per-column ||G_:,j||^2).  -> ((r, n), (n,)) fp32."""
+    G32 = G.astype(jnp.float32)
+    return S.astype(jnp.float32).T @ G32, jnp.sum(G32 * G32, axis=0)
+
+
+def fused_update_ref(G: Array | None, S: Array, Gt: Array | None,
+                     Gto: Array, phi: Array | None, coef: Array,
+                     clip: Array, *, out_dtype=None,
+                     param: Array | None = None,
+                     wd_coef: Array | None = None) -> Array:
+    """Single-pass hot-path epilogue:
+
+        upd = -coef * (S Gto + (G - S Gt) * phi * clip)  [- wd_coef * param]
+
+    cast to ``out_dtype`` (the parameter dtype).  ``G=None`` selects the
+    no-recovery variant ``-coef * S Gto``.
+    """
+    S32 = S.astype(jnp.float32)
+    acc = S32 @ Gto.astype(jnp.float32)
+    if G is not None:
+        resid = G.astype(jnp.float32) - S32 @ Gt.astype(jnp.float32)
+        acc = acc + resid * (phi.astype(jnp.float32) * clip)[None, :]
+    upd = -coef * acc
+    if param is not None:
+        upd = upd - wd_coef * param.astype(jnp.float32)
+    return upd.astype(out_dtype or jnp.float32)
+
+
 def adam_lowrank_ref(Gt: Array, M: Array, V: Array, step: Array,
                      beta1: float, beta2: float, eps: float,
                      bias_correction: bool = True
@@ -65,3 +94,16 @@ def adam_lowrank_ref(Gt: Array, M: Array, V: Array, step: Array,
     else:
         mh, vh = M1, V1
     return M1, V1, mh / (jnp.sqrt(vh) + eps)
+
+
+def adam_lowrank_norms_ref(Gt: Array, M: Array, V: Array, step: Array,
+                           beta1: float, beta2: float, eps: float,
+                           bias_correction: bool = True
+                           ) -> tuple[Array, Array, Array, Array, Array]:
+    """``adam_lowrank_ref`` plus the per-column squared norms of Gt and
+    Gto — returns (M', V', Gto, gt_sq (n,), gto_sq (n,))."""
+    M1, V1, Gto = adam_lowrank_ref(Gt, M, V, step, beta1, beta2, eps,
+                                   bias_correction)
+    Gt32 = Gt.astype(jnp.float32)
+    return M1, V1, Gto, jnp.sum(Gt32 * Gt32, axis=0), jnp.sum(Gto * Gto,
+                                                              axis=0)

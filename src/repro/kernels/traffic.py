@@ -1,0 +1,102 @@
+"""Analytic HBM-traffic model for the optimizer hot path (the k-1-of-k
+non-tracking steps, which dominate SubTrack++'s wall time).
+
+Counts ideal bytes moved per matrix per step — every operand read once
+per pass it participates in, every result written once; VMEM-resident
+panel re-fetches inside a pass are not charged (standard roofline
+accounting, matching repro.distributed.hlo_analysis conventions).
+
+Two schedules over a (m, n) gradient with a rank-r subspace:
+
+``unfused`` — the seed schedule (separate project, moments, phi,
+backproject, recovery, ||Lam||, combine + lr-scale + cast passes).  The
+(m, n) stream is touched ~8x: G is read twice, Ghat and Lam are each
+written then re-read (Lam twice: once for its norm, once for the
+combine), and the final scale/cast pass writes the update.
+
+``fused`` — the single-pass pipeline (project_colnorms ->
+adam_lowrank_norms -> fused_update): G is read twice (projection pass +
+epilogue pass), the update is written once in the parameter dtype, and
+everything else stays in (r, n) or O(n).  The Eq. 12 clip scalar comes
+from the closed-form ||Lam||^2 = sum_j phi_j^2 (||G_:,j||^2 -
+||Gt_:,j||^2), so no (m, n) intermediate exists at all.
+
+All fp32 optimizer state; the gradient and parameter dtypes are
+configurable (bf16 training halves the G-read and update-write terms).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+F32 = 4
+
+
+@dataclass(frozen=True)
+class HotPathTraffic:
+    """Byte totals for one optimizer hot-path step over one matrix."""
+
+    schedule: str
+    mn_bytes: int        # traffic touching (m, n)-sized streams
+    rn_bytes: int        # traffic touching (r, n) state
+    mr_bytes: int        # S panel reads
+    n_bytes: int         # per-column vectors (phi, norms)
+
+    @property
+    def total(self) -> int:
+        return self.mn_bytes + self.rn_bytes + self.mr_bytes + self.n_bytes
+
+
+def unfused_step_bytes(m: int, n: int, r: int, *, grad_bytes: int = F32,
+                       param_bytes: int = F32) -> HotPathTraffic:
+    """Seed schedule: project -> moments -> phi -> backproject ->
+    recovery -> ||Lam|| -> (Ghat + Lam * clip) * -lr, cast.
+
+    The trailing combine/scale/cast is charged as one fused XLA pass
+    (2 mn reads + 1 write) — generous to the baseline."""
+    mn = (
+        2 * m * n * grad_bytes    # G read by project and by recovery
+        + m * n * F32             # Ghat write (backproject)
+        + m * n * F32             # Lam write (recovery)
+        + m * n * F32             # Lam read  (||Lam|| reduction)
+        + 2 * m * n * F32         # Ghat + Lam read (combine pass)
+        + m * n * param_bytes     # update write (lr-scale + cast)
+    )
+    rn = (
+        r * n * F32               # Gt write (project)
+        + 6 * r * n * F32         # moments: Gt, M, V read; M, V, Gto write
+        + 2 * r * n * F32         # phi: Gt, Gto column norms
+        + r * n * F32             # Gto read (backproject)
+        + r * n * F32             # Gt read (recovery)
+    )
+    mr = 3 * m * r * F32          # S read by project, backproject, recovery
+    nb = 2 * n * F32              # phi write + read
+    return HotPathTraffic("unfused", mn, rn, mr, nb)
+
+
+def fused_step_bytes(m: int, n: int, r: int, *, grad_bytes: int = F32,
+                     param_bytes: int = F32) -> HotPathTraffic:
+    """Fused pipeline: project_colnorms -> adam_lowrank_norms ->
+    fused_update.  ~2 x mn reads + 1 x mn final-dtype write."""
+    mn = (
+        2 * m * n * grad_bytes    # G read by project_colnorms and epilogue
+        + m * n * param_bytes     # update write (final dtype, once)
+    )
+    rn = (
+        r * n * F32               # Gt write (project_colnorms)
+        + 6 * r * n * F32         # adam_lowrank_norms: 3 reads + 3 writes
+        + 2 * r * n * F32         # Gt, Gto read (fused_update panels)
+    )
+    mr = 2 * m * r * F32          # S read by project_colnorms + epilogue
+    nb = 6 * n * F32              # gsq/gtsq/gtosq writes + phi write/read
+    return HotPathTraffic("fused", mn, rn, mr, nb)
+
+
+def traffic_ratio(m: int, n: int, r: int, *, grad_bytes: int = F32,
+                  param_bytes: int = F32) -> float:
+    """fused / unfused total-byte ratio (< 1 is a win; target <= 0.5)."""
+    fused = fused_step_bytes(m, n, r, grad_bytes=grad_bytes,
+                             param_bytes=param_bytes)
+    unfused = unfused_step_bytes(m, n, r, grad_bytes=grad_bytes,
+                                 param_bytes=param_bytes)
+    return fused.total / unfused.total

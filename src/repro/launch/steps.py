@@ -4,6 +4,12 @@ The train step is a single pure function over (TrainState, batch, lr):
 value_and_grad -> global-norm clip -> optimizer update -> apply.  The
 ``do_subspace_update`` flag is static (two compiled variants — see
 repro.core.subtrack); gradient accumulation microbatches via lax.scan.
+
+The low-rank optimizers emit updates already in the parameter dtype with
+lr/weight-decay folded in (the fused hot path under ``use_kernels`` writes
+them in a single pass over G — see repro.kernels.grassmann), so the apply
+below is a plain add; the ``astype`` is a no-op guard for baseline
+optimizers that still return fp32 updates.
 """
 
 from __future__ import annotations

@@ -124,6 +124,10 @@ def train(argv=None) -> dict:
         elif args.weight_decay:
             opt_kw = dict(weight_decay=args.weight_decay)
         optimizer = get_optimizer(args.optimizer, **opt_kw)
+        if args.use_kernels and "use_kernels" in opt_kw:
+            print("[train] optimizer hot path: fused single-pass kernels "
+                  "(project_colnorms -> adam_lowrank_norms -> fused_update)",
+                  flush=True)
 
         data = SyntheticLMDataset(DataConfig(
             vocab_size=cfg.vocab_size, seq_len=args.seq,

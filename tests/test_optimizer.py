@@ -161,25 +161,200 @@ class TestWarmStart:
         assert float(jnp.abs(S[0] - S[1]).max()) > 1e-3
 
 
+def _driven_updates(opt, params, grad_at, steps, lr=0.03, k=4):
+    """Run ``opt`` against an externally supplied gradient schedule and
+    collect the per-step updates.  Unlike a closed training loop, this
+    keeps the comparison well-conditioned: Adam's elementwise
+    normalization makes closed-loop trajectories chaotically sensitive to
+    fp-level arithmetic differences (any near-zero gradient entry turns a
+    1e-8 perturbation into an O(1) direction change), which would test
+    the problem's conditioning rather than the schedules' equivalence."""
+    state = opt.init(params)
+    state = opt.warm_start(state, grad_at(0))
+    upd = jax.jit(opt.update, static_argnames=("do_subspace_update",))
+    updates = []
+    for s in range(steps):
+        u, state = upd(grad_at(s), state, params, lr,
+                       do_subspace_update=(s > 0 and s % k == 0))
+        updates.append(u)
+    return updates, state
+
+
 class TestKernelBackend:
     def test_kernel_path_matches_reference_path(self, monkeypatch):
+        """Fused single-pass kernel schedule vs the unfused jnp reference,
+        per-step over a multi-step run with recovery + Eq. 12 clipping
+        active (growing gradient scale keeps the limiter engaged)."""
         monkeypatch.setenv("REPRO_FORCE_KERNELS", "1")
-        params, x, loss_fn = _toy()
         # 24x48 doesn't tile 256 blocks — use a tile-friendly param set
         key = jax.random.PRNGKey(9)
         params = {"w": 0.1 * jax.random.normal(key, (256, 512))}
-        x2 = jax.random.normal(jax.random.fold_in(key, 2), (8, 256))
 
-        def loss2(p, x):
-            return jnp.mean((x @ p["w"]) ** 2)
+        def grad_at(s):
+            return {"w": (1.0 + 0.3 * s) * jax.random.normal(
+                jax.random.fold_in(key, 100 + s), (256, 512))}
 
-        l_ref, p_ref, _ = _run(get_optimizer("subtrack", rank=64,
-                                             update_interval=4),
-                               params, x2, loss2, steps=10)
-        l_ker, p_ker, _ = _run(get_optimizer("subtrack", rank=64,
-                                             update_interval=4,
-                                             use_kernels=True),
-                               params, x2, loss2, steps=10)
-        np.testing.assert_allclose(l_ref, l_ker, rtol=1e-3)
-        np.testing.assert_allclose(p_ref["w"], p_ker["w"], rtol=1e-2,
-                                   atol=1e-4)
+        opt_ref = get_optimizer("subtrack", rank=64, update_interval=4)
+        opt_ker = get_optimizer("subtrack", rank=64, update_interval=4,
+                                use_kernels=True)
+        state = opt_ref.init(params)
+        state = opt_ref.warm_start(state, grad_at(0))
+        upd_ref = jax.jit(opt_ref.update,
+                          static_argnames=("do_subspace_update",))
+        upd_ker = jax.jit(opt_ker.update,
+                          static_argnames=("do_subspace_update",))
+        clipped = False
+        for s in range(20):
+            g = grad_at(s)
+            do = s > 0 and s % 4 == 0
+            # both schedules from the identical state: per-step equivalence
+            # along a real 20-step state trajectory (comparing freely
+            # co-evolving runs instead would measure fp32 ulp drift
+            # amplified by Adam's normalization, not the schedules)
+            u_ref, state_next = upd_ref(g, state, params, 0.03,
+                                        do_subspace_update=do)
+            u_ker, state_ker = upd_ker(g, state, params, 0.03,
+                                       do_subspace_update=do)
+            rel = float(jnp.max(jnp.abs(u_ref["w"] - u_ker["w"]))
+                        / (jnp.max(jnp.abs(u_ref["w"])) + 1e-12))
+            assert rel < 1e-5, (s, rel)
+            np.testing.assert_allclose(state_next.inner["w"].lam_prev,
+                                       state_ker.inner["w"].lam_prev,
+                                       rtol=1e-4)
+            lam = float(state.inner["w"].lam_prev)
+            clipped |= lam > 0 and float(
+                state_next.inner["w"].lam_prev) >= 0.99 * 1.01 * lam
+            state = state_next
+        # the Eq. 12 limiter actually engaged during the run
+        assert float(state.inner["w"].lam_prev) > 0
+        assert clipped
+
+    def test_fused_updates_are_final_dtype(self, monkeypatch):
+        """The fused path writes updates in the parameter dtype — the
+        pytree layer performs no further (m, n)-sized cast pass."""
+        monkeypatch.setenv("REPRO_FORCE_KERNELS", "1")
+        key = jax.random.PRNGKey(3)
+        params = {"w": 0.1 * jax.random.normal(key, (256, 512),
+                                               jnp.bfloat16)}
+        g = {"w": jax.random.normal(jax.random.fold_in(key, 1), (256, 512),
+                                    jnp.bfloat16)}
+        opt = get_optimizer("subtrack", rank=64, use_kernels=True)
+        state = opt.warm_start(opt.init(params), g)
+        u, _ = opt.update(g, state, params, 0.01)
+        assert u["w"].dtype == jnp.bfloat16
+
+    def test_degenerate_gradient_recovery_is_suppressed(self, monkeypatch):
+        """When the gradient lies entirely inside the subspace the true
+        residual is 0; the fused path's closed-form ||Lam|| must not feed
+        cancellation noise (amplified by phi) into the update."""
+        monkeypatch.setenv("REPRO_FORCE_KERNELS", "1")
+        key = jax.random.PRNGKey(9)
+        params = {"w": 0.1 * jax.random.normal(key, (256, 512))}
+        # rank-8 gradient (outer product of thin factors), rank-64 subspace
+        a = jax.random.normal(jax.random.fold_in(key, 1), (256, 8))
+        b = jax.random.normal(jax.random.fold_in(key, 2), (8, 512))
+
+        def grad_at(s):
+            return {"w": (1.0 + 0.1 * s) * (a @ b)}
+
+        us, st = _driven_updates(
+            get_optimizer("subtrack", rank=64, update_interval=4),
+            params, grad_at, steps=4)
+        us_k, st_k = _driven_updates(
+            get_optimizer("subtrack", rank=64, update_interval=4,
+                          use_kernels=True),
+            params, grad_at, steps=4)
+        # fused path: residual energy below the fp32 floor => Lam == 0
+        assert float(st_k.inner["w"].lam_prev) < 1e-3
+        for a_u, b_u in zip(us, us_k):
+            rel = float(jnp.max(jnp.abs(a_u["w"] - b_u["w"]))
+                        / (jnp.max(jnp.abs(a_u["w"])) + 1e-12))
+            assert rel < 1e-3  # noise-level Lam is the only difference
+
+
+class TestBucketedExecution:
+    """Leaves with identical canonical (m, n, rank) + dtype run as one
+    stacked vmapped launch; results must match per-leaf execution."""
+
+    def _params(self):
+        key = jax.random.PRNGKey(0)
+        return {
+            "w1": 0.3 * jax.random.normal(key, (32, 64)),
+            "w2": 0.3 * jax.random.normal(jax.random.fold_in(key, 1),
+                                          (32, 64)),
+            # transposed twin: canonicalizes into the same (32, 64) bucket
+            "wt": 0.3 * jax.random.normal(jax.random.fold_in(key, 2),
+                                          (64, 32)),
+            # stacked leaf joins the bucket with 3 matrices
+            "layers": 0.3 * jax.random.normal(jax.random.fold_in(key, 3),
+                                              (3, 32, 64)),
+            "b": jnp.zeros((64,)),
+        }
+
+    def _grad_at(self, params):
+        key = jax.random.PRNGKey(42)
+        # distinct stream per leaf *name* (not shape/size): same-shape
+        # bucket members must receive different gradients so a bucket
+        # split/reassembly permutation bug cannot cancel out
+        leaf_ids = {name: i for i, name in enumerate(sorted(params))}
+
+        def grad(s):
+            return {
+                name: (1.0 + 0.2 * s) * jax.random.normal(
+                    jax.random.fold_in(jax.random.fold_in(key, s),
+                                       leaf_ids[name]), a.shape)
+                for name, a in params.items()}
+
+        return grad
+
+    @pytest.mark.parametrize("use_kernels", [False, True])
+    @pytest.mark.parametrize("weight_decay", [0.0, 0.1])
+    def test_bucketed_matches_per_leaf(self, use_kernels, weight_decay,
+                                       monkeypatch):
+        if use_kernels:
+            monkeypatch.setenv("REPRO_FORCE_KERNELS", "1")
+        params = self._params()
+        grad_at = self._grad_at(params)
+        kw = dict(rank=8, update_interval=4, use_kernels=use_kernels,
+                  weight_decay=weight_decay)
+        us_b, st_b = _driven_updates(
+            lowrank_optimizer(LowRankConfig(bucket_leaves=True, **kw)),
+            params, grad_at, steps=9)
+        us_u, st_u = _driven_updates(
+            lowrank_optimizer(LowRankConfig(bucket_leaves=False, **kw)),
+            params, grad_at, steps=9)
+        for a, b in zip(us_b, us_u):
+            for k in a:
+                np.testing.assert_allclose(np.asarray(a[k]),
+                                           np.asarray(b[k]),
+                                           rtol=1e-6, atol=1e-8)
+        for k in ("w1", "wt", "layers"):
+            for f in range(4):  # S, M, V, lam_prev
+                np.testing.assert_allclose(np.asarray(st_b.inner[k][f]),
+                                           np.asarray(st_u.inner[k][f]),
+                                           rtol=1e-6, atol=1e-7)
+
+    def test_bucket_grouping(self):
+        """Same-(m, n, rank)+dtype leaves share a key; transposes fold in."""
+        p64 = plan_lib.plan_for_shape((32, 64), 8)
+        pt = plan_lib.plan_for_shape((64, 32), 8)
+        ps = plan_lib.plan_for_shape((3, 32, 64), 8)
+        other = plan_lib.plan_for_shape((48, 64), 8)
+        k = plan_lib.bucket_key(p64, jnp.float32)
+        assert plan_lib.bucket_key(pt, jnp.float32) == k
+        assert plan_lib.bucket_key(ps, jnp.float32) == k
+        assert plan_lib.bucket_key(other, jnp.float32) != k
+        assert plan_lib.bucket_key(p64, jnp.bfloat16) != k
+        assert plan_lib.matrix_count(ps, (3, 32, 64)) == 3
+        assert plan_lib.matrix_count(p64, (32, 64)) == 1
+
+    def test_flatten_unflatten_roundtrip(self):
+        x = jnp.arange(2 * 3 * 4 * 5.0).reshape(2, 3, 4, 5)
+        flat = plan_lib.flatten_stack(x, 2)
+        assert flat.shape == (6, 4, 5)
+        np.testing.assert_array_equal(
+            plan_lib.unflatten_stack(flat, 2, (2, 3)), x)
+        y = jnp.ones((4, 5))
+        assert plan_lib.flatten_stack(y, 0).shape == (1, 4, 5)
+        np.testing.assert_array_equal(
+            plan_lib.unflatten_stack(plan_lib.flatten_stack(y, 0), 0, ()), y)

@@ -14,7 +14,8 @@ from repro.distributed.context import MeshContext
 
 @pytest.fixture(scope="module")
 def ctx():
-    mesh = AbstractMesh((16, 16), ("data", "model"))
+    # JAX 0.4.37 API: AbstractMesh takes ((name, size), ...) pairs.
+    mesh = AbstractMesh((("data", 16), ("model", 16)))
     return MeshContext(mesh=mesh, batch_axes=("data",))
 
 
