@@ -152,28 +152,37 @@ def markdown_table(cells: list[Cell]) -> str:
 
 def hotpath_table(shapes=((1024, 2736, 256), (2048, 5461, 512),
                           (4096, 11008, 1024))) -> str:
-    """Optimizer hot-path HBM model at this roofline's bandwidth: the
-    per-matrix non-tracking step, unfused (seed) vs fused single-pass
-    schedule, and the projected memory-bound step time on one chip.
+    """Optimizer hot-path HBM model at this roofline's bandwidth: per
+    matrix, unfused (seed) vs fused single-pass schedule for both the
+    k-1-of-k plain step and the 1-of-k Grassmannian tracking step, plus
+    the projected memory-bound step time on one chip.
 
-    The paper's k-1-of-k plain steps are memory-bound at r << m, so
-    bytes / HBM_BW is the step-time model the fused pipeline attacks."""
-    from repro.kernels.traffic import fused_step_bytes, unfused_step_bytes
+    Both step kinds are memory-bound at r << m, so bytes / HBM_BW is the
+    step-time model the fused pipelines attack; with the tracking step
+    fused too, *every* optimizer step is on the single-pass schedule."""
+    from repro.kernels.traffic import (fused_step_bytes,
+                                      tracking_fused_step_bytes,
+                                      tracking_unfused_step_bytes,
+                                      unfused_step_bytes)
 
     lines = [
-        "\n### Optimizer hot-path traffic (per matrix per plain step, "
+        "\n### Optimizer hot-path traffic (per matrix per step, "
         "bf16 grads/params, fp32 state)\n",
-        "| m | n | r | unfused MB | fused MB | ratio | unfused us "
+        "| step | m | n | r | unfused MB | fused MB | ratio | unfused us "
         "@HBM | fused us @HBM |",
-        "|---|---|---|---|---|---|---|---|",
+        "|---|---|---|---|---|---|---|---|---|",
     ]
-    for (m, n, r) in shapes:
-        unf = unfused_step_bytes(m, n, r, grad_bytes=2, param_bytes=2)
-        fus = fused_step_bytes(m, n, r, grad_bytes=2, param_bytes=2)
-        lines.append(
-            f"| {m} | {n} | {r} | {unf.total/1e6:.1f} | "
-            f"{fus.total/1e6:.1f} | {fus.total/unf.total:.3f} | "
-            f"{unf.total/HBM_BW*1e6:.1f} | {fus.total/HBM_BW*1e6:.1f} |")
+    for kind, unf_fn, fus_fn in (
+            ("plain", unfused_step_bytes, fused_step_bytes),
+            ("tracking", tracking_unfused_step_bytes,
+             tracking_fused_step_bytes)):
+        for (m, n, r) in shapes:
+            unf = unf_fn(m, n, r, grad_bytes=2, param_bytes=2)
+            fus = fus_fn(m, n, r, grad_bytes=2, param_bytes=2)
+            lines.append(
+                f"| {kind} | {m} | {n} | {r} | {unf.total/1e6:.1f} | "
+                f"{fus.total/1e6:.1f} | {fus.total/unf.total:.3f} | "
+                f"{unf.total/HBM_BW*1e6:.1f} | {fus.total/HBM_BW*1e6:.1f} |")
     return "\n".join(lines)
 
 

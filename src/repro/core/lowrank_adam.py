@@ -157,7 +157,7 @@ def _limiter(lam_norm: Array, lam_prev: Array, zeta: float
 
 
 def _fused_step(G, st, step, hp, rotated, S, recovery, backend, lr,
-                weight_decay, param, out_dtype) -> MatrixStepOut:
+                weight_decay, param, out_dtype, gsq=None) -> MatrixStepOut:
     """Single-pass hot-path schedule (one read of G per pass, final-dtype
     write):
 
@@ -172,8 +172,16 @@ def _fused_step(G, st, step, hp, rotated, S, recovery, backend, lr,
 
     so the (m, n) residual is never materialized and the epilogue's output
     is the final parameter-dtype update.
+
+    The tracking step passes ``gsq`` (||G_:,j||^2 already harvested by its
+    ``project_tangent_colnorms`` launch — the norms are basis-independent),
+    in which case the projection onto the *new* basis runs through the
+    plain ``project`` kernel instead of recomputing them.
     """
-    Gt, gsq = backend.project_colnorms(S, G)
+    if gsq is None:
+        Gt, gsq = backend.project_colnorms(S, G)
+    else:
+        Gt = backend.project(S, G)
     M_prev, V_prev = (st.M, st.V) if rotated is None else rotated
     M, V, Gto, gtsq, gtosq = backend.adam_lowrank_norms(
         Gt, M_prev, V_prev, step, beta1=hp.beta1, beta2=hp.beta2,
@@ -221,6 +229,7 @@ def lowrank_adam_step(
     weight_decay: float = 0.0,
     param: Optional[Array] = None,
     out_dtype=None,
+    precomputed_gsq: Optional[Array] = None,
 ) -> MatrixStepOut:
     """One Alg. 1 iteration for a single matrix.
 
@@ -238,7 +247,9 @@ def lowrank_adam_step(
     parameter directly — learning rate, ``hp.scale``, recovery clip and
     optional decoupled weight decay all folded in, so the pytree layer
     performs no further (m, n)-sized pass.  When ``backend`` is also set
-    this runs the fused single-pass schedule (see :func:`_fused_step`).
+    this runs the fused single-pass schedule (see :func:`_fused_step`);
+    ``precomputed_gsq`` lets the fused tracking step hand down the
+    per-column ||G_:,j||^2 its subspace-update pass already produced.
     """
     S = st.S if S_new is None else S_new
     out_dtype = out_dtype or jnp.float32
@@ -249,7 +260,8 @@ def lowrank_adam_step(
         # materializing an (m, n) fp32 copy first (the traffic model in
         # repro.kernels.traffic charges G reads at the gradient dtype).
         return _fused_step(G, st, step, hp, rotated, S, recovery, backend,
-                           lr, weight_decay, param, out_dtype)
+                           lr, weight_decay, param, out_dtype,
+                           gsq=precomputed_gsq)
 
     G = G.astype(jnp.float32)
 

@@ -25,7 +25,7 @@ shapes, no host callbacks — so it runs inside pjit on a production mesh.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -243,6 +243,10 @@ class TrackResult(NamedTuple):
     A: Array              # (r, n) least-squares coefficients (= old-basis projection)
     cos_theta: Array      # () cos(sigma*eta) — used for the O(rn) rotation shortcut
     v: Array              # (r,) right singular vector of the tangent
+    gsq: Optional[Array] = None   # (n,) ||G_:,j||^2 — harvested by the fused
+    #                               backend pass; basis-independent, so it
+    #                               feeds the Eq. 12 clip even after the
+    #                               basis moves (None on the jnp path)
 
 
 def track_subspace(
@@ -253,6 +257,7 @@ def track_subspace(
     fused_tangent: bool = True,
     exact_top1: bool = False,
     power_iters: int = 24,
+    backend=None,
 ) -> TrackResult:
     """Grassmannian subspace-tracking update (SubTrack++ Alg. 1, update block).
 
@@ -265,10 +270,22 @@ def track_subspace(
     u ⟂ S_old).  Downstream projection-aware moment rotation can therefore
     run in O(rn) instead of O(m r^2 + r^2 n) — see
     :func:`repro.core.lowrank_adam.rotate_moments`.
+
+    With ``backend`` (:mod:`repro.kernels.ops`) set, the projection, the
+    per-column gradient norms and the tangent all come from ONE
+    ``project_tangent_colnorms`` launch — a single read of G instead of the
+    two jnp passes (project, then the fused tangent), and the gradient is
+    never upcast to an (m, n) fp32 copy (kernels cast per tile).  The
+    tangent is then always the residual-free fused form; ``fused_tangent``
+    only selects the schedule on the jnp path.
     """
-    G = G.astype(jnp.float32)
-    A = project(S, G)                                   # (r, n)
-    T = (tangent_fused if fused_tangent else tangent_naive)(S, G, A)
+    if backend is not None:
+        A, gsq, T = backend.project_tangent_colnorms(S, G)
+    else:
+        G = G.astype(jnp.float32)
+        A = project(S, G)                               # (r, n)
+        gsq = None
+        T = (tangent_fused if fused_tangent else tangent_naive)(S, G, A)
     triple = (top1_eigh if exact_top1 else functools.partial(
         top1_power, n_iter=power_iters))(T)
     # DESCENT: the geodesic must follow -grad F to *minimize* the estimation
@@ -281,7 +298,8 @@ def track_subspace(
     triple = stabilize_triple(S, triple)
     S_new = geodesic_step(S, triple, eta)
     return TrackResult(S_new=S_new, A=A,
-                       cos_theta=jnp.cos(triple.sigma * eta), v=triple.v)
+                       cos_theta=jnp.cos(triple.sigma * eta), v=triple.v,
+                       gsq=gsq)
 
 
 def stabilize_triple(S: Array, triple: Rank1Triple,

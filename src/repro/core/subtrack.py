@@ -129,59 +129,77 @@ def _plain_matrix_step(cfg: LowRankConfig, hp: AdamHP, G: Array,
 
 
 def _refresh_subspace(cfg: LowRankConfig, G: Array, st: MatrixOptState,
-                      step: Array, n_updates: Array):
+                      step: Array, n_updates: Array, backend=None):
     """Compute the new basis per the configured method.
 
-    Returns (S_new, rank1_info) where rank1_info is (cos_theta, v) for the
-    Grassmann method (enabling the O(rn) rotation) and None otherwise.
+    Returns (S_new, rank1_info, gsq): rank1_info is (cos_theta, v) for the
+    Grassmann method (enabling the O(rn) rotation) and None otherwise; gsq
+    is the per-column ||G_:,j||^2 harvested by the fused Grassmann backend
+    pass (basis-independent, reused by the Eq. 12 clip) and None otherwise.
     """
     rank = st.S.shape[-1]
     if cfg.method == "grassmann":
         res = sub.track_subspace(
             st.S, G, eta=cfg.eta, fused_tangent=cfg.fused_tangent,
-            exact_top1=cfg.exact_top1, power_iters=cfg.power_iters)
+            exact_top1=cfg.exact_top1, power_iters=cfg.power_iters,
+            backend=backend)
         S_new = res.S_new
         if cfg.reorth_interval:
             do = (n_updates % cfg.reorth_interval) == (cfg.reorth_interval - 1)
             S_new = jax.lax.cond(do, sub.reorthonormalize, lambda s: s, S_new)
             # after a QR scrub the rank-1 rotation identity no longer holds
-            return S_new, (None if cfg.reorth_interval else (res.cos_theta, res.v))
-        return S_new, (res.cos_theta, res.v)
+            return S_new, None, res.gsq
+        return S_new, (res.cos_theta, res.v), res.gsq
     if cfg.method == "svd":
-        return sub.refresh_svd(G, rank), None
+        return sub.refresh_svd(G, rank), None, None
     if cfg.method == "random":
-        return sub.refresh_random(G, rank, step=step), None
+        return sub.refresh_random(G, rank, step=step), None, None
     if cfg.method == "osd":
         # Oja-style online PCA: S <- orth(S + lr * (I - SS^T) G G^T S)
         G32 = G.astype(jnp.float32)
         GS = G32.T @ st.S                        # (n, r)
         GGS = G32 @ GS                           # (m, r)
         corr = GGS - st.S @ (st.S.T @ GGS)
-        return sub.reorthonormalize(st.S + cfg.osd_lr * corr), None
+        return sub.reorthonormalize(st.S + cfg.osd_lr * corr), None, None
     if cfg.method == "none":
-        return st.S, None
+        return st.S, None, None
     raise ValueError(f"unknown subspace method {cfg.method!r}")
 
 
 def _tracking_matrix_step(cfg: LowRankConfig, hp: AdamHP, G: Array,
                           st: MatrixOptState, step: Array, n_updates: Array,
                           lr: Array, param: Optional[Array], out_dtype):
-    G32 = G.astype(jnp.float32)
-    S_new, rank1_info = _refresh_subspace(cfg, G32, st, step, n_updates)
+    """The 1-of-k subspace-update step, fused end to end when kernels are
+    on: project_tangent_colnorms (one read of G) -> geodesic -> O(rn)
+    rank-1 rotation of (M, V) -> the same project/adam/fused_update
+    epilogue the plain steps use (the column norms from the first launch
+    feed the Eq. 12 clip, so no norm pass repeats).  Without kernels this
+    is the paper-literal unfused schedule."""
+    backend = _get_backend(cfg)
+    # the kernels (and their ref fallbacks) cast per tile, so keep the
+    # gradient in its storage dtype on the fused path instead of
+    # materializing an (m, n) fp32 copy up front
+    Gc = G if backend is not None else G.astype(jnp.float32)
+    S_new, rank1_info, gsq = _refresh_subspace(cfg, Gc, st, step, n_updates,
+                                               backend)
 
     rotated = None
     if cfg.projection_aware:
-        if cfg.rank1_rotation and rank1_info is not None:
+        # the rank-1 rotation is an exact rewrite of the dense one (the
+        # geodesic's Q = I + (cos-1) vv^T), so the fused path always takes
+        # it when available; cfg.rank1_rotation opts the jnp path in.
+        if rank1_info is not None and (cfg.rank1_rotation
+                                       or backend is not None):
             cos_t, v = rank1_info
             rotated = rotate_moments_rank1(cos_t, v, st.M, st.V, step, hp)
         else:
             Q = sub.change_of_basis(S_new, st.S)
             rotated = rotate_moments_dense(Q, st.M, st.V, step, hp)
 
-    out = lowrank_adam_step(G32, st, step, hp, rotated=rotated, S_new=S_new,
-                            recovery=cfg.recovery, backend=_get_backend(cfg),
+    out = lowrank_adam_step(Gc, st, step, hp, rotated=rotated, S_new=S_new,
+                            recovery=cfg.recovery, backend=backend,
                             lr=lr, weight_decay=cfg.weight_decay, param=param,
-                            out_dtype=out_dtype)
+                            out_dtype=out_dtype, precomputed_gsq=gsq)
     return out.delta, out.state
 
 

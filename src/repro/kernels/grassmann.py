@@ -11,15 +11,22 @@ fp32 MXU accumulation in VMEM:
                                            never materialized — 2mn HBM
                                            bytes saved vs the paper-literal
                                            3-pass schedule)
+    project_tangent_colnorms            (tracking-step front end: A, the
+                                          column norms AND the tangent T in
+                                          ONE pass over G, via the
+                                          W = G A^T = (G G^T) S accumulator;
+                                          single launch for m <= 2048)
     recovery  Lam = (G - S G~) * phi     (residual + column scale fused)
     backproject  Ghat = S G~^O           (plain tiled matmul)
     adam_lowrank[_norms]                 (moments + direction in one (r, n)
                                           pass; _norms also emits the Gt/Gto
                                           column norms that feed phi)
     fused_update  upd = -coef (S Gto + (G - S Gt) phi clip)
-                                         (the whole k-1-of-k hot-path
-                                          epilogue in one pass over G,
-                                          written in the parameter dtype)
+                                         (the whole hot-path epilogue —
+                                          shared by the k-1-of-k plain steps
+                                          AND the 1-of-k tracking step — in
+                                          one pass over G, written in the
+                                          parameter dtype)
 
 Hot-path HBM traffic accounting (per matrix per non-tracking step, mn
 terms only; r << m so the (r, n) state traffic is secondary — the full
@@ -36,10 +43,21 @@ model lives in repro.kernels.traffic):
     with the Eq. 12 clip scalar known *before* the epilogue thanks to the
     exact identity ||Lam||^2 = sum_j phi_j^2 (||G_:,j||^2 - ||Gt_:,j||^2).
 
+Tracking-step (1-of-k) HBM traffic: the fused schedule is
+project_tangent_colnorms (1 read of G) -> geodesic + rank-1 rotation
+(all O(mr + rn)) -> project[_colnorms] with S_new (1 read) ->
+adam_lowrank_norms -> fused_update (1 read + the final-dtype write) —
+~3 x mn reads + 1 x mn write, vs ~4 reads + 5 fp32 (m, n) intermediate
+passes + 1 write for the paper-literal schedule (model in
+repro.kernels.traffic, ratio ~0.4-0.55).
+
 Block shapes are MXU-aligned (multiples of 128 on the minor dims) and
-sized for ~1-2 MB VMEM residency per operand tile.  All kernels run in
-interpret mode on CPU for validation (tests/test_kernels.py sweeps
-shapes/dtypes against repro.kernels.ref).
+sized for ~1-2 MB VMEM residency per operand tile.  Every kernel casts
+its operand tiles to fp32 on load (bf16 gradients stream at 2 B/elem)
+and accumulates on the MXU in fp32; only ``fused_update`` writes a
+non-fp32 result (the parameter dtype).  All kernels run in interpret
+mode on CPU for validation (tests/test_kernels.py sweeps shapes/dtypes
+against the pure-jnp oracles in repro.kernels.ref).
 """
 
 from __future__ import annotations
@@ -56,6 +74,14 @@ Array = jax.Array
 BM = 256
 BN = 256
 
+# project_tangent_colnorms keeps full-m panels (S, the W/T accumulator and
+# one (m, bn) G block) resident in VMEM for the whole launch; at r = 256 and
+# bn = 256 that is ~3 MB per 1024 rows, so cap the single-launch variant at
+# m <= 2048 (~8 MB, safely inside a v5e core's 16 MB) and let the dispatch
+# layer fall back to the two-launch project_colnorms + tangent schedule for
+# taller matrices.
+MAX_FUSED_TANGENT_M = 2048
+
 
 def _project_kernel(s_ref, g_ref, out_ref):
     """grid = (n/bn, m/bm); accumulate over the m (minor) grid axis."""
@@ -71,7 +97,13 @@ def _project_kernel(s_ref, g_ref, out_ref):
 
 def project(S: Array, G: Array, *, bm: int = BM, bn: int = BN,
             interpret: bool = False) -> Array:
-    """A = S^T G.  S: (m, r); G: (m, n) -> (r, n) fp32."""
+    """A = S^T G — the closed-form least-squares projection (paper Eq. 2-3).
+
+    S: (m, r); G: (m, n) any float dtype (cast to fp32 per tile) ->
+    (r, n) fp32.  Tiles: (bm, bn) gradient blocks with a full-r S panel;
+    one read of G, A accumulated over the m grid axis.  Oracle:
+    :func:`repro.kernels.ref.project_ref`.
+    """
     m, r = S.shape
     _, n = G.shape
     bm, bn = min(bm, m), min(bn, n)
@@ -97,7 +129,13 @@ def _backproject_kernel(s_ref, x_ref, out_ref):
 
 def backproject(S: Array, X: Array, *, bm: int = BM, bn: int = BN,
                 interpret: bool = False) -> Array:
-    """Ghat = S X.  S: (m, r); X: (r, n) -> (m, n) fp32."""
+    """Ghat = S X — back-projection of a low-rank quantity (Eq. 10's S G~^O).
+
+    S: (m, r); X: (r, n) -> (m, n) fp32.  Plain tiled matmul over
+    (bm, bn) output blocks; superseded on the hot path by
+    :func:`fused_update`, kept as a baseline/building block.  Oracle:
+    :func:`repro.kernels.ref.backproject_ref`.
+    """
     m, r = S.shape
     _, n = X.shape
     bm, bn = min(bm, m), min(bn, n)
@@ -134,7 +172,14 @@ def _tangent_kernel(g_ref, a_ref, s_ref, c_ref, out_ref):
 
 def tangent(G: Array, A: Array, S: Array, *, bm: int = BM, bn: int = BN,
             interpret: bool = False) -> Array:
-    """T = -2 G A^T + 2 S (A A^T).  One pass over G; R never formed."""
+    """Grassmann tangent T = -2 G A^T + 2 S (A A^T) (paper Eq. 4, fused form).
+
+    G: (m, n) any float (cast per tile); A: (r, n); S: (m, r) ->
+    (m, r) fp32.  One pass over (bm, bn) G tiles accumulating over the n
+    grid axis; the (m, n) residual R = G - S A of the paper-literal form
+    -2 R A^T is never materialized.  The (r, r) Gram A A^T is precomputed
+    outside the launch.  Oracle: :func:`repro.kernels.ref.tangent_ref`.
+    """
     m, n = G.shape
     r = S.shape[1]
     bm, bn = min(bm, m), min(bn, n)
@@ -165,8 +210,15 @@ def _recovery_kernel(g_ref, s_ref, gt_ref, phi_ref, out_ref):
 
 def recovery(G: Array, S: Array, Gt: Array, phi: Array, *,
              bm: int = BM, bn: int = BN, interpret: bool = False) -> Array:
-    """Lam = (G - S Gt) * phi[None, :] — back-projection, residual and
-    column scaling in one pass; the residual never round-trips HBM."""
+    """Recovery term Lam = (G - S Gt) * phi[None, :] (paper Eq. 10-11).
+
+    G: (m, n) any float (cast per tile); S: (m, r); Gt: (r, n);
+    phi: (n,) -> (m, n) fp32.  Back-projection, residual and column
+    scaling in one pass over (bm, bn) tiles; the orthogonal-complement
+    residual never round-trips HBM.  Superseded on the hot path by the
+    closed-form ||Lam|| + :func:`fused_update`; kept as a baseline.
+    Oracle: :func:`repro.kernels.ref.recovery_ref`.
+    """
     m, n = G.shape
     r = S.shape[1]
     bm, bn = min(bm, m), min(bn, n)
@@ -202,13 +254,16 @@ def _project_colnorms_kernel(s_ref, g_ref, a_ref, sq_ref):
 
 def project_colnorms(S: Array, G: Array, *, bm: int = BM, bn: int = BN,
                      interpret: bool = False) -> tuple[Array, Array]:
-    """A = S^T G plus the per-column squared norms ||G_:,j||^2 as a free
-    byproduct of the same single pass over G.  The norms feed the O(n)
-    closed form of ||Lam|| (Eq. 12) so the recovery-growth clip scalar is
-    known before the fused epilogue runs — the (m, n) residual is never
-    materialized just to take its norm.
+    """A = S^T G (Eq. 2-3) plus the per-column squared norms ||G_:,j||^2
+    as a free byproduct of the same single pass over G.  The norms feed
+    the O(n) closed form of ||Lam|| (Eq. 12) so the recovery-growth clip
+    scalar is known before the fused epilogue runs — the (m, n) residual
+    is never materialized just to take its norm.
 
-    S: (m, r); G: (m, n) -> ((r, n) fp32, (n,) fp32).
+    S: (m, r); G: (m, n) any float (cast per tile) ->
+    ((r, n) fp32, (n,) fp32).  Tiles as :func:`project`, with the norm
+    row accumulated alongside A over the m grid axis.  Oracle:
+    :func:`repro.kernels.ref.project_colnorms_ref`.
     """
     m, r = S.shape
     _, n = G.shape
@@ -229,6 +284,85 @@ def project_colnorms(S: Array, G: Array, *, bm: int = BM, bn: int = BN,
         interpret=interpret,
     )(S, G)
     return A, sq.reshape(n)
+
+
+def _project_tangent_colnorms_kernel(s_ref, g_ref, a_ref, sq_ref, t_ref):
+    """grid = (n/bn,): one sweep over G's column blocks with full-m panels.
+
+    Per block j:  A_:,j = S^T G_:,j  and  sq_j = ||G_:,j||^2  are complete
+    immediately (the whole m extent is in VMEM), while the accumulator
+
+        W += G_:,j @ A_:,j^T          (-> W = G A^T = (G G^T) S)
+
+    builds up in ``t_ref``.  On the last block the accumulator is rewritten
+    in place into the Grassmann tangent (Eq. 4) using S^T W = A A^T:
+
+        T = -2 W + 2 S (S^T W)  =  -2 G A^T + 2 S (A A^T).
+
+    This is the only schedule that forms A and G A^T in ONE pass over G:
+    with m tiled, each W row-block needs A tiles assembled from *other*
+    row blocks, so the m extent must stay resident (hence
+    MAX_FUSED_TANGENT_M).
+    """
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        t_ref[...] = jnp.zeros_like(t_ref)
+
+    s = s_ref[...].astype(jnp.float32)              # (m, r)
+    g = g_ref[...].astype(jnp.float32)              # (m, bn)
+    a = jnp.dot(s.T, g, preferred_element_type=jnp.float32)     # (r, bn)
+    a_ref[...] = a
+    sq_ref[...] = jnp.sum(g * g, axis=0, keepdims=True)
+    t_ref[...] += jnp.dot(g, a.T, preferred_element_type=jnp.float32)
+
+    @pl.when(j == pl.num_programs(0) - 1)
+    def _finalize():
+        w = t_ref[...]
+        aat = jnp.dot(s.T, w, preferred_element_type=jnp.float32)  # (r, r)
+        t_ref[...] = -2.0 * w + 2.0 * jnp.dot(
+            s, aat, preferred_element_type=jnp.float32)
+
+
+def project_tangent_colnorms(S: Array, G: Array, *, bn: int = BN,
+                             interpret: bool = False
+                             ) -> tuple[Array, Array, Array]:
+    """Tracking-step front end in a single pass over G.
+
+    Returns ``(A, gsq, T)``:
+
+        A   (r, n) = S^T G             least-squares coefficients (Eq. 2-3)
+        gsq (n,)   = ||G_:,j||^2       column norms for the O(n) Eq. 12 clip
+        T   (m, r) = -2 G A^T + 2 S (A A^T)   Grassmann tangent (Eq. 4)
+
+    One kernel launch, one read of G — vs two for the two-launch
+    project_colnorms + tangent composite.  S, the W accumulator and one
+    (m, bn) gradient block stay VMEM-resident, so callers must respect
+    ``MAX_FUSED_TANGENT_M`` (the ops-layer dispatch does).  Oracle:
+    :func:`repro.kernels.ref.project_tangent_colnorms_ref`.
+    """
+    m, r = S.shape
+    _, n = G.shape
+    bn = min(bn, n)
+    A, sq, T = pl.pallas_call(
+        _project_tangent_colnorms_kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((m, r), lambda j: (0, 0)),
+            pl.BlockSpec((m, bn), lambda j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((r, bn), lambda j: (0, j)),
+            pl.BlockSpec((1, bn), lambda j: (0, j)),
+            pl.BlockSpec((m, r), lambda j: (0, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((r, n), jnp.float32),
+                   jax.ShapeDtypeStruct((1, n), jnp.float32),
+                   jax.ShapeDtypeStruct((m, r), jnp.float32)],
+        interpret=interpret,
+    )(S, G)
+    return A, sq.reshape(n), T
 
 
 def _fused_update_kernel(*refs, recovery: bool, decay: bool):
@@ -273,15 +407,22 @@ def fused_update(G: Array | None, S: Array, Gt: Array | None, Gto: Array,
                  wd_coef: Array | None = None,
                  bm: int = BM, bn: int = BN,
                  interpret: bool = False) -> Array:
-    """The fused hot-path epilogue: back-projection, recovery residual,
-    column scaling, Eq. 12 clip, lr scaling and the final-dtype cast in a
-    single pass over G.  Replaces backproject + recovery + (Ghat + Lam)
-    combine + (-lr * delta).astype(...) — ~3 x mn reads and ~3 x mn
-    writes saved per matrix per step.
+    """The fused hot-path epilogue: back-projection (Eq. 10), recovery
+    residual + column scaling (Eq. 11), the Eq. 12 clip, lr scaling and
+    the final-dtype cast in a single pass over G.  Replaces backproject +
+    recovery + (Ghat + Lam) combine + (-lr * delta).astype(...) — ~3 x mn
+    reads and ~3 x mn writes saved per matrix per step.  Shared by the
+    plain AND the tracking step (the latter passes S_new + the rotated
+    moments' Gto).
 
+    G: (m, n) any float (cast per tile); S: (m, r); Gt, Gto: (r, n);
+    phi: (n,); scalars coef/clip/wd_coef fp32 -> (m, n) in ``out_dtype``
+    (the parameter dtype — the only non-fp32 write in the package).
+    Tiles: (bm, bn) G/output blocks, full-r S and (r, bn) panels.
     Pass ``G=None`` (with Gt/phi None) for the no-recovery variant
     ``upd = -coef S Gto`` which never touches G at all.  ``param`` +
     ``wd_coef`` fold decoupled weight decay into the same write.
+    Oracle: :func:`repro.kernels.ref.fused_update_ref`.
     """
     recovery = G is not None
     decay = param is not None
@@ -340,8 +481,14 @@ def adam_lowrank(Gt: Array, M: Array, V: Array, step: Array, *,
                  beta1: float = 0.9, beta2: float = 0.999, eps: float = 1e-8,
                  bias_correction: bool = True, br: int = 128, bn: int = 512,
                  interpret: bool = False) -> tuple[Array, Array, Array]:
-    """Fused moment update + Adam direction: one HBM pass over the (r, n)
-    states instead of five separate elementwise kernels."""
+    """Fused moment update + Adam direction (paper Eq. 6-7): one HBM pass
+    over the (r, n) states instead of five separate elementwise kernels.
+
+    Gt, M, V: (r, n) fp32 -> (M', V', Gto) all (r, n) fp32.  Tiles:
+    (br, bn) elementwise blocks; bias-correction scalars precomputed on
+    the host side of the launch.  Oracle:
+    :func:`repro.kernels.ref.adam_lowrank_ref`.
+    """
     r, n = Gt.shape
     br, bn = min(br, r), min(bn, n)
     t = step.astype(jnp.float32) + 1.0
@@ -403,7 +550,9 @@ def adam_lowrank_norms(Gt: Array, M: Array, V: Array, step: Array, *,
     the quantities the recovery scaling phi (Eq. 11) and the closed-form
     ||Lam|| (Eq. 12) need, so neither costs an extra read of the states.
 
-    Returns (M', V', Gto, gt_sq (n,), gto_sq (n,)).
+    Tiles: (br, bn) blocks with r as the accumulation (minor) grid axis
+    for the norm rows.  Returns (M', V', Gto, gt_sq (n,), gto_sq (n,)),
+    all fp32.  Oracle: :func:`repro.kernels.ref.adam_lowrank_norms_ref`.
     """
     r, n = Gt.shape
     br, bn = min(br, r), min(bn, n)

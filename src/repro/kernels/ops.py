@@ -8,12 +8,22 @@ three per non-tracking step:
     adam_lowrank_norms(...)      -> (M', V', Gto, gt_sq, gto_sq)  (r, n) pass
     fused_update(...)            -> (m, n) final-dtype update  one read of G
 
-The unfused building blocks remain for the tracking step and as
-baselines:
+The 1-of-k tracking step swaps the first launch for the fused
+subspace-update front end and reuses the same epilogue:
 
-    project(S, G)           -> (r, n)
+    project_tangent_colnorms(S, G) -> (A, gsq, T)   one read of G (single
+                                      launch for m <= MAX_FUSED_TANGENT_M,
+                                      else project_colnorms + tangent)
+    project(S_new, G)              -> (r, n)        one read of G (gsq is
+                                      basis-independent, so the norms from
+                                      the first launch are reused)
+    adam_lowrank_norms + fused_update as above
+
+The unfused building blocks remain as baselines and fallbacks:
+
     backproject(S, X)       -> (m, n)
     recovery(S, G, Gt, phi) -> (m, n)
+    tangent(G, A, S)        -> (m, r)
 
 Dispatch policy: on TPU the Pallas kernels run compiled; on CPU they run
 in interpret mode only when REPRO_FORCE_KERNELS=1 (tests do this —
@@ -49,6 +59,8 @@ def _tiles_ok(*dims_blocks: tuple[int, int]) -> bool:
 
 
 def project(S: Array, G: Array) -> Array:
+    """A = S^T G (Eq. 2-3) -> (r, n) fp32.  Kernel: grassmann.project;
+    oracle/fallback: ref.project_ref."""
     mode = _mode()
     m, r = S.shape
     n = G.shape[1]
@@ -58,6 +70,8 @@ def project(S: Array, G: Array) -> Array:
 
 
 def backproject(S: Array, X: Array) -> Array:
+    """Ghat = S X (Eq. 10) -> (m, n) fp32.  Kernel: grassmann.backproject;
+    oracle/fallback: ref.backproject_ref."""
     mode = _mode()
     m, r = S.shape
     n = X.shape[1]
@@ -67,6 +81,8 @@ def backproject(S: Array, X: Array) -> Array:
 
 
 def recovery(S: Array, G: Array, Gt: Array, phi: Array) -> Array:
+    """Lam = (G - S Gt) * phi (Eq. 10-11) -> (m, n) fp32.  Kernel:
+    grassmann.recovery; oracle/fallback: ref.recovery_ref."""
     mode = _mode()
     m, n = G.shape
     if mode == "ref" or not _tiles_ok((m, grassmann.BM), (n, grassmann.BN)):
@@ -75,6 +91,8 @@ def recovery(S: Array, G: Array, Gt: Array, phi: Array) -> Array:
 
 
 def tangent(G: Array, A: Array, S: Array) -> Array:
+    """Grassmann tangent T = -2 G A^T + 2 S (A A^T) (Eq. 4) -> (m, r)
+    fp32.  Kernel: grassmann.tangent; oracle/fallback: ref.tangent_ref."""
     mode = _mode()
     m, n = G.shape
     if mode == "ref" or not _tiles_ok((m, grassmann.BM), (n, grassmann.BN)):
@@ -105,6 +123,24 @@ def project_colnorms(S: Array, G: Array) -> tuple[Array, Array]:
     if mode == "ref" or not _tiles_ok((m, grassmann.BM), (n, grassmann.BN)):
         return ref.project_colnorms_ref(S, G)
     return grassmann.project_colnorms(S, G, interpret=(mode == "interpret"))
+
+
+def project_tangent_colnorms(S: Array, G: Array
+                             ) -> tuple[Array, Array, Array]:
+    """Tracking-step front end: (A = S^T G, ||G_:,j||^2, Grassmann tangent T)
+    from one pass over G when the full-m panels fit VMEM
+    (m <= grassmann.MAX_FUSED_TANGENT_M), two passes otherwise."""
+    mode = _mode()
+    m, r = S.shape
+    n = G.shape[1]
+    if mode == "ref" or not _tiles_ok((m, grassmann.BM), (n, grassmann.BN)):
+        return ref.project_tangent_colnorms_ref(S, G)
+    interp = mode == "interpret"
+    if m <= grassmann.MAX_FUSED_TANGENT_M:
+        return grassmann.project_tangent_colnorms(S, G, interpret=interp)
+    A, gsq = grassmann.project_colnorms(S, G, interpret=interp)
+    T = grassmann.tangent(G, A, S, interpret=interp)
+    return A, gsq, T
 
 
 def adam_lowrank_norms(Gt: Array, M: Array, V: Array, step: Array, *,

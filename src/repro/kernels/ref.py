@@ -53,6 +53,27 @@ def project_colnorms_ref(S: Array, G: Array) -> tuple[Array, Array]:
     return S.astype(jnp.float32).T @ G32, jnp.sum(G32 * G32, axis=0)
 
 
+def project_tangent_colnorms_ref(S: Array, G: Array
+                                 ) -> tuple[Array, Array, Array]:
+    """Fused tracking-step front end: projection, column norms, and the
+    Grassmann tangent from one logical pass over G.
+
+        A   = S^T G                       (Eq. 2-3 closed form)
+        gsq = per-column ||G_:,j||^2      (feeds the O(n) Eq. 12 norm)
+        T   = -2 G A^T + 2 S (A A^T)      (Eq. 4 tangent, residual-free)
+
+    The kernel realizes T through the accumulator W = G A^T = (G G^T) S,
+    using S^T W = A A^T; this oracle evaluates the same algebra directly.
+    S: (m, r) fp32; G: (m, n) any float.  -> ((r, n), (n,), (m, r)) fp32.
+    """
+    G32 = G.astype(jnp.float32)
+    S32 = S.astype(jnp.float32)
+    A = S32.T @ G32
+    gsq = jnp.sum(G32 * G32, axis=0)
+    T = -2.0 * (G32 @ A.T) + 2.0 * (S32 @ (A @ A.T))
+    return A, gsq, T
+
+
 def fused_update_ref(G: Array | None, S: Array, Gt: Array | None,
                      Gto: Array, phi: Array | None, coef: Array,
                      clip: Array, *, out_dtype=None,

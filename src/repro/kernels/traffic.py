@@ -1,13 +1,28 @@
-"""Analytic HBM-traffic model for the optimizer hot path (the k-1-of-k
-non-tracking steps, which dominate SubTrack++'s wall time).
+"""Analytic HBM-traffic model for the optimizer's per-step cost: both the
+k-1-of-k non-tracking steps (which dominate SubTrack++'s wall time) and
+the 1-of-k Grassmannian tracking step (the subspace update — the wall-time
+spike in one-shot-refresh baselines like GaLore).
 
-Counts ideal bytes moved per matrix per step — every operand read once
-per pass it participates in, every result written once; VMEM-resident
-panel re-fetches inside a pass are not charged (standard roofline
-accounting, matching repro.distributed.hlo_analysis conventions).
+Accounting rules (what counts as a read / a write)
+--------------------------------------------------
+Counts *ideal* bytes moved per matrix per step:
 
-Two schedules over a (m, n) gradient with a rank-r subspace:
+* every operand is charged one read per pass it participates in, and
+  every result one write — at its storage dtype (fp32 optimizer state;
+  gradient and parameter dtypes configurable, so bf16 training halves the
+  G-read and update-write terms);
+* VMEM-resident panel re-fetches inside a pass are NOT charged (standard
+  roofline accounting, matching repro.distributed.hlo_analysis): a tiled
+  kernel that keeps S and an (r, bn) panel on-chip while sweeping G pays
+  for S once, G once and its outputs once;
+* O(r^2) and scalar traffic (Gram matrices, the clip scalar, limiter
+  state) is ignored — at r <= 1024 it is noise next to the r*n terms;
+* fusion is what changes the model: a fused pass charges its inputs and
+  outputs once, while the same math as separate XLA ops charges every
+  materialized (m, n) intermediate a write + a re-read.
 
+Non-tracking step (functions ``unfused_step_bytes`` / ``fused_step_bytes``)
+---------------------------------------------------------------------------
 ``unfused`` — the seed schedule (separate project, moments, phi,
 backproject, recovery, ||Lam||, combine + lr-scale + cast passes).  The
 (m, n) stream is touched ~8x: G is read twice, Ghat and Lam are each
@@ -21,8 +36,33 @@ everything else stays in (r, n) or O(n).  The Eq. 12 clip scalar comes
 from the closed-form ||Lam||^2 = sum_j phi_j^2 (||G_:,j||^2 -
 ||Gt_:,j||^2), so no (m, n) intermediate exists at all.
 
-All fp32 optimizer state; the gradient and parameter dtypes are
-configurable (bf16 training halves the G-read and update-write terms).
+Why the non-tracking ratio lands at 0.34-0.49x: the mn-stream terms drop
+from ~8 passes to 3 (ratio ~0.37 at fp32; the exact value moves with
+grad/param dtype — bf16 G-reads shrink both sides' read terms but the
+unfused schedule keeps its five fp32 (m, n) intermediate passes — and
+with the r*n state traffic, which is identical-ish in both schedules and
+dilutes the win as r/m grows).
+
+Tracking step (functions ``tracking_unfused_step_bytes`` /
+``tracking_fused_step_bytes``)
+------------------------------
+``unfused`` — the paper-literal schedule: project (old basis) for A, the
+fused-form tangent (one more read of G; the *naive* tangent would add two
+more mn passes, so this is generous to the baseline), then after the
+geodesic step a fresh projection onto S_new inside the optimizer step,
+the dense O(r^2 n) moment rotation, and the same backproject / recovery /
+||Lam|| / combine / cast epilogue as the unfused plain step: 4 reads of G
+plus 5 fp32 (m, n) intermediate passes plus the update write.
+
+``fused`` — project_tangent_colnorms harvests A, the column norms AND the
+tangent from one read of G (single launch for m <= MAX_FUSED_TANGENT_M,
+see repro.kernels.grassmann); the geodesic step and the O(rn) rank-1
+moment rotation never touch (m, n) data; the epilogue re-projects onto
+S_new (one read — the norms are basis-independent and reused, so it is a
+plain project) and fused_update makes the last read + the only write:
+3 reads of G + 1 final-dtype write, no (m, n) intermediates.  The second
+projection is irreducible: Gt_new = S_new^T G = A + v (p^T G) needs
+p^T G, itself a full pass over G — same traffic, more moving parts.
 """
 
 from __future__ import annotations
@@ -99,4 +139,90 @@ def traffic_ratio(m: int, n: int, r: int, *, grad_bytes: int = F32,
                              param_bytes=param_bytes)
     unfused = unfused_step_bytes(m, n, r, grad_bytes=grad_bytes,
                                  param_bytes=param_bytes)
+    return fused.total / unfused.total
+
+
+# ---------------------------------------------------------------------------
+# Tracking step (1-of-k): the Grassmannian subspace update + optimizer step
+# ---------------------------------------------------------------------------
+
+
+def tracking_unfused_step_bytes(m: int, n: int, r: int, *,
+                                grad_bytes: int = F32,
+                                param_bytes: int = F32) -> HotPathTraffic:
+    """Paper-literal tracking schedule: project (old basis) -> fused-form
+    tangent -> top1/geodesic -> dense rotation -> project (new basis) ->
+    moments -> phi -> backproject -> recovery -> ||Lam|| -> combine/cast.
+
+    Charges the *fused-form* tangent (one read of G); the naive
+    residual-materializing tangent would add 2 more mn fp32 passes —
+    generous to the baseline, like the plain-step model."""
+    mn = (
+        4 * m * n * grad_bytes    # G read by project(S_old), tangent,
+                                  # project(S_new) and recovery
+        + m * n * F32             # Ghat write (backproject)
+        + m * n * F32             # Lam write (recovery)
+        + m * n * F32             # Lam read  (||Lam|| reduction)
+        + 2 * m * n * F32         # Ghat + Lam read (combine pass)
+        + m * n * param_bytes     # update write (lr-scale + cast)
+    )
+    rn = (
+        r * n * F32               # A write (project, old basis)
+        + 2 * r * n * F32         # A read twice (G A^T and A A^T in tangent)
+        + r * n * F32             # Gt write (project, new basis)
+        + 4 * r * n * F32         # dense rotation: M, V read; M', V' write
+        + 6 * r * n * F32         # moments: Gt, M, V read; M, V, Gto write
+        + 2 * r * n * F32         # phi: Gt, Gto column norms
+        + r * n * F32             # Gto read (backproject)
+        + r * n * F32             # Gt read (recovery)
+    )
+    mr = (
+        4 * m * r * F32           # S read by project, tangent (x2: G A^T
+                                  # term + S(AA^T) term charged once each
+                                  # pass), project(new)
+        + 2 * m * r * F32         # T write + T read (top1 Gram / T v)
+        + 3 * m * r * F32         # geodesic: S read, S v, S_new write
+        + 2 * m * r * F32         # S_new read by backproject + recovery
+    )
+    nb = 2 * n * F32              # phi write + read
+    return HotPathTraffic("tracking_unfused", mn, rn, mr, nb)
+
+
+def tracking_fused_step_bytes(m: int, n: int, r: int, *,
+                              grad_bytes: int = F32,
+                              param_bytes: int = F32) -> HotPathTraffic:
+    """Fused tracking pipeline: project_tangent_colnorms -> top1/geodesic
+    -> rank-1 rotation (O(rn), no (r, r) matrix) -> project(S_new) ->
+    adam_lowrank_norms -> fused_update.  3 reads of G + 1 final-dtype
+    write; no (m, n) intermediate ever exists."""
+    mn = (
+        3 * m * n * grad_bytes    # G read by project_tangent_colnorms,
+                                  # project(S_new) and fused_update
+        + m * n * param_bytes     # update write (final dtype, once)
+    )
+    rn = (
+        r * n * F32               # A write (project_tangent_colnorms)
+        + 4 * r * n * F32         # rank-1 rotation: M, V read; M', V' write
+        + r * n * F32             # Gt write (project, new basis)
+        + 6 * r * n * F32         # adam_lowrank_norms: 3 reads + 3 writes
+        + 2 * r * n * F32         # Gt, Gto read (fused_update panels)
+    )
+    mr = (
+        2 * m * r * F32           # S read + T write (project_tangent_...)
+        + 2 * m * r * F32         # T read (top1 Gram / T v)
+        + 3 * m * r * F32         # geodesic: S read, S v, S_new write
+        + 2 * m * r * F32         # S_new read by project + fused_update
+    )
+    nb = 5 * n * F32              # gsq/gtsq/gtosq writes + phi write/read
+    return HotPathTraffic("tracking_fused", mn, rn, mr, nb)
+
+
+def tracking_traffic_ratio(m: int, n: int, r: int, *,
+                           grad_bytes: int = F32,
+                           param_bytes: int = F32) -> float:
+    """fused / unfused tracking-step byte ratio (acceptance: <= 0.7)."""
+    fused = tracking_fused_step_bytes(m, n, r, grad_bytes=grad_bytes,
+                                      param_bytes=param_bytes)
+    unfused = tracking_unfused_step_bytes(m, n, r, grad_bytes=grad_bytes,
+                                          param_bytes=param_bytes)
     return fused.total / unfused.total

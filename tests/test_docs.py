@@ -1,0 +1,27 @@
+"""Docs hygiene as part of tier-1: intra-repo links in the markdown docs
+must resolve, and the README must document the canonical verify command
+(CI's docs job additionally executes the README commands with
+--collect-only; see tools/check_docs.py)."""
+
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "tools"))
+
+import check_docs  # noqa: E402
+
+
+def test_intra_repo_doc_links_resolve():
+    assert check_docs.check_links() == []
+
+
+def test_readme_documents_verify_command():
+    cmds = check_docs.readme_commands()
+    assert any("python -m pytest" in c and "PYTHONPATH=src" in c
+               for c in cmds), cmds
+
+
+def test_readme_and_architecture_exist():
+    assert (REPO / "README.md").exists()
+    assert (REPO / "docs" / "architecture.md").exists()

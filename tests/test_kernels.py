@@ -123,6 +123,29 @@ class TestFusedHotPath:
                                     out_dtype=jnp.float32)
         assert _rel(got, want) < 1e-5
 
+    def test_project_tangent_colnorms(self, m, n, r, dtype):
+        """The tracking-step front end: A, column norms and the Grassmann
+        tangent from one pass over G (W = G A^T accumulator trick)."""
+        G, S, _ = _inputs(m, n, r, dtype)
+        A, sq, T = grassmann.project_tangent_colnorms(S, G, interpret=True)
+        A_want, sq_want, T_want = ref.project_tangent_colnorms_ref(S, G)
+        tol = 1e-5 if dtype == jnp.float32 else 2e-2
+        assert _rel(A, A_want) < tol
+        assert _rel(sq, sq_want) < tol
+        assert _rel(T, T_want) < (1e-4 if dtype == jnp.float32 else 3e-2)
+
+    def test_project_tangent_colnorms_matches_composition(self, m, n, r,
+                                                          dtype):
+        """Single-launch fused front end == project_colnorms + tangent."""
+        G, S, _ = _inputs(m, n, r, dtype)
+        A, sq, T = grassmann.project_tangent_colnorms(S, G, interpret=True)
+        A2, sq2 = ref.project_colnorms_ref(S, G)
+        T2 = ref.tangent_ref(G, A2, S)
+        tol = 1e-4 if dtype == jnp.float32 else 3e-2
+        assert _rel(A, A2) < tol
+        assert _rel(sq, sq2) < tol
+        assert _rel(T, T2) < tol
+
     def test_lam_norm_identity(self, m, n, r, dtype):
         """||Lam||^2 == sum_j phi_j^2 (||G_:,j||^2 - ||Gt_:,j||^2) — the
         closed form (exact for orthonormal S) vs the materialized
@@ -217,6 +240,27 @@ def test_hotpath_traffic_model_halves_bytes():
         assert fus.mn_bytes == 3 * m * n * 4
 
 
+def test_tracking_traffic_model_below_bound():
+    """Acceptance: the fused tracking-step schedule's analytic HBM bytes
+    <= 0.7x the paper-literal schedule for the benchmarked shapes, in
+    both fp32 and bf16 gradient/parameter dtypes."""
+    from repro.kernels import traffic
+    for (m, n, r) in [(1024, 2560, 128), (1024, 2560, 256),
+                      (2048, 5632, 256), (4096, 11008, 1024)]:
+        for gb, pb in ((4, 4), (2, 2)):
+            ratio = traffic.tracking_traffic_ratio(m, n, r, grad_bytes=gb,
+                                                   param_bytes=pb)
+            assert ratio <= 0.7, (m, n, r, gb, ratio)
+        # internal consistency: the fused tracking step reads G exactly
+        # three times and writes the update once at mn scale, with no
+        # (m, n) intermediates
+        fus = traffic.tracking_fused_step_bytes(m, n, r)
+        assert fus.mn_bytes == 4 * m * n * 4
+        # the tracking step can never be cheaper than the plain step it
+        # embeds (it adds the tangent/geodesic work)
+        assert fus.total > traffic.fused_step_bytes(m, n, r).total
+
+
 def test_ops_dispatch_fallback_for_odd_shapes(monkeypatch):
     """Non-tile-aligned shapes silently use the reference path."""
     monkeypatch.setenv("REPRO_FORCE_KERNELS", "1")
@@ -226,3 +270,24 @@ def test_ops_dispatch_fallback_for_odd_shapes(monkeypatch):
     G, S = G[:m, :n], S[:m]
     got = ops.project(S, G)
     np.testing.assert_allclose(got, ref.project_ref(S, G), rtol=1e-5)
+    A, sq, T = ops.project_tangent_colnorms(S, G)
+    A_want, sq_want, T_want = ref.project_tangent_colnorms_ref(S, G)
+    np.testing.assert_allclose(A, A_want, rtol=1e-5)
+    np.testing.assert_allclose(sq, sq_want, rtol=1e-5)
+    np.testing.assert_allclose(T, T_want, rtol=1e-4, atol=1e-4)
+
+
+def test_ops_project_tangent_colnorms_tall_matrix_composite(monkeypatch):
+    """Above MAX_FUSED_TANGENT_M the dispatch splits into the two-launch
+    project_colnorms + tangent schedule; results must agree with the
+    single-launch oracle either way."""
+    monkeypatch.setenv("REPRO_FORCE_KERNELS", "1")
+    from repro.kernels import ops
+    m, n, r = 2560, 512, 64          # 256-aligned, m > 2048
+    assert m > grassmann.MAX_FUSED_TANGENT_M
+    G, S, _ = _inputs(m, n, r, jnp.float32)
+    A, sq, T = ops.project_tangent_colnorms(S, G)
+    A_want, sq_want, T_want = ref.project_tangent_colnorms_ref(S, G)
+    np.testing.assert_allclose(A, A_want, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(sq, sq_want, rtol=1e-5)
+    np.testing.assert_allclose(T, T_want, rtol=1e-4, atol=1e-3)

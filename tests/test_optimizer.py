@@ -184,7 +184,14 @@ class TestKernelBackend:
     def test_kernel_path_matches_reference_path(self, monkeypatch):
         """Fused single-pass kernel schedule vs the unfused jnp reference,
         per-step over a multi-step run with recovery + Eq. 12 clipping
-        active (growing gradient scale keeps the limiter engaged)."""
+        active (growing gradient scale keeps the limiter engaged).
+
+        eta is chosen so the geodesic angle theta = eta * sigma stays O(1):
+        at the paper's eta = 10 with sigma ~ 1e3-1e4, theta wraps the circle
+        thousands of times and cos/sin(theta) amplify a 1e-7 fp difference
+        in sigma (fused vs unfused tangent schedules associate differently)
+        into an O(1) basis change — that would test angle-wrap chaos, not
+        schedule equivalence."""
         monkeypatch.setenv("REPRO_FORCE_KERNELS", "1")
         # 24x48 doesn't tile 256 blocks — use a tile-friendly param set
         key = jax.random.PRNGKey(9)
@@ -194,9 +201,10 @@ class TestKernelBackend:
             return {"w": (1.0 + 0.3 * s) * jax.random.normal(
                 jax.random.fold_in(key, 100 + s), (256, 512))}
 
-        opt_ref = get_optimizer("subtrack", rank=64, update_interval=4)
+        opt_ref = get_optimizer("subtrack", rank=64, update_interval=4,
+                                eta=2e-5)
         opt_ker = get_optimizer("subtrack", rank=64, update_interval=4,
-                                use_kernels=True)
+                                eta=2e-5, use_kernels=True)
         state = opt_ref.init(params)
         state = opt_ref.warm_start(state, grad_at(0))
         upd_ref = jax.jit(opt_ref.update,
@@ -217,7 +225,13 @@ class TestKernelBackend:
                                        do_subspace_update=do)
             rel = float(jnp.max(jnp.abs(u_ref["w"] - u_ker["w"]))
                         / (jnp.max(jnp.abs(u_ref["w"])) + 1e-12))
-            assert rel < 1e-5, (s, rel)
+            # tracking steps run entirely different (mathematically
+            # equivalent) schedules — fused tangent kernel + rank-1
+            # rotation vs jnp tangent + dense rotation — and Adam's
+            # m/(sqrt(v)+eps) normalization amplifies fp-level differences
+            # in the rotated second moment wherever v is small, so they
+            # carry a larger fp budget than the plain steps
+            assert rel < (1e-3 if do else 1e-5), (s, rel)
             np.testing.assert_allclose(state_next.inner["w"].lam_prev,
                                        state_ker.inner["w"].lam_prev,
                                        rtol=1e-4)
@@ -228,6 +242,60 @@ class TestKernelBackend:
         # the Eq. 12 limiter actually engaged during the run
         assert float(state.inner["w"].lam_prev) > 0
         assert clipped
+
+    def test_tracking_closed_loop_fused_matches_unfused(self, monkeypatch):
+        """Closed loop with the subspace update firing repeatedly: both
+        paths free-run their own state (S, M, V, lam) and parameters;
+        after four tracking steps the trajectories must still agree on
+        every piece of state within fp tolerance.
+
+        The fused path exercises the full tracking pipeline:
+        project_tangent_colnorms (one read of G for A + column norms +
+        tangent) -> geodesic -> rank-1 (M, V) rotation -> fused epilogue
+        reusing the harvested norms for the Eq. 12 clip.  Gradient scale
+        is kept gentle so the geodesic angle theta = eta * sigma stays
+        well-conditioned (see test_kernel_path_matches_reference_path)."""
+        monkeypatch.setenv("REPRO_FORCE_KERNELS", "1")
+        key = jax.random.PRNGKey(11)
+        params = {"w": 0.1 * jax.random.normal(key, (256, 512))}
+
+        def grad_at(s):
+            return {"w": (1.0 + 0.05 * s) * jax.random.normal(
+                jax.random.fold_in(key, 200 + s), (256, 512))}
+
+        kw = dict(rank=64, update_interval=3, eta=2e-5)
+        opt_ref = get_optimizer("subtrack", **kw)
+        opt_ker = get_optimizer("subtrack", use_kernels=True, **kw)
+
+        def run(opt):
+            state = opt.init(params)
+            state = opt.warm_start(state, grad_at(0))
+            upd = jax.jit(opt.update, static_argnames=("do_subspace_update",))
+            p = params
+            for s in range(13):                 # tracking at s=3,6,9,12
+                u, state = upd(grad_at(s), state, p, 0.03,
+                               do_subspace_update=(s > 0 and s % 3 == 0))
+                p = jax.tree.map(lambda a, b: a + b, p, u)
+            return p, state
+
+        p_ref, st_ref = run(opt_ref)
+        p_ker, st_ker = run(opt_ker)
+        assert int(st_ref.n_updates) == 4
+
+        def rel(a, b):
+            return float(jnp.max(jnp.abs(a - b))
+                         / (jnp.max(jnp.abs(a)) + 1e-12))
+
+        # the basis itself: the geodesic steps agreed throughout
+        assert rel(st_ref.inner["w"].S, st_ker.inner["w"].S) < 1e-4
+        # rotated Adam moments (rank-1 vs dense rotation are exact
+        # rewrites; differences are accumulated fp noise)
+        assert rel(st_ref.inner["w"].M, st_ker.inner["w"].M) < 1e-3
+        assert rel(st_ref.inner["w"].V, st_ker.inner["w"].V) < 1e-3
+        np.testing.assert_allclose(st_ref.inner["w"].lam_prev,
+                                   st_ker.inner["w"].lam_prev, rtol=1e-3)
+        # parameters after the full closed loop
+        assert rel(p_ref["w"], p_ker["w"]) < 1e-3
 
     def test_fused_updates_are_final_dtype(self, monkeypatch):
         """The fused path writes updates in the parameter dtype — the

@@ -1,0 +1,105 @@
+"""Docs hygiene checker: intra-repo links resolve and README commands parse.
+
+Two layers:
+
+* link check (always): every relative markdown link in the repo's *.md
+  files (root + docs/) must point at an existing file or directory;
+  ``#anchors`` are stripped, external ``http(s)://`` links are skipped.
+* command check (``--run``): fenced ```bash blocks in README.md are
+  scanned; ``python <script>.py`` invocations must reference existing
+  scripts, and every ``python -m pytest`` invocation is executed with
+  ``--collect-only -q`` appended — proving the documented verify command
+  parses and the suite collects — without running the tests.
+
+CI runs ``python tools/check_docs.py --run``; tests/test_docs.py runs the
+link layer in-process so tier-1 guards the docs too.
+"""
+
+from __future__ import annotations
+
+import re
+import shlex
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"```(?:bash|sh|console)\n(.*?)```", re.DOTALL)
+
+
+def doc_files() -> list[Path]:
+    return sorted(REPO.glob("*.md")) + sorted((REPO / "docs").glob("*.md"))
+
+
+def check_links() -> list[str]:
+    """Return a list of 'file: broken-link' error strings."""
+    errors = []
+    for md in doc_files():
+        for target in LINK_RE.findall(md.read_text()):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                errors.append(f"{md.relative_to(REPO)}: broken link "
+                              f"-> {target}")
+    return errors
+
+
+def readme_commands() -> list[str]:
+    """Non-comment command lines from README.md bash fences."""
+    text = (REPO / "README.md").read_text()
+    lines: list[str] = []
+    for block in FENCE_RE.findall(text):
+        for line in block.splitlines():
+            line = line.strip()
+            if line and not line.startswith("#"):
+                lines.append(line)
+    return lines
+
+
+def check_commands() -> list[str]:
+    """Validate README commands: scripts exist, pytest lines collect."""
+    errors = []
+    for cmd in readme_commands():
+        parts = shlex.split(cmd)
+        # skip env assignments to find the program
+        prog_i = 0
+        while prog_i < len(parts) and "=" in parts[prog_i]:
+            prog_i += 1
+        prog = parts[prog_i:] if prog_i < len(parts) else []
+        if not prog or prog[0] != "python":
+            continue                      # pip install etc. — not checked
+        if "-m" in prog and "pytest" in prog:
+            run = subprocess.run(
+                cmd + " --collect-only -q", shell=True, cwd=REPO,
+                capture_output=True, text=True, timeout=600)
+            if run.returncode != 0:
+                errors.append(
+                    f"README command failed to collect: {cmd!r}\n"
+                    f"{run.stdout[-2000:]}{run.stderr[-2000:]}")
+        elif len(prog) > 1 and prog[1].endswith(".py"):
+            if not (REPO / prog[1]).exists():
+                errors.append(f"README references missing script: {prog[1]}")
+    return errors
+
+
+def main() -> int:
+    errors = check_links()
+    if "--run" in sys.argv:
+        errors += check_commands()
+    for e in errors:
+        print(f"ERROR: {e}")
+    if not errors:
+        n_cmds = len(readme_commands()) if "--run" in sys.argv else 0
+        print(f"docs OK: {len(doc_files())} files checked"
+              + (f", {n_cmds} README commands scanned" if n_cmds else ""))
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
