@@ -20,14 +20,28 @@ step: the paper-literal schedule vs the fused pipeline
 project(S_new) -> adam_lowrank_norms -> fused_update), with the analytic
 tracking-step byte ratio (claim: fused <= 0.7x unfused) and a
 multi-tracking-step agreement loop.
+
+The ``sharded/`` section models the mesh-native (shard_map'd) hot path:
+per-shard local bytes on the (m, n/shards) column panel plus the ring
+collective bytes (clip scalar; tracking adds the (m, r) tangent psum),
+fused vs the paper-literal schedule distributed the same way (claim:
+per-shard ratio <= 0.7 at every shard count).
+
+``--json [PATH]`` additionally writes the machine-readable
+``BENCH_kernels.json`` (per-section modeled ratios + every timing row)
+so the perf trajectory is trackable across PRs.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
+from pathlib import Path
+
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import record, time_fn
+from benchmarks.common import ROWS, record, time_fn
 from repro.core import subspace as sub
 from repro.core.lowrank_adam import (AdamHP, init_matrix_state,
                                      lowrank_adam_step,
@@ -84,7 +98,7 @@ def hotpath() -> dict:
         record(f"hotpath/step_fused_m{m}_n{n}_r{r}", t_fus,
                f"speedup={t_unf/max(t_fus,1e-9):.2f}x "
                "(CPU jnp — the traffic model is the HBM claim)")
-        summary["shapes"][(m, n, r)] = by
+        summary["shapes"][f"m{m}_n{n}_r{r}"] = by
 
     # numeric agreement: 20 steps, growing gradients keep the limiter hot
     m, n, r = 1024, 2560, 256
@@ -166,7 +180,7 @@ def tracking() -> dict:
         record(f"tracking/step_fused_m{m}_n{n}_r{r}", t_fus,
                f"speedup={t_unf/max(t_fus,1e-9):.2f}x "
                "(CPU jnp — the traffic model is the HBM claim)")
-        summary["shapes"][(m, n, r)] = by
+        summary["shapes"][f"m{m}_n{n}_r{r}"] = by
 
     # agreement: 12 steps with a subspace update every 3rd step — per-step
     # from the same state so Adam's normalization doesn't compound drift
@@ -208,7 +222,63 @@ def tracking() -> dict:
     return summary
 
 
-def run() -> None:
+SHARD_COUNTS = (4, 8, 16)
+
+
+def sharded() -> dict:
+    """Mesh-native hot-path byte model: per-shard local + collective bytes
+    for the shard_map'd fused pipelines vs the paper-literal schedules
+    distributed over the same column sharding.  Pure model (the collective
+    structure itself is asserted against compiled HLO in
+    tests/test_mesh_fused.py); returns the summary dict.
+
+    Regime gate: rows are emitted only while the local column count n/g
+    stays >= 2r.  Below that the (r, n/g) state passes and the (m, r)
+    tangent psum stop shrinking relative to the gradient panel and the
+    fused-vs-literal ratio decays toward 1 — the deployment rule is to
+    stop column-sharding (shard m, or replicate) before that point, so
+    modeling those cells as wins would be dishonest."""
+    summary: dict = {"shapes": {}}
+    for (m, n, r) in HOTPATH_SHAPES:
+        by_shape: dict = {}
+        for shards in SHARD_COUNTS:
+            if not traffic.in_column_regime(n, shards, r):
+                continue
+            for kind, is_tracking in (("plain", False), ("tracking", True)):
+                by_dtype = {}
+                for tag, gb, pb in (("fp32", 4, 4), ("bf16", 2, 2)):
+                    kw = dict(grad_bytes=gb, param_bytes=pb)
+                    if is_tracking:
+                        fus = traffic.sharded_tracking_fused_step_bytes(
+                            m, n, r, shards, **kw)
+                        unf = traffic.sharded_tracking_unfused_step_bytes(
+                            m, n, r, shards, **kw)
+                    else:
+                        fus = traffic.sharded_fused_step_bytes(
+                            m, n, r, shards, **kw)
+                        unf = traffic.sharded_unfused_step_bytes(
+                            m, n, r, shards, **kw)
+                    ratio = fus.total / unf.total
+                    by_dtype[tag] = {
+                        "ratio": ratio,
+                        "fused_local_bytes": fus.local.total,
+                        "fused_collective_bytes": fus.collective_bytes,
+                        "unfused_total_bytes": unf.total,
+                    }
+                    record(
+                        f"sharded/traffic_{kind}_{tag}_m{m}_n{n}_r{r}"
+                        f"_g{shards}", 0.0,
+                        f"local={fus.local.total} "
+                        f"collective={fus.collective_bytes} "
+                        f"unfused={unf.total} ratio={ratio:.3f} "
+                        f"target<=0.7 "
+                        f"{'PASS' if ratio <= 0.7 else 'FAIL'}")
+                by_shape[f"{kind}_g{shards}"] = by_dtype
+        summary["shapes"][f"m{m}_n{n}_r{r}"] = by_shape
+    return summary
+
+
+def run(json_path: str | None = None) -> dict:
     key = jax.random.PRNGKey(0)
     for (m, n, r) in [(1024, 2736, 256), (2048, 5461, 512)]:
         G = jax.random.normal(key, (m, n), jnp.float32)
@@ -239,9 +309,28 @@ def run() -> None:
         record(f"kernels/pa_rotation_rank1_m{m}_n{n}_r{r}", t_r1,
                f"flops~{6*r*n:.2e} speedup={t_dense/max(t_r1,1e-9):.2f}x")
 
-    hotpath()
-    tracking()
+    sections = {"hotpath": hotpath(), "tracking": tracking(),
+                "sharded": sharded()}
+    if json_path:
+        payload = {
+            "sections": sections,
+            "rows": [{"name": nm, "us_per_call": us, "derived": dv}
+                     for nm, us, dv in ROWS],
+        }
+        Path(json_path).write_text(json.dumps(payload, indent=2))
+        print(f"[kernels_bench] wrote {json_path}", flush=True)
+    return sections
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", nargs="?", const="BENCH_kernels.json",
+                    default=None, metavar="PATH",
+                    help="write machine-readable results "
+                         "(default path: BENCH_kernels.json)")
+    args = ap.parse_args()
+    run(json_path=args.json)
 
 
 if __name__ == "__main__":
-    run()
+    main()

@@ -159,8 +159,18 @@ def hotpath_table(shapes=((1024, 2736, 256), (2048, 5461, 512),
 
     Both step kinds are memory-bound at r << m, so bytes / HBM_BW is the
     step-time model the fused pipelines attack; with the tracking step
-    fused too, *every* optimizer step is on the single-pass schedule."""
-    from repro.kernels.traffic import (fused_step_bytes,
+    fused too, *every* optimizer step is on the single-pass schedule.
+
+    The sharded rows model the mesh-native (shard_map'd) hot path: local
+    bytes on the per-device (m, n/g) column panel plus ring-collective
+    wire bytes (clip scalar; tracking adds the (m, r) tangent psum), with
+    the per-shard HBM time next to them — the fusion win must survive
+    distribution (ratio stays <= 0.7)."""
+    from repro.kernels.traffic import (fused_step_bytes, in_column_regime,
+                                      sharded_fused_step_bytes,
+                                      sharded_tracking_fused_step_bytes,
+                                      sharded_tracking_unfused_step_bytes,
+                                      sharded_unfused_step_bytes,
                                       tracking_fused_step_bytes,
                                       tracking_unfused_step_bytes,
                                       unfused_step_bytes)
@@ -183,6 +193,35 @@ def hotpath_table(shapes=((1024, 2736, 256), (2048, 5461, 512),
                 f"| {kind} | {m} | {n} | {r} | {unf.total/1e6:.1f} | "
                 f"{fus.total/1e6:.1f} | {fus.total/unf.total:.3f} | "
                 f"{unf.total/HBM_BW*1e6:.1f} | {fus.total/HBM_BW*1e6:.1f} |")
+    lines += [
+        "\n### Sharded hot path (column-sharded; g = largest of 16/8/4 "
+        "inside the n/g >= 2r regime; per-device bytes = "
+        "local + collective)\n",
+        "| step | m | n | r | g | unfused MB/dev | fused MB/dev | ratio | "
+        "collective KB | fused us @HBM |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for kind, unf_fn, fus_fn in (
+            ("plain@sharded", sharded_unfused_step_bytes,
+             sharded_fused_step_bytes),
+            ("tracking@sharded", sharded_tracking_unfused_step_bytes,
+             sharded_tracking_fused_step_bytes)):
+        for (m, n, r) in shapes:
+            g = next((c for c in (16, 8, 4)
+                      if in_column_regime(n, c, r)), None)
+            if g is None:
+                lines.append(
+                    f"| {kind} | {m} | {n} | {r} | – | no shard count in "
+                    "(16, 8, 4) divides n inside the n/g >= 2r regime | "
+                    "| | |")
+                continue
+            unf = unf_fn(m, n, r, g, grad_bytes=2, param_bytes=2)
+            fus = fus_fn(m, n, r, g, grad_bytes=2, param_bytes=2)
+            lines.append(
+                f"| {kind} | {m} | {n} | {r} | {g} | {unf.total/1e6:.2f} | "
+                f"{fus.total/1e6:.2f} | {fus.total/unf.total:.3f} | "
+                f"{fus.collective_bytes/1e3:.1f} | "
+                f"{fus.total/HBM_BW*1e6:.1f} |")
     return "\n".join(lines)
 
 

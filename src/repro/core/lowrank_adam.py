@@ -157,7 +157,8 @@ def _limiter(lam_norm: Array, lam_prev: Array, zeta: float
 
 
 def _fused_step(G, st, step, hp, rotated, S, recovery, backend, lr,
-                weight_decay, param, out_dtype, gsq=None) -> MatrixStepOut:
+                weight_decay, param, out_dtype, gsq=None,
+                axis_name=None) -> MatrixStepOut:
     """Single-pass hot-path schedule (one read of G per pass, final-dtype
     write):
 
@@ -177,6 +178,13 @@ def _fused_step(G, st, step, hp, rotated, S, recovery, backend, lr,
     ``project_tangent_colnorms`` launch — the norms are basis-independent),
     in which case the projection onto the *new* basis runs through the
     plain ``project`` kernel instead of recomputing them.
+
+    With ``axis_name`` set (running inside ``shard_map`` with G, Gt, M, V
+    column-sharded and S replicated) every pass above is shard-local —
+    the projection, the moments, phi and the update are all per-column —
+    except the Eq. 12 clip scalar, whose closed form sums over columns:
+    ``||Lam||^2 = sum_shards sum_j phi_j^2 (||G_:,j||^2 - ||Gt_:,j||^2)``.
+    That one scalar psum is the plain fused step's only collective.
     """
     if gsq is None:
         Gt, gsq = backend.project_colnorms(S, G)
@@ -199,6 +207,8 @@ def _fused_step(G, st, step, hp, rotated, S, recovery, backend, lr,
         keep = (resid_sq > _RESID_REL_FLOOR * gsq).astype(jnp.float32)
         phi = keep * jnp.sqrt(gtosq) / jnp.maximum(jnp.sqrt(gtsq), _TINY)
         lam_sq = jnp.sum(phi * phi * resid_sq)
+        if axis_name is not None:
+            lam_sq = jax.lax.psum(lam_sq, axis_name)
         lam_norm = jnp.sqrt(lam_sq)
         clip, lam_new = _limiter(lam_norm, st.lam_prev, hp.zeta)
         upd = backend.fused_update(G, S, Gt, Gto, phi, coef, clip,
@@ -230,6 +240,7 @@ def lowrank_adam_step(
     param: Optional[Array] = None,
     out_dtype=None,
     precomputed_gsq: Optional[Array] = None,
+    axis_name=None,
 ) -> MatrixStepOut:
     """One Alg. 1 iteration for a single matrix.
 
@@ -250,6 +261,11 @@ def lowrank_adam_step(
     this runs the fused single-pass schedule (see :func:`_fused_step`);
     ``precomputed_gsq`` lets the fused tracking step hand down the
     per-column ||G_:,j||^2 its subspace-update pass already produced.
+
+    ``axis_name`` marks the step as running inside ``shard_map`` with G
+    column-sharded over that mesh axis (S replicated, M/V sharded with
+    G's columns): all passes are shard-local except the recovery-norm
+    reduction, which psums once over the axis.
     """
     S = st.S if S_new is None else S_new
     out_dtype = out_dtype or jnp.float32
@@ -261,7 +277,7 @@ def lowrank_adam_step(
         # repro.kernels.traffic charges G reads at the gradient dtype).
         return _fused_step(G, st, step, hp, rotated, S, recovery, backend,
                            lr, weight_decay, param, out_dtype,
-                           gsq=precomputed_gsq)
+                           gsq=precomputed_gsq, axis_name=axis_name)
 
     G = G.astype(jnp.float32)
 
@@ -300,7 +316,10 @@ def lowrank_adam_step(
         else:
             resid = G - S @ Gt                        # (m, n) orthogonal component
             Lam = resid * phi[None, :]
-        lam_norm = jnp.linalg.norm(Lam)
+        lam_sq = jnp.sum(Lam * Lam)
+        if axis_name is not None:                     # column-sharded shard_map
+            lam_sq = jax.lax.psum(lam_sq, axis_name)
+        lam_norm = jnp.sqrt(lam_sq)
         scale, lam_new = _limiter(lam_norm, st.lam_prev, hp.zeta)
         Lam = Lam * scale
         delta = hp.scale * (Ghat + Lam)

@@ -30,6 +30,14 @@ class ParamPlan:
     batch_dims:  number of leading stack dims to vmap over.
     m, n:        post-transpose trailing matrix dims (m <= n).
     rank:        effective projection rank for this leaf.
+    spec:        canonical per-dim mesh-axis assignment for the leaf
+                 (lead..., m_axes, n_axes) with each entry None, a mesh
+                 axis name, or a tuple of names — already transposed into
+                 the canonical (m, n) orientation.  None when the caller
+                 provided no sharding information.  Static and hashable,
+                 like everything else here, so same-layout leaves can
+                 share a bucket and the shard_map'd hot path can derive
+                 its in/out specs at trace time.
     """
 
     mode: str
@@ -38,10 +46,26 @@ class ParamPlan:
     m: int
     n: int
     rank: int
+    spec: Any = None
+
+
+def canonicalize_spec(spec: Any, ndim: int, transpose: bool) -> Any:
+    """PartitionSpec (original leaf layout) -> canonical hashable tuple.
+
+    Pads the spec to ``ndim`` entries and swaps the trailing two when the
+    plan transposes, so ``result[-2]`` / ``result[-1]`` are always the
+    canonical m / n axis assignments.
+    """
+    if spec is None:
+        return None
+    entries = tuple(spec) + (None,) * (ndim - len(tuple(spec)))
+    if transpose:
+        entries = entries[:-2] + (entries[-1], entries[-2])
+    return entries
 
 
 def plan_for_shape(shape: tuple[int, ...], rank: int,
-                   min_dim: int = 2) -> ParamPlan:
+                   min_dim: int = 2, spec: Any = None) -> ParamPlan:
     """Derive the plan for one leaf.
 
     Rules (matching GaLore's reference behaviour, which the paper adopts):
@@ -64,13 +88,24 @@ def plan_for_shape(shape: tuple[int, ...], rank: int,
         m=m,
         n=n,
         rank=min(rank, small),
+        spec=canonicalize_spec(spec, len(shape), transpose),
     )
 
 
-def make_plans(params: Any, rank: int) -> Any:
-    """Pytree of ParamPlan mirroring ``params`` (plans are leaves)."""
+def make_plans(params: Any, rank: int, specs: Any = None) -> Any:
+    """Pytree of ParamPlan mirroring ``params`` (plans are leaves).
+
+    ``specs``, when given, is a pytree of PartitionSpec mirroring
+    ``params``; each leaf's spec is canonicalized into the plan so
+    bucketing and the sharded hot path can key off it statically.
+    """
+    if specs is None:
+        return jax.tree.map(
+            lambda p: plan_for_shape(tuple(np.shape(p)), rank), params
+        )
     return jax.tree.map(
-        lambda p: plan_for_shape(tuple(np.shape(p)), rank), params
+        lambda p, s: plan_for_shape(tuple(np.shape(p)), rank, spec=s),
+        params, specs,
     )
 
 
@@ -143,8 +178,45 @@ def map_rank(fn, batch_dims: int, total_elems: int):
 
 
 def bucket_key(plan: ParamPlan, param_dtype) -> tuple:
-    """Leaves sharing this key can execute as one stacked batch."""
-    return (plan.m, plan.n, plan.rank, jax.numpy.dtype(param_dtype).name)
+    """Leaves sharing this key can execute as one stacked batch.
+
+    The canonical (m, n) sharding is part of the key: stacking two leaves
+    with different per-device layouts would force GSPMD to reshard one of
+    them into the other's layout every step (the measured 10x memory
+    blow-up that made multi-device bucketing opt-in before specs were
+    threaded through the plans).  Same-(m, n, rank, dtype, spec) leaves
+    concatenate along a fresh replicated leading axis — a layout-preserving
+    operation on every shard.  Lead-dim sharding is deliberately NOT part
+    of the key: leaves whose stack dims are sharded never bucket at all
+    (see :func:`spec_lead_sharded`; the dispatch layer gives them solo
+    keys), and for everything else the lead entries are replicated, so
+    only the trailing (m_axes, n_axes) pair distinguishes layouts.
+    """
+    mn_spec = None if plan.spec is None else plan.spec[-2:]
+    return (plan.m, plan.n, plan.rank, jax.numpy.dtype(param_dtype).name,
+            mn_spec)
+
+
+def spec_lead_sharded(plan: ParamPlan) -> bool:
+    """True when any leading stack dim of the leaf is sharded — such
+    leaves never bucket (concatenating along a sharded axis communicates)
+    and never take the column-shard_map'd hot path."""
+    if plan.spec is None:
+        return False
+    return any(a is not None for a in plan.spec[:plan.batch_dims])
+
+
+def spec_column_axes(plan: ParamPlan):
+    """Mesh axes the canonical n (column) dim is sharded over, as a tuple
+    of axis names — or None when the leaf is not in the column-sharded
+    regime the shard_map'd fused hot path supports (n sharded, m and all
+    lead dims replicated)."""
+    if plan.spec is None or plan.mode != "lowrank":
+        return None
+    m_ax, n_ax = plan.spec[-2], plan.spec[-1]
+    if n_ax is None or m_ax is not None or spec_lead_sharded(plan):
+        return None
+    return n_ax if isinstance(n_ax, tuple) else (n_ax,)
 
 
 def matrix_count(plan: ParamPlan, shape: tuple[int, ...]) -> int:

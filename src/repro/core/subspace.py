@@ -258,6 +258,7 @@ def track_subspace(
     exact_top1: bool = False,
     power_iters: int = 24,
     backend=None,
+    axis_name=None,
 ) -> TrackResult:
     """Grassmannian subspace-tracking update (SubTrack++ Alg. 1, update block).
 
@@ -278,14 +279,26 @@ def track_subspace(
     never upcast to an (m, n) fp32 copy (kernels cast per tile).  The
     tangent is then always the residual-free fused form; ``fused_tangent``
     only selects the schedule on the jnp path.
+
+    With ``axis_name`` set this runs inside ``shard_map`` with G (and A,
+    and the column norms) column-sharded over that mesh axis while S is
+    replicated.  The tangent is linear in the cross-shard accumulator
+    ``W = G A^T`` — expand ``T = -2 W + 2 S (S^T W)`` with
+    ``A A^T = S^T W`` — so the psum of the shard-local tangents IS the
+    global tangent: ONE (m, r) all-reduce, after which the geodesic runs
+    replicated on every shard and S_new is bitwise-identical across the
+    mesh.  The per-column quantities (A, gsq) stay shard-local.
     """
     if backend is not None:
-        A, gsq, T = backend.project_tangent_colnorms(S, G)
+        A, gsq, T = backend.project_tangent_colnorms(S, G,
+                                                     axis_name=axis_name)
     else:
         G = G.astype(jnp.float32)
         A = project(S, G)                               # (r, n)
         gsq = None
         T = (tangent_fused if fused_tangent else tangent_naive)(S, G, A)
+        if axis_name is not None:
+            T = jax.lax.psum(T, axis_name)
     triple = (top1_eigh if exact_top1 else functools.partial(
         top1_power, n_iter=power_iters))(T)
     # DESCENT: the geodesic must follow -grad F to *minimize* the estimation

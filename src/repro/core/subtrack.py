@@ -40,6 +40,8 @@ from typing import Any, Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core import plan as plan_lib
 from repro.core import subspace as sub
@@ -77,12 +79,15 @@ class LowRankConfig:
     reorth_interval: int = 0            # QR scrub every N subspace updates (0=off)
     use_kernels: bool = False           # Pallas kernels (fused single-pass hot path)
     # Stack same-(m, n, rank) leaves into one vmapped launch per step instead
-    # of one dispatch per leaf.  None (default) = auto: enabled only on
-    # single-device runs.  On a sharded mesh the flatten + concatenate can
-    # force GSPMD to reshard differently-laid-out leaves into a common
-    # layout every step (cf. the refuted lax.map experiment in plan.py —
-    # a measured 10x memory blow-up on sharded expert banks), so
-    # multi-device runs must opt in explicitly with True.
+    # of one dispatch per leaf.  None (default) = auto: enabled on
+    # single-device runs, and on sharded meshes whenever the optimizer was
+    # built with (mesh, param_specs) — the spec-aware bucket_key then only
+    # stacks identically-laid-out leaves, which is layout-preserving per
+    # shard.  Spec-less multi-device runs still opt in explicitly with
+    # True: without specs the flatten + concatenate can force GSPMD to
+    # reshard differently-laid-out leaves into a common layout every step
+    # (cf. the refuted lax.map experiment in plan.py — a measured 10x
+    # memory blow-up on sharded expert banks).
     bucket_leaves: Optional[bool] = None
     osd_lr: float = 1e-2                # Oja step size for method="osd"
     adam: AdamHP = field(default_factory=AdamHP)
@@ -120,29 +125,40 @@ def _get_backend(cfg: LowRankConfig):
 
 def _plain_matrix_step(cfg: LowRankConfig, hp: AdamHP, G: Array,
                        st: MatrixOptState, step: Array, lr: Array,
-                       param: Optional[Array], out_dtype):
+                       param: Optional[Array], out_dtype, axis_name=None):
     out = lowrank_adam_step(G, st, step, hp, recovery=cfg.recovery,
                             backend=_get_backend(cfg), lr=lr,
                             weight_decay=cfg.weight_decay, param=param,
-                            out_dtype=out_dtype)
+                            out_dtype=out_dtype, axis_name=axis_name)
     return out.delta, out.state
 
 
 def _refresh_subspace(cfg: LowRankConfig, G: Array, st: MatrixOptState,
-                      step: Array, n_updates: Array, backend=None):
+                      step: Array, n_updates: Array, backend=None,
+                      axis_name=None):
     """Compute the new basis per the configured method.
 
     Returns (S_new, rank1_info, gsq): rank1_info is (cos_theta, v) for the
     Grassmann method (enabling the O(rn) rotation) and None otherwise; gsq
     is the per-column ||G_:,j||^2 harvested by the fused Grassmann backend
     pass (basis-independent, reused by the Eq. 12 clip) and None otherwise.
+
+    ``axis_name`` means G arrives column-sharded inside ``shard_map``.
+    Only the Grassmann tracker (whose tangent psums — see
+    ``subspace.track_subspace``) and the frozen subspace are column-local;
+    the SVD/random/Oja refreshes contract over all columns, so the
+    dispatch layer never routes them here sharded.
     """
     rank = st.S.shape[-1]
+    if axis_name is not None and cfg.method not in ("grassmann", "none"):
+        raise ValueError(
+            f"subspace method {cfg.method!r} is not column-shardable; "
+            "the sharded hot path supports methods 'grassmann' and 'none'")
     if cfg.method == "grassmann":
         res = sub.track_subspace(
             st.S, G, eta=cfg.eta, fused_tangent=cfg.fused_tangent,
             exact_top1=cfg.exact_top1, power_iters=cfg.power_iters,
-            backend=backend)
+            backend=backend, axis_name=axis_name)
         S_new = res.S_new
         if cfg.reorth_interval:
             do = (n_updates % cfg.reorth_interval) == (cfg.reorth_interval - 1)
@@ -168,20 +184,26 @@ def _refresh_subspace(cfg: LowRankConfig, G: Array, st: MatrixOptState,
 
 def _tracking_matrix_step(cfg: LowRankConfig, hp: AdamHP, G: Array,
                           st: MatrixOptState, step: Array, n_updates: Array,
-                          lr: Array, param: Optional[Array], out_dtype):
+                          lr: Array, param: Optional[Array], out_dtype,
+                          axis_name=None):
     """The 1-of-k subspace-update step, fused end to end when kernels are
     on: project_tangent_colnorms (one read of G) -> geodesic -> O(rn)
     rank-1 rotation of (M, V) -> the same project/adam/fused_update
     epilogue the plain steps use (the column norms from the first launch
     feed the Eq. 12 clip, so no norm pass repeats).  Without kernels this
-    is the paper-literal unfused schedule."""
+    is the paper-literal unfused schedule.
+
+    Under ``axis_name`` (column-sharded shard_map) the step needs exactly
+    two collectives: the (m, r) tangent psum inside the refresh, after
+    which the geodesic and the rank-1 (M, V) rotation run replicated /
+    shard-local, and the epilogue's scalar clip psum."""
     backend = _get_backend(cfg)
     # the kernels (and their ref fallbacks) cast per tile, so keep the
     # gradient in its storage dtype on the fused path instead of
     # materializing an (m, n) fp32 copy up front
     Gc = G if backend is not None else G.astype(jnp.float32)
     S_new, rank1_info, gsq = _refresh_subspace(cfg, Gc, st, step, n_updates,
-                                               backend)
+                                               backend, axis_name)
 
     rotated = None
     if cfg.projection_aware:
@@ -199,7 +221,8 @@ def _tracking_matrix_step(cfg: LowRankConfig, hp: AdamHP, G: Array,
     out = lowrank_adam_step(Gc, st, step, hp, rotated=rotated, S_new=S_new,
                             recovery=cfg.recovery, backend=backend,
                             lr=lr, weight_decay=cfg.weight_decay, param=param,
-                            out_dtype=out_dtype, precomputed_gsq=gsq)
+                            out_dtype=out_dtype, precomputed_gsq=gsq,
+                            axis_name=axis_name)
     return out.delta, out.state
 
 
@@ -229,8 +252,19 @@ def _leaf_init(plan: plan_lib.ParamPlan, p: Array):
     )
 
 
-def lowrank_optimizer(cfg: LowRankConfig) -> GradientTransform:
-    """Build the SubTrack++/GaLore/Fira/... optimizer for arbitrary pytrees."""
+def lowrank_optimizer(cfg: LowRankConfig, *, mesh=None,
+                      param_specs=None) -> GradientTransform:
+    """Build the SubTrack++/GaLore/Fira/... optimizer for arbitrary pytrees.
+
+    ``mesh`` + ``param_specs`` (a pytree of PartitionSpec mirroring the
+    params) opt the fused hot path into mesh-native execution: every
+    low-rank leaf whose canonical column (n) dim is sharded — and whose m
+    and stack dims are not — runs its per-matrix step inside ``shard_map``
+    over the column axes, shard-local except one scalar psum for the
+    Eq. 12 clip (plain steps) plus one (m, r) tangent psum (tracking
+    steps).  Leaves outside that regime, and all runs built without
+    mesh/specs, execute exactly as before under plain GSPMD propagation.
+    """
 
     hp = cfg.adam
 
@@ -267,45 +301,92 @@ def lowrank_optimizer(cfg: LowRankConfig) -> GradientTransform:
         canonical (m, n, rank) and parameter dtype are stacked into one
         vmapped launch per step (``cfg.bucket_leaves``).
         """
-        plans = plan_lib.make_plans(grads, cfg.rank)
+        plans = plan_lib.make_plans(grads, cfg.rank, specs=param_specs)
         step = state.step
         n_upd = state.n_updates
         lr32 = jnp.asarray(lr, jnp.float32)
+        sharded_hotpath = mesh is not None and param_specs is not None
+        # Bucketing auto-on: single-device always; multi-device once the
+        # caller supplied specs (the spec-aware bucket_key then guarantees
+        # stacking is layout-preserving on every shard — the cross-leaf
+        # reshard blow-up that used to force multi-device opt-in cannot
+        # occur).  Spec-less multi-device runs still require explicit
+        # bucket_leaves=True.
         bucket = (cfg.bucket_leaves if cfg.bucket_leaves is not None
-                  else jax.device_count() == 1)
+                  else jax.device_count() == 1 or sharded_hotpath)
 
-        def matrix_fn(out_dtype):
+        def shard_axes_for(plan):
+            """Mesh axes to shard_map this leaf's matrix step over, or
+            None for the plain (GSPMD-propagated) path.  The column-local
+            scheme needs the fused kernel schedule; tracking steps
+            additionally need a column-separable refresh method."""
+            if not sharded_hotpath or not cfg.use_kernels:
+                return None
+            if do_subspace_update and cfg.method not in ("grassmann", "none"):
+                return None
+            return plan_lib.spec_column_axes(plan)
+
+        def matrix_fn(out_dtype, axis_name=None):
             """Per-(m, n)-matrix step closure; ``p`` is threaded only when
             weight decay needs it (it is DCE'd otherwise)."""
             if do_subspace_update:
                 def base(G, s, p=None):
                     return _tracking_matrix_step(cfg, hp, G, s, step, n_upd,
-                                                 lr32, p, out_dtype)
+                                                 lr32, p, out_dtype,
+                                                 axis_name=axis_name)
             else:
                 def base(G, s, p=None):
                     return _plain_matrix_step(cfg, hp, G, s, step, lr32, p,
-                                              out_dtype)
+                                              out_dtype,
+                                              axis_name=axis_name)
             return base
 
-        def run_stacked(g2, st, p2, batch_dims, out_dtype):
+        def run_stacked(g2, st, p2, batch_dims, out_dtype, axes=None):
             """Run the matrix step over a (possibly stacked) canonical
-            gradient; returns (delta_stacked, new_state_stacked)."""
+            gradient; returns (delta_stacked, new_state_stacked).
+
+            With ``axes`` (mesh axis names sharding the column dim) the
+            whole stacked step runs inside ``shard_map``: each device
+            launches the existing kernels on its (stack, m, n_loc) panel
+            and the two documented psums are the only cross-device
+            traffic.
+            """
             total_elems = int(np.prod(g2.shape))
-            base = matrix_fn(out_dtype)
+            axis_name = None
+            if axes is not None:
+                n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+                total_elems //= n_shards
+                axis_name = axes if len(axes) > 1 else axes[0]
+            base = matrix_fn(out_dtype, axis_name)
             if cfg.weight_decay:
                 fn = plan_lib.map_rank(lambda G, s, p: base(G, s, p),
                                        batch_dims, total_elems)
-                return fn(g2, st, p2)
-            fn = plan_lib.map_rank(lambda G, s: base(G, s),
-                                   batch_dims, total_elems)
-            return fn(g2, st)
+                args = (g2, st, p2)
+            else:
+                fn = plan_lib.map_rank(lambda G, s: base(G, s),
+                                       batch_dims, total_elems)
+                args = (g2, st)
+            if axes is None:
+                return fn(*args)
+            lead = (None,) * batch_dims
+            gspec = P(*lead, None, axis_name)
+            stspec = MatrixOptState(S=P(*lead, None, None),
+                                    M=P(*lead, None, axis_name),
+                                    V=P(*lead, None, axis_name),
+                                    lam_prev=P(*lead))
+            in_specs = (gspec, stspec) + \
+                ((gspec,) if cfg.weight_decay else ())
+            sharded = shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                out_specs=(gspec, stspec), check_rep=False)
+            return sharded(*args)
 
         def leaf_single(plan, g, st, p):
             """Unbucketed path: one launch for one leaf (original layout —
             no extra reshapes, so sharded stacks keep their layout)."""
             g2 = plan_lib.canonical_grad(g, plan)
             p2 = plan_lib.canonical_grad(p, plan) if cfg.weight_decay else None
-            delta, new_st = run_stacked(g2, st, p2, plan.batch_dims, p.dtype)
+            delta, new_st = run_stacked(g2, st, p2, plan.batch_dims, p.dtype,
+                                        axes=shard_axes_for(plan))
             return plan_lib.uncanonical_update(delta, plan), new_st
 
         is_plan = lambda x: isinstance(x, plan_lib.ParamPlan)  # noqa: E731
@@ -332,6 +413,10 @@ def lowrank_optimizer(cfg: LowRankConfig) -> GradientTransform:
                 updates_out[i], states_out[i] = upd, new_st
             else:
                 key = plan_lib.bucket_key(plan, param_leaves[i].dtype)
+                if plan_lib.spec_lead_sharded(plan):
+                    # concatenating along a sharded stack axis would
+                    # communicate — such leaves always run solo
+                    key = key + ("solo", i)
                 buckets.setdefault(key, []).append(i)
 
         for key, idxs in buckets.items():
@@ -363,7 +448,8 @@ def lowrank_optimizer(cfg: LowRankConfig) -> GradientTransform:
             st_all = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
                                   *st_parts)
             delta_all, st_new_all = run_stacked(
-                g_all, st_all, p_all, 1, param_leaves[idxs[0]].dtype)
+                g_all, st_all, p_all, 1, param_leaves[idxs[0]].dtype,
+                axes=shard_axes_for(plan_leaves[idxs[0]]))
 
             # split back to leaves and restore each one's stack layout
             splits = list(np.cumsum(sizes)[:-1])
@@ -407,37 +493,46 @@ def lowrank_optimizer(cfg: LowRankConfig) -> GradientTransform:
 # ---------------------------------------------------------------------------
 
 
+def _build(overrides: dict) -> GradientTransform:
+    """Split distribution kwargs (mesh, param_specs) from LowRankConfig
+    fields so every named constructor accepts them uniformly."""
+    mesh = overrides.pop("mesh", None)
+    param_specs = overrides.pop("param_specs", None)
+    return lowrank_optimizer(LowRankConfig(**overrides), mesh=mesh,
+                             param_specs=param_specs)
+
+
 def subtrack(**overrides) -> GradientTransform:
     """SubTrack++ (full): Grassmann tracking + projection-aware + recovery."""
-    return lowrank_optimizer(LowRankConfig(**overrides))
+    return _build(overrides)
 
 
 def subtrack_fast(**overrides) -> GradientTransform:
     """SubTrack++ with all beyond-paper perf toggles on (§Perf variant)."""
     overrides.setdefault("rank1_rotation", True)
     overrides.setdefault("fused_tangent", True)
-    return lowrank_optimizer(LowRankConfig(**overrides))
+    return _build(overrides)
 
 
 def grassmann_only(**overrides) -> GradientTransform:
     """Ablation: pure Grassmannian tracking (Fig. 3 baseline curve)."""
     overrides.setdefault("projection_aware", False)
     overrides.setdefault("recovery", False)
-    return lowrank_optimizer(LowRankConfig(**overrides))
+    return _build(overrides)
 
 
 def galore(**overrides) -> GradientTransform:
     overrides.setdefault("method", "svd")
     overrides.setdefault("projection_aware", False)
     overrides.setdefault("recovery", False)
-    return lowrank_optimizer(LowRankConfig(**overrides))
+    return _build(overrides)
 
 
 def fira(**overrides) -> GradientTransform:
     overrides.setdefault("method", "svd")
     overrides.setdefault("projection_aware", False)
     overrides.setdefault("recovery", True)
-    return lowrank_optimizer(LowRankConfig(**overrides))
+    return _build(overrides)
 
 
 def golore(**overrides) -> GradientTransform:
@@ -445,14 +540,14 @@ def golore(**overrides) -> GradientTransform:
     overrides.setdefault("projection_aware", False)
     overrides.setdefault("recovery", False)
     overrides.setdefault("init", "randomized")
-    return lowrank_optimizer(LowRankConfig(**overrides))
+    return _build(overrides)
 
 
 def osd(**overrides) -> GradientTransform:
     overrides.setdefault("method", "osd")
     overrides.setdefault("projection_aware", False)
     overrides.setdefault("recovery", False)
-    return lowrank_optimizer(LowRankConfig(**overrides))
+    return _build(overrides)
 
 
 def apollo(**overrides) -> GradientTransform:
@@ -463,4 +558,4 @@ def apollo(**overrides) -> GradientTransform:
     overrides.setdefault("projection_aware", False)
     overrides.setdefault("recovery", True)
     overrides.setdefault("init", "randomized")
-    return lowrank_optimizer(LowRankConfig(**overrides))
+    return _build(overrides)

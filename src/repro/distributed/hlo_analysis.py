@@ -199,8 +199,12 @@ def _dot_flops(op: Op, shapes: dict[str, str]) -> float:
     dims, numel = _numel_first(op.shape)
     if numel == 0:
         return 0.0
-    # contracted size from lhs operand shape + contracting dims
-    mo = re.search(r"\(\s*%([\w\.\-]+)", op.line[op.line.find(op.opcode):])
+    # contracted size from lhs operand shape + contracting dims; the
+    # operand list may be typed (``dot(f32[64,64]{1,0} %lhs, ...)``) or
+    # bare (``dot(%lhs, ...)``) depending on the HLO printer, so take the
+    # first %name after the call paren rather than requiring "(%"
+    mo = re.search(r"%([\w\.\-]+)",
+                   op.line.split(op.opcode + "(", 1)[-1])
     contracted = 1
     mc = _CONTRACT_RE.search(op.line)
     if mo and mc and mo.group(1) in shapes:
@@ -335,3 +339,16 @@ def analyze_hlo(text: str, total_devices: int,
     s.dot_flops_by_name = dict(sorted(
         s.dot_flops_by_name.items(), key=lambda kv: -kv[1])[:keep_top])
     return s
+
+
+def summarize_compiled(compiled, n_devices: int | None = None) -> HloSummary:
+    """Analyze a ``jax.jit(...).lower(...).compile()`` object directly.
+
+    Convenience wrapper used by tests and the dry-run driver to assert
+    collective structure (e.g. the sharded fused optimizer step must
+    contain exactly its two documented psums and nothing else).
+    """
+    import jax
+
+    return analyze_hlo(compiled.as_text(),
+                       n_devices or jax.device_count())

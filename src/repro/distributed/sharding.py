@@ -25,6 +25,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import plan as plan_lib
 from repro.core.lowrank_adam import DenseOptState, MatrixOptState
+from repro.kernels import traffic
 from repro.core.subtrack import OptState
 from repro.distributed.context import MeshContext
 
@@ -260,3 +261,53 @@ def to_named(spec_tree: Any, ctx: MeshContext) -> Any:
     return jax.tree.map(
         lambda s: NamedSharding(ctx.mesh, s), spec_tree,
         is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Mesh-native fused hot path: column-sharded optimizer layout
+# ---------------------------------------------------------------------------
+
+
+def hotpath_param_specs(params_shape: Any, ctx: MeshContext,
+                        rank: int) -> Any:
+    """Column-sharded layout for the shard_map'd fused optimizer hot path.
+
+    Each low-rank leaf's canonical n (column) dim shards over the first
+    mesh axis that divides it — ``model`` preferred, then the DP axes —
+    while the canonical m dim and all leading stack dims stay replicated.
+    Under this layout the fused per-matrix step is shard-local except the
+    two documented collectives (scalar clip psum; tracking adds the
+    (m, r) tangent psum), and M/V — the dominant optimizer memory —
+    shard with the columns.  Dense leaves (vectors, small matrices)
+    replicate; they are noise next to the projected matrices.
+
+    Regime gate (matching the byte model in ``repro.kernels.traffic``
+    and the ``sharded/`` bench section): an axis is only used while the
+    local column count keeps ``n / axis_size >= 2 * rank`` — below that
+    the (r, n/g) state passes and the tangent psum stop amortizing and
+    column-sharding is the wrong axis, so the leaf stays replicated
+    rather than shipping a layout the model itself refuses to count as
+    a win.
+
+    Feed the result to ``lowrank_optimizer(cfg, mesh=ctx.mesh,
+    param_specs=...)`` and place params/grads with the same specs.
+    """
+    candidates = (ctx.model_axis,) + tuple(ctx.batch_axes)
+
+    def leaf(p):
+        shape = tuple(p.shape)
+        plan = plan_lib.plan_for_shape(shape, rank)
+        if plan.mode != "lowrank":
+            return P()
+        # canonical n maps back to the original row dim when transposed
+        n_dim = len(shape) - 2 if plan.transpose else len(shape) - 1
+        spec: list = [None] * len(shape)
+        for ax in candidates:
+            size = ctx.mesh.shape[ax]
+            if size > 1 and traffic.in_column_regime(plan.n, size,
+                                                     plan.rank):
+                spec[n_dim] = ax
+                break
+        return P(*spec)
+
+    return jax.tree.map(leaf, params_shape)

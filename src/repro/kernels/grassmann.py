@@ -58,6 +58,18 @@ and accumulates on the MXU in fp32; only ``fused_update`` writes a
 non-fp32 result (the parameter dtype).  All kernels run in interpret
 mode on CPU for validation (tests/test_kernels.py sweeps shapes/dtypes
 against the pure-jnp oracles in repro.kernels.ref).
+
+Mesh-native contract (the invariant the shard_map'd hot path relies on
+— see repro.core.subtrack / repro.kernels.ops): every kernel here is
+COLUMN-SEPARABLE.  With S replicated and G column-sharded, running a
+kernel on a shard's (m, n_loc) panel produces exactly the global
+result's column slice — for per-column outputs (A, the norms, Gt, Gto,
+M, V, phi, the update) — or a partial sum whose cross-shard psum is the
+global value (the tangent, via linearity in W = G A^T; the Eq. 12 norm,
+via the column sum).  A kernel added here that couples columns in any
+other way (e.g. row-normalizing across n) would silently break the
+sharded path's two-collective structure; keep new kernels
+column-separable or give them an explicit axis-aware wrapper in ops.py.
 """
 
 from __future__ import annotations

@@ -31,6 +31,15 @@ interpret mode is a correctness tool, not a performance path), otherwise
 the pure-jnp reference executes.  Shapes that don't tile evenly fall back
 to the reference (the assigned archs' dims are all 128-aligned; the
 fallback keeps odd user models working).
+
+Mesh-native execution: on a column-sharded mesh the optimizer calls
+these entry points from inside ``shard_map`` with per-shard (m, n_loc)
+panels — the kernels are reused unchanged (every fused pass is
+per-column), and the only axis-aware entry point is
+``project_tangent_colnorms(axis_name=...)``, which psums the shard-local
+tangents into the global one.  Tile-alignment is then judged against the
+LOCAL column count: shards whose n_loc doesn't tile fall back to the
+reference per shard, exactly like odd shapes on one device.
 """
 
 from __future__ import annotations
@@ -125,22 +134,37 @@ def project_colnorms(S: Array, G: Array) -> tuple[Array, Array]:
     return grassmann.project_colnorms(S, G, interpret=(mode == "interpret"))
 
 
-def project_tangent_colnorms(S: Array, G: Array
+def project_tangent_colnorms(S: Array, G: Array, *, axis_name=None
                              ) -> tuple[Array, Array, Array]:
     """Tracking-step front end: (A = S^T G, ||G_:,j||^2, Grassmann tangent T)
     from one pass over G when the full-m panels fit VMEM
-    (m <= grassmann.MAX_FUSED_TANGENT_M), two passes otherwise."""
+    (m <= grassmann.MAX_FUSED_TANGENT_M), two passes otherwise.
+
+    ``axis_name`` is the mesh-native entry point: inside ``shard_map``
+    with G column-sharded and S replicated, the same local launch runs on
+    each shard's (m, n_loc) panel unchanged, and the shard-local tangents
+    are psum'd into the global one — valid because the tangent is linear
+    in the cross-shard accumulator W = G A^T (T = -2 W + 2 S (S^T W), and
+    A A^T = S^T W since A = S^T G).  This is the tracking step's single
+    (m, r) collective; A and the column norms stay shard-local.
+    """
     mode = _mode()
     m, r = S.shape
     n = G.shape[1]
     if mode == "ref" or not _tiles_ok((m, grassmann.BM), (n, grassmann.BN)):
-        return ref.project_tangent_colnorms_ref(S, G)
-    interp = mode == "interpret"
-    if m <= grassmann.MAX_FUSED_TANGENT_M:
-        return grassmann.project_tangent_colnorms(S, G, interpret=interp)
-    A, gsq = grassmann.project_colnorms(S, G, interpret=interp)
-    T = grassmann.tangent(G, A, S, interpret=interp)
-    return A, gsq, T
+        out = ref.project_tangent_colnorms_ref(S, G)
+    elif m <= grassmann.MAX_FUSED_TANGENT_M:
+        out = grassmann.project_tangent_colnorms(
+            S, G, interpret=(mode == "interpret"))
+    else:
+        interp = mode == "interpret"
+        A, gsq = grassmann.project_colnorms(S, G, interpret=interp)
+        T = grassmann.tangent(G, A, S, interpret=interp)
+        out = (A, gsq, T)
+    if axis_name is not None:
+        A, gsq, T = out
+        out = (A, gsq, jax.lax.psum(T, axis_name))
+    return out
 
 
 def adam_lowrank_norms(Gt: Array, M: Array, V: Array, step: Array, *,

@@ -226,3 +226,139 @@ def tracking_traffic_ratio(m: int, n: int, r: int, *,
     unfused = tracking_unfused_step_bytes(m, n, r, grad_bytes=grad_bytes,
                                           param_bytes=param_bytes)
     return fused.total / unfused.total
+
+
+# ---------------------------------------------------------------------------
+# Per-shard byte model: the mesh-native (shard_map'd) hot path
+# ---------------------------------------------------------------------------
+#
+# Under the column-sharded layout (G, M, V, phi sharded over n; S, lam
+# replicated) every pass of both schedules is shard-local on an
+# (m, n/shards) panel, plus collectives:
+#
+#   plain step     — one scalar all-reduce (the Eq. 12 clip closed form);
+#   tracking step  — one (m, r) all-reduce of the tangent accumulator
+#                    (T is linear in W = G A^T, so psumming the
+#                    shard-local tangents yields the global one) plus the
+#                    same clip scalar.
+#
+# Collective wire bytes use the ring all-reduce model (2 (g-1)/g * payload
+# per device — matching repro.distributed.hlo_analysis), charged on top of
+# the local HBM bytes: ICI and HBM are different resources, but a single
+# conservative "total" (local + wire) is what the per-shard ratio below
+# compares, and the collectives are O(1) / O(mr) against O(mn/g) local
+# terms, so they vanish at production shapes.  The paper-literal baseline
+# is charged the SAME collectives (its ||Lam|| reduction / tangent Gram
+# need identical cross-shard sums) — generous, since the unfused schedule
+# would realistically also re-gather intermediates.
+
+
+@dataclass(frozen=True)
+class ShardedHotPathTraffic:
+    """Per-device byte totals for one column-sharded optimizer step."""
+
+    schedule: str
+    shards: int
+    local: HotPathTraffic     # shard-local HBM bytes on the (m, n/g) panel
+    collective_bytes: int     # ring-model wire bytes per device
+
+    @property
+    def total(self) -> int:
+        return self.local.total + self.collective_bytes
+
+
+def allreduce_wire_bytes(payload_bytes: int, group: int) -> int:
+    """Ring all-reduce per-device wire bytes (hlo_analysis formula)."""
+    if group <= 1:
+        return 0
+    return int(2.0 * (group - 1) / group * payload_bytes)
+
+
+def in_column_regime(n: int, shards: int, r: int) -> bool:
+    """The deployment rule for column-sharding a leaf over ``shards``
+    devices: the shard count must divide n AND the local column count
+    must stay >= 2r.  Below that the (r, n/g) state passes and the
+    (m, r) tangent psum stop shrinking relative to the gradient panel
+    and the fused-vs-literal ratio decays toward 1 — shard a different
+    axis (or replicate) instead.  Single source of truth for the layout
+    builder (distributed/sharding.py), the benches and the tests.
+    """
+    return shards >= 1 and n % shards == 0 and n // shards >= 2 * r
+
+
+def _shard_cols(n: int, shards: int) -> int:
+    if shards < 1 or n % shards:
+        raise ValueError(f"n={n} not divisible by shards={shards}")
+    return n // shards
+
+
+def sharded_fused_step_bytes(m: int, n: int, r: int, shards: int, *,
+                             grad_bytes: int = F32,
+                             param_bytes: int = F32) -> ShardedHotPathTraffic:
+    """Mesh-native fused plain step: local fused pipeline on n/shards
+    columns + the scalar clip all-reduce."""
+    local = fused_step_bytes(m, _shard_cols(n, shards), r,
+                             grad_bytes=grad_bytes, param_bytes=param_bytes)
+    return ShardedHotPathTraffic("sharded_fused", shards, local,
+                                 allreduce_wire_bytes(F32, shards))
+
+
+def sharded_unfused_step_bytes(m: int, n: int, r: int, shards: int, *,
+                               grad_bytes: int = F32,
+                               param_bytes: int = F32
+                               ) -> ShardedHotPathTraffic:
+    """Paper-literal plain step distributed the same way (the baseline the
+    per-shard ratio compares against)."""
+    local = unfused_step_bytes(m, _shard_cols(n, shards), r,
+                               grad_bytes=grad_bytes,
+                               param_bytes=param_bytes)
+    return ShardedHotPathTraffic("sharded_unfused", shards, local,
+                                 allreduce_wire_bytes(F32, shards))
+
+
+def sharded_tracking_fused_step_bytes(m: int, n: int, r: int, shards: int, *,
+                                      grad_bytes: int = F32,
+                                      param_bytes: int = F32
+                                      ) -> ShardedHotPathTraffic:
+    """Mesh-native fused tracking step: local fused pipeline + the (m, r)
+    tangent all-reduce + the clip scalar."""
+    local = tracking_fused_step_bytes(m, _shard_cols(n, shards), r,
+                                      grad_bytes=grad_bytes,
+                                      param_bytes=param_bytes)
+    coll = allreduce_wire_bytes(m * r * F32, shards) \
+        + allreduce_wire_bytes(F32, shards)
+    return ShardedHotPathTraffic("sharded_tracking_fused", shards, local,
+                                 coll)
+
+
+def sharded_tracking_unfused_step_bytes(m: int, n: int, r: int, shards: int,
+                                        *, grad_bytes: int = F32,
+                                        param_bytes: int = F32
+                                        ) -> ShardedHotPathTraffic:
+    """Paper-literal tracking step distributed the same way (same two
+    collectives charged — generous to the baseline)."""
+    local = tracking_unfused_step_bytes(m, _shard_cols(n, shards), r,
+                                        grad_bytes=grad_bytes,
+                                        param_bytes=param_bytes)
+    coll = allreduce_wire_bytes(m * r * F32, shards) \
+        + allreduce_wire_bytes(F32, shards)
+    return ShardedHotPathTraffic("sharded_tracking_unfused", shards, local,
+                                 coll)
+
+
+def sharded_traffic_ratio(m: int, n: int, r: int, shards: int, *,
+                          tracking: bool = False, grad_bytes: int = F32,
+                          param_bytes: int = F32) -> float:
+    """Per-shard fused / paper-literal total-byte ratio (target <= 0.7:
+    the single-chip fusion win must survive distribution)."""
+    if tracking:
+        fus = sharded_tracking_fused_step_bytes(
+            m, n, r, shards, grad_bytes=grad_bytes, param_bytes=param_bytes)
+        unf = sharded_tracking_unfused_step_bytes(
+            m, n, r, shards, grad_bytes=grad_bytes, param_bytes=param_bytes)
+    else:
+        fus = sharded_fused_step_bytes(
+            m, n, r, shards, grad_bytes=grad_bytes, param_bytes=param_bytes)
+        unf = sharded_unfused_step_bytes(
+            m, n, r, shards, grad_bytes=grad_bytes, param_bytes=param_bytes)
+    return fus.total / unf.total

@@ -139,16 +139,30 @@ def default_accum(global_batch: int, seq_len: int, dp: int,
     inside HBM for the big train cells (DESIGN.md §5).
 
     Constraints: accum | global_batch and dp | (global_batch / accum) so the
-    microbatch still shards evenly over the DP axes.
+    microbatch still shards evenly over the DP axes.  Selection: the
+    smallest valid accum >= target (fewest scan iterations that still fit),
+    else the largest valid one; 1 when no divisor satisfies the DP
+    constraint (i.e. dp doesn't divide global_batch at all).
+
+    Enumerates divisors directly in O(sqrt(global_batch)) — the previous
+    linear scan walked every integer up to global_batch, which at
+    production global batches (256k sequences and beyond) is millions of
+    iterations on the launcher's critical path.
     """
-    target = max(1, (global_batch // max(dp, 1)) * seq_len // tokens_per_micro)
-    best = 1
-    for a in range(1, global_batch + 1):
-        if global_batch % a == 0 and (global_batch // a) % max(dp, 1) == 0:
-            best = a
-            if a >= target:
-                break
-    return best
+    dp = max(dp, 1)
+    target = max(1, (global_batch // dp) * seq_len // tokens_per_micro)
+    divisors = set()
+    d = 1
+    while d * d <= global_batch:
+        if global_batch % d == 0:
+            divisors.add(d)
+            divisors.add(global_batch // d)
+        d += 1
+    valid = [a for a in divisors if (global_batch // a) % dp == 0]
+    if not valid:
+        return 1
+    at_least = [a for a in valid if a >= target]
+    return min(at_least) if at_least else max(valid)
 
 
 def default_rank(d_model: int) -> int:

@@ -21,6 +21,14 @@ Production behaviours exercised here (and tested in tests/test_train_loop.py):
   Alg. 1's ``t mod k`` branch without bloating the hot compiled program.
 * **warm start**: S_0 initialized from the first batch's gradients
   (Alg. 1 line 1) — skipped automatically on resume.
+* **pipelined host loop**: the next batch is assembled while the device
+  computes the current step, and the blocking ``float(metrics)`` drain
+  trails dispatch by one step, so host work never serializes the device
+  queue (divergence detection runs one step late by design).
+* **mesh-native hot path**: on a multi-device mesh with ``--use-kernels``
+  the low-rank leaves are column-sharded (``hotpath_param_specs``) and
+  the fused optimizer step runs under ``shard_map`` — see
+  repro.core.subtrack for the two-collective contract.
 """
 
 from __future__ import annotations
@@ -117,15 +125,28 @@ def train(argv=None) -> dict:
         rank = args.rank or PAPER_RANKS.get(args.arch,
                                             default_rank(cfg.d_model))
         opt_kw: dict = {}
+        hot_specs = None
         if args.optimizer not in ("adamw", "badam"):
             opt_kw = dict(rank=rank, update_interval=args.update_interval,
                           eta=args.eta, weight_decay=args.weight_decay,
                           use_kernels=args.use_kernels)
+            if args.use_kernels and ctx.mesh.devices.size > 1:
+                # mesh-native fused hot path: column-shard every low-rank
+                # leaf and run the per-matrix step under shard_map (one
+                # scalar psum per plain step, +1 tangent psum on tracking
+                # steps — see repro.core.subtrack)
+                shapes = jax.eval_shape(bundle.init,
+                                        jax.random.PRNGKey(args.seed))
+                hot_specs = sh.hotpath_param_specs(shapes, ctx, rank)
+                opt_kw.update(mesh=ctx.mesh, param_specs=hot_specs)
         elif args.weight_decay:
             opt_kw = dict(weight_decay=args.weight_decay)
         optimizer = get_optimizer(args.optimizer, **opt_kw)
         if args.use_kernels and "use_kernels" in opt_kw:
+            mode = ("mesh-sharded (shard_map over column axes)"
+                    if "mesh" in opt_kw else "single-device")
             print("[train] optimizer hot path: fused single-pass kernels "
+                  f"[{mode}] "
                   "(project_colnorms -> adam_lowrank_norms -> fused_update)",
                   flush=True)
 
@@ -136,10 +157,19 @@ def train(argv=None) -> dict:
 
         key = jax.random.PRNGKey(args.seed)
         params = bundle.init(key)
+        hot_shardings = (sh.to_named(hot_specs, ctx)
+                         if hot_specs is not None else None)
+        if hot_shardings is not None:
+            # the optimizer's shard_map in/out specs assume this layout;
+            # placing params (and pinning grads to the SAME shardings)
+            # means GSPMD never reshards around the hot path — the two
+            # documented psums stay the step's only collectives
+            params = jax.device_put(params, hot_shardings)
         state = TrainState(params=params, opt=optimizer.init(params))
 
-        train_step = make_train_step(bundle, optimizer, accum=args.accum,
-                                     remat=args.remat)
+        train_step = make_train_step(
+            bundle, optimizer, accum=args.accum, remat=args.remat,
+            grad_shardings=hot_shardings)
         jit_step = jax.jit(train_step, static_argnames=("do_subspace_update",),
                            donate_argnums=(0,))
         warm = jax.jit(make_warm_start(bundle, optimizer, remat=args.remat))
@@ -166,6 +196,34 @@ def train(argv=None) -> dict:
             print("[train] warm-started subspaces from step-0 gradients",
                   flush=True)
 
+        # Pipelined host loop: dispatch step t, prefetch batch t+1 while
+        # the device computes, and only then drain step t-1's metrics —
+        # the blocking float(...) sync always trails the dispatch frontier
+        # by one step, so the host keeps the device queue non-empty
+        # instead of serializing dispatch -> compute -> readback every
+        # step.  Consequence (documented): divergence is detected one
+        # step after it happens, and the straggler watchdog sees
+        # drain-to-dispatch latencies (the true pipelined step time).
+
+        def drain(rec: dict, metrics) -> None:
+            loss = float(metrics["loss"])          # blocks on rec["step"]
+            rec["loss"] = loss
+            rec["grad_norm"] = float(metrics["grad_norm"])
+            rec["dt"] = time.time() - rec.pop("t0")
+            watchdog.observe(rec["step"], rec["dt"])
+            history.append(rec)
+            if rec["step"] % args.log_every == 0 \
+                    or rec["step"] == args.steps - 1:
+                print(f"[train] step {rec['step']:5d}  loss {loss:8.4f}  "
+                      f"lr {rec['lr']:.2e}  {rec['dt']:6.2f}s"
+                      f"{'  [subspace update]' if rec['subspace_update'] else ''}",
+                      flush=True)
+            if not np.isfinite(loss):
+                raise FloatingPointError(
+                    f"loss diverged at step {rec['step']}")
+
+        inflight = None                            # (rec, metrics) of step-1
+        batch = batch_for_model(cfg, None, data, start_step)
         for step in range(start_step, args.steps):
             if step == args.fail_at_step:
                 if ckpt:
@@ -173,29 +231,27 @@ def train(argv=None) -> dict:
                 raise RuntimeError(
                     f"[failure-injection] simulated node failure at step {step}")
             t0 = time.time()
-            batch = batch_for_model(cfg, None, data, step)
             do_update = bool(k) and step > 0 and step % k == 0 \
                 and args.optimizer not in ("adamw", "badam")
             state, metrics = jit_step(state, batch,
                                       jnp.float32(sched(step)),
                                       do_subspace_update=do_update)
-            loss = float(metrics["loss"])
-            dt = time.time() - t0
-            watchdog.observe(step, dt)
-            rec = {"step": step, "loss": loss, "dt": dt,
-                   "lr": float(sched(step)),
-                   "grad_norm": float(metrics["grad_norm"]),
-                   "subspace_update": do_update}
-            history.append(rec)
-            if step % args.log_every == 0 or step == args.steps - 1:
-                print(f"[train] step {step:5d}  loss {loss:8.4f}  "
-                      f"lr {rec['lr']:.2e}  {dt:6.2f}s"
-                      f"{'  [subspace update]' if do_update else ''}",
-                      flush=True)
-            if not np.isfinite(loss):
-                raise FloatingPointError(f"loss diverged at step {step}")
+            if step + 1 < args.steps:              # prefetch under compute
+                batch = batch_for_model(cfg, None, data, step + 1)
+            if inflight is not None:
+                drain(*inflight)
+            inflight = ({"step": step, "lr": float(sched(step)),
+                         "subspace_update": do_update, "t0": t0}, metrics)
             if ckpt and step and step % args.checkpoint_every == 0:
+                # validate THIS step's loss before persisting its state —
+                # the one-step-late drain must never checkpoint a diverged
+                # state (the save reads the device buffers anyway, so the
+                # pipeline already serializes here)
+                drain(*inflight)
+                inflight = None
                 ckpt.save(step, state)
+        if inflight is not None:
+            drain(*inflight)
         if ckpt:
             ckpt.save(args.steps - 1, state, blocking=True)
 

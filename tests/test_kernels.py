@@ -261,6 +261,42 @@ def test_tracking_traffic_model_below_bound():
         assert fus.total > traffic.fused_step_bytes(m, n, r).total
 
 
+def test_sharded_traffic_model_below_bound():
+    """Acceptance: the mesh-native (column-sharded) fused hot path keeps
+    the per-shard fused-vs-paper-literal byte ratio <= 0.7 — for plain
+    and tracking steps, fp32 and bf16 — at every shard count inside the
+    n/g >= 2r regime, and the collective terms behave as documented."""
+    from repro.kernels import traffic
+    for (m, n, r) in [(1024, 2560, 128), (1024, 2560, 256),
+                      (2048, 5632, 256), (4096, 11008, 1024)]:
+        for g in (4, 8, 16):
+            if not traffic.in_column_regime(n, g, r):
+                continue
+            for gb, pb in ((4, 4), (2, 2)):
+                for tracking in (False, True):
+                    ratio = traffic.sharded_traffic_ratio(
+                        m, n, r, g, tracking=tracking, grad_bytes=gb,
+                        param_bytes=pb)
+                    assert ratio <= 0.7, (m, n, r, g, gb, tracking, ratio)
+            # plain step moves ONE scalar over the wire; tracking adds
+            # exactly the (m, r) tangent all-reduce on top of it
+            plain = traffic.sharded_fused_step_bytes(m, n, r, g)
+            track = traffic.sharded_tracking_fused_step_bytes(m, n, r, g)
+            assert plain.collective_bytes == \
+                traffic.allreduce_wire_bytes(4, g)
+            assert track.collective_bytes == \
+                traffic.allreduce_wire_bytes(m * r * 4, g) + \
+                plain.collective_bytes
+            # local per-shard bytes are exactly the single-chip model on
+            # the (m, n/g) panel
+            assert plain.local.total == \
+                traffic.fused_step_bytes(m, n // g, r).total
+    # one shard == the unsharded model with zero wire bytes
+    one = traffic.sharded_fused_step_bytes(1024, 2560, 256, 1)
+    assert one.collective_bytes == 0
+    assert one.total == traffic.fused_step_bytes(1024, 2560, 256).total
+
+
 def test_ops_dispatch_fallback_for_odd_shapes(monkeypatch):
     """Non-tile-aligned shapes silently use the reference path."""
     monkeypatch.setenv("REPRO_FORCE_KERNELS", "1")

@@ -108,6 +108,46 @@ class TestBatchCacheRules:
         assert specs["k"][2] == "model"
 
 
+class TestHotpathSpecs:
+    """Column-sharded layout builder for the mesh-native fused hot path."""
+
+    def test_lowrank_leaves_column_sharded(self, ctx):
+        params = {"w": _sds(512, 4096), "wt": _sds(4096, 512),
+                  "layers": _sds(4, 512, 4096), "b": _sds(4096)}
+        specs = sh.hotpath_param_specs(params, ctx, rank=128)
+        # canonical n (the wide dim) shards on `model`; m stays replicated
+        assert specs["w"] == P(None, "model")
+        # transposed leaf: canonical n is the ORIGINAL row dim
+        assert specs["wt"] == P("model", None)
+        # stack dims replicate — the shard_map'd path requires it
+        assert specs["layers"] == P(None, None, "model")
+        # dense leaves replicate
+        assert specs["b"] == P()
+
+    def test_indivisible_dims_replicate(self, ctx):
+        # 1000 divides neither mesh axis (16) -> fully replicated leaf
+        specs = sh.hotpath_param_specs({"w": _sds(512, 1000)}, ctx, rank=128)
+        assert specs["w"] == P(None, None)
+
+    def test_regime_gate_blocks_undersized_columns(self, ctx):
+        # n/g = 4096/16 = 256 < 2r = 1024: column-sharding stops paying
+        # (the traffic model's documented rule) -> leaf stays replicated
+        specs = sh.hotpath_param_specs({"w": _sds(2048, 4096)}, ctx,
+                                       rank=512)
+        assert specs["w"] == P(None, None)
+        # at rank 128 the same leaf is comfortably inside the regime
+        specs = sh.hotpath_param_specs({"w": _sds(2048, 4096)}, ctx,
+                                       rank=128)
+        assert specs["w"] == P(None, "model")
+
+    def test_specs_feed_column_shardable_plans(self, ctx):
+        from repro.core import plan as plan_lib
+        params = {"w": _sds(512, 4096)}
+        specs = sh.hotpath_param_specs(params, ctx, rank=128)
+        plans = plan_lib.make_plans(params, 128, specs=specs)
+        assert plan_lib.spec_column_axes(plans["w"]) == ("model",)
+
+
 class TestHloAnalysis:
     def test_scan_trip_multiplication(self):
         """Validated against a real compiled program: the analyzer must
