@@ -161,13 +161,23 @@ def hotpath_table(shapes=((1024, 2736, 256), (2048, 5461, 512),
     step-time model the fused pipelines attack; with the tracking step
     fused too, *every* optimizer step is on the single-pass schedule.
 
-    The sharded rows model the mesh-native (shard_map'd) hot path: local
-    bytes on the per-device (m, n/g) column panel plus ring-collective
-    wire bytes (clip scalar; tracking adds the (m, r) tangent psum), with
-    the per-shard HBM time next to them — the fusion win must survive
-    distribution (ratio stays <= 0.7)."""
+    The sharded rows model the mesh-native (shard_map'd) hot path in both
+    regimes.  Column regime: local bytes on the per-device (m, n/g)
+    column panel plus ring-collective wire bytes (clip scalar; tracking
+    adds the (m, r) tangent psum) — the fusion win must survive
+    distribution (ratio stays <= 0.7).  Row regime: (m/g, n) row panels
+    plus the stacked (r+1, n) projection psum (tracking adds the fused
+    (r, n + 3r) tangent-Gram psum); the plain ratio stays <= 0.7 inside
+    the m/g >= 2r gate while the tracking ratio reaches ~0.76 near the
+    gate boundary (replicated full-width M/V passes) and drops below 0.7
+    from m/g >= 4r."""
     from repro.kernels.traffic import (fused_step_bytes, in_column_regime,
+                                      in_row_regime,
                                       sharded_fused_step_bytes,
+                                      sharded_row_fused_step_bytes,
+                                      sharded_row_tracking_fused_step_bytes,
+                                      sharded_row_tracking_unfused_step_bytes,
+                                      sharded_row_unfused_step_bytes,
                                       sharded_tracking_fused_step_bytes,
                                       sharded_tracking_unfused_step_bytes,
                                       sharded_unfused_step_bytes,
@@ -213,6 +223,42 @@ def hotpath_table(shapes=((1024, 2736, 256), (2048, 5461, 512),
                 lines.append(
                     f"| {kind} | {m} | {n} | {r} | – | no shard count in "
                     "(16, 8, 4) divides n inside the n/g >= 2r regime | "
+                    "| | |")
+                continue
+            unf = unf_fn(m, n, r, g, grad_bytes=2, param_bytes=2)
+            fus = fus_fn(m, n, r, g, grad_bytes=2, param_bytes=2)
+            lines.append(
+                f"| {kind} | {m} | {n} | {r} | {g} | {unf.total/1e6:.2f} | "
+                f"{fus.total/1e6:.2f} | {fus.total/unf.total:.3f} | "
+                f"{fus.collective_bytes/1e3:.1f} | "
+                f"{fus.total/HBM_BW*1e6:.1f} |")
+    # the default shapes run at aggressive ranks (r = m/4) that sit
+    # outside the m/g >= 2r row gate at any shard count — the row table
+    # uses wo/w_down-style row-parallel shapes at paper-scale ranks,
+    # where the regime actually deploys
+    row_shapes = ((2048, 5632, 128), (4096, 11008, 256),
+                  (8192, 28672, 512))
+    lines += [
+        "\n### Row-sharded hot path (m sharded; g = largest of 16/8/4 "
+        "inside the m/g >= 2r regime; per-device bytes = "
+        "local + collective — the stacked (r+1, n) psum, +(r, n+3r) on "
+        "tracking)\n",
+        "| step | m | n | r | g | unfused MB/dev | fused MB/dev | ratio | "
+        "collective KB | fused us @HBM |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for kind, unf_fn, fus_fn in (
+            ("plain@sharded-row", sharded_row_unfused_step_bytes,
+             sharded_row_fused_step_bytes),
+            ("tracking@sharded-row", sharded_row_tracking_unfused_step_bytes,
+             sharded_row_tracking_fused_step_bytes)):
+        for (m, n, r) in row_shapes:
+            g = next((c for c in (16, 8, 4)
+                      if in_row_regime(m, c, r)), None)
+            if g is None:
+                lines.append(
+                    f"| {kind} | {m} | {n} | {r} | – | no shard count in "
+                    "(16, 8, 4) divides m inside the m/g >= 2r regime | "
                     "| | |")
                 continue
             unf = unf_fn(m, n, r, g, grad_bytes=2, param_bytes=2)

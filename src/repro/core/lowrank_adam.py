@@ -157,8 +157,8 @@ def _limiter(lam_norm: Array, lam_prev: Array, zeta: float
 
 
 def _fused_step(G, st, step, hp, rotated, S, recovery, backend, lr,
-                weight_decay, param, out_dtype, gsq=None,
-                axis_name=None) -> MatrixStepOut:
+                weight_decay, param, out_dtype, gsq=None, proj=None,
+                axis_name=None, row_axis_name=None) -> MatrixStepOut:
     """Single-pass hot-path schedule (one read of G per pass, final-dtype
     write):
 
@@ -185,9 +185,27 @@ def _fused_step(G, st, step, hp, rotated, S, recovery, backend, lr,
     except the Eq. 12 clip scalar, whose closed form sums over columns:
     ``||Lam||^2 = sum_shards sum_j phi_j^2 (||G_:,j||^2 - ||Gt_:,j||^2)``.
     That one scalar psum is the plain fused step's only collective.
+
+    With ``row_axis_name`` set instead (G, S, param and the update
+    ROW-sharded; M, V and every per-column vector replicated) the
+    projection itself is the collective: ``project_colnorms_rowsharded``
+    psums the stacked (r+1, n) [A; colnorms] panel once, after which A
+    and gsq are global, the Adam pass and phi run redundantly per shard,
+    the clip closed form sums REPLICATED per-column quantities (no
+    psum), and ``fused_update`` writes the local (m/g, n) rows.  One
+    all-reduce per plain step, total.  The row-regime tracking epilogue
+    passes ``proj`` (the global new-basis projection its geodesic round
+    already assembled via the rank-1 identity) together with ``gsq``, so
+    no pass here communicates at all.
     """
-    if gsq is None:
-        Gt, gsq = backend.project_colnorms(S, G)
+    if proj is not None:
+        Gt = proj                     # global (r, n), with gsq also given
+    elif gsq is None:
+        if row_axis_name is not None:
+            Gt, gsq = backend.project_colnorms_rowsharded(
+                S, G, axis_name=row_axis_name)
+        else:
+            Gt, gsq = backend.project_colnorms(S, G)
     else:
         Gt = backend.project(S, G)
     M_prev, V_prev = (st.M, st.V) if rotated is None else rotated
@@ -241,6 +259,7 @@ def lowrank_adam_step(
     out_dtype=None,
     precomputed_gsq: Optional[Array] = None,
     axis_name=None,
+    row_axis_name=None,
 ) -> MatrixStepOut:
     """One Alg. 1 iteration for a single matrix.
 
@@ -265,7 +284,14 @@ def lowrank_adam_step(
     ``axis_name`` marks the step as running inside ``shard_map`` with G
     column-sharded over that mesh axis (S replicated, M/V sharded with
     G's columns): all passes are shard-local except the recovery-norm
-    reduction, which psums once over the axis.
+    reduction, which psums once over the axis.  ``row_axis_name`` marks
+    the ROW-sharded regime instead (G/S/param row-sharded, M/V
+    replicated): the projection psums the stacked (r+1, n) [A; colnorms]
+    panel — the step's only collective — and the recovery norm needs
+    none (its inputs are replicated after that psum).  On the fused
+    row-regime tracking epilogue, ``precomputed_proj`` +
+    ``precomputed_gsq`` carry the already-global new-basis projection
+    and norms, so no pass here communicates at all.
     """
     S = st.S if S_new is None else S_new
     out_dtype = out_dtype or jnp.float32
@@ -275,18 +301,24 @@ def lowrank_adam_step(
         # per tile, so a bf16 gradient streams at 2 bytes/elem instead of
         # materializing an (m, n) fp32 copy first (the traffic model in
         # repro.kernels.traffic charges G reads at the gradient dtype).
+        proj = precomputed_proj if row_axis_name is not None else None
         return _fused_step(G, st, step, hp, rotated, S, recovery, backend,
                            lr, weight_decay, param, out_dtype,
-                           gsq=precomputed_gsq, axis_name=axis_name)
+                           gsq=precomputed_gsq, proj=proj,
+                           axis_name=axis_name,
+                           row_axis_name=row_axis_name)
 
     G = G.astype(jnp.float32)
 
     if precomputed_proj is not None:
         Gt = precomputed_proj
-    elif backend is not None:
-        Gt = backend.project(S, G)                    # (r, n) kernel path
     else:
-        Gt = S.T @ G                                  # (r, n)
+        if backend is not None:
+            Gt = backend.project(S, G)                # (r, n) kernel path
+        else:
+            Gt = S.T @ G                              # (r, n)
+        if row_axis_name is not None:                 # row-sharded shard_map:
+            Gt = jax.lax.psum(Gt, row_axis_name)      # A contracts over rows
 
     M_prev, V_prev = (st.M, st.V) if rotated is None else rotated
     M = hp.beta1 * M_prev + (1.0 - hp.beta1) * Gt
@@ -319,6 +351,8 @@ def lowrank_adam_step(
         lam_sq = jnp.sum(Lam * Lam)
         if axis_name is not None:                     # column-sharded shard_map
             lam_sq = jax.lax.psum(lam_sq, axis_name)
+        elif row_axis_name is not None:               # row-sharded: Lam rows
+            lam_sq = jax.lax.psum(lam_sq, row_axis_name)   # are shard-local
         lam_norm = jnp.sqrt(lam_sq)
         scale, lam_new = _limiter(lam_norm, st.lam_prev, hp.zeta)
         Lam = Lam * scale

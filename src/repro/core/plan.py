@@ -186,7 +186,9 @@ def bucket_key(plan: ParamPlan, param_dtype) -> tuple:
     blow-up that made multi-device bucketing opt-in before specs were
     threaded through the plans).  Same-(m, n, rank, dtype, spec) leaves
     concatenate along a fresh replicated leading axis — a layout-preserving
-    operation on every shard.  Lead-dim sharding is deliberately NOT part
+    operation on every shard; this holds for column- and row-sharded
+    layouts alike, so same-row-layout leaves stack into one shard_map'd
+    launch exactly like same-column-layout ones.  Lead-dim sharding is deliberately NOT part
     of the key: leaves whose stack dims are sharded never bucket at all
     (see :func:`spec_lead_sharded`; the dispatch layer gives them solo
     keys), and for everything else the lead entries are replicated, so
@@ -217,6 +219,34 @@ def spec_column_axes(plan: ParamPlan):
     if n_ax is None or m_ax is not None or spec_lead_sharded(plan):
         return None
     return n_ax if isinstance(n_ax, tuple) else (n_ax,)
+
+
+def spec_row_axes(plan: ParamPlan):
+    """Mesh axes the canonical m (row) dim is sharded over, as a tuple of
+    axis names — or None when the leaf is not in the row-sharded regime
+    (m sharded, n and all lead dims replicated).  Under this layout each
+    shard holds S_loc (m/g, r) and G_loc (m/g, n); the projection A =
+    S^T G contracts over the sharded rows, so the fused step psums the
+    stacked (r+1, n) [A; ||G||^2] panel once and everything downstream is
+    row-local (see repro.core.subtrack)."""
+    if plan.spec is None or plan.mode != "lowrank":
+        return None
+    m_ax, n_ax = plan.spec[-2], plan.spec[-1]
+    if m_ax is None or n_ax is not None or spec_lead_sharded(plan):
+        return None
+    return m_ax if isinstance(m_ax, tuple) else (m_ax,)
+
+
+def spec_regime(plan: ParamPlan):
+    """'column' | 'row' | None — which shard_map'd fused-hot-path regime
+    the leaf's canonical (m, n) sharding falls into.  The regimes are
+    mutually exclusive (a leaf with both trailing dims sharded matches
+    neither and runs under plain GSPMD propagation)."""
+    if spec_column_axes(plan) is not None:
+        return "column"
+    if spec_row_axes(plan) is not None:
+        return "row"
+    return None
 
 
 def matrix_count(plan: ParamPlan, shape: tuple[int, ...]) -> int:

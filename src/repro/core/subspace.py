@@ -146,6 +146,30 @@ def tangent_fused(S: Array, G: Array, A: Array) -> Array:
     return -2.0 * GA + 2.0 * (S @ AA)
 
 
+def _top1_gram_power(C: Array, *, n_iter: int = 24) -> tuple[Array, Array]:
+    """(sigma, v) from the (r, r) Gram C = T^T T: fixed-trip-count power
+    iteration with a deterministic start vector, sigma via the Rayleigh
+    quotient.  Factored out of :func:`top1_power` so the row-sharded
+    tracker — whose Gram arrives via psum rather than from a local T —
+    runs bit-identically on every shard."""
+    r = C.shape[0]
+    v0 = jnp.full((r,), 1.0 / jnp.sqrt(r), dtype=jnp.float32)
+
+    def body(_, v):
+        w = C @ v
+        return w / jnp.maximum(jnp.linalg.norm(w), _TINY)
+
+    v = jax.lax.fori_loop(0, n_iter, body, v0)
+    sigma2 = v @ (C @ v)                                # Rayleigh = sigma_1^2
+    return jnp.sqrt(jnp.maximum(sigma2, 0.0)), v
+
+
+def _top1_gram_eigh(C: Array) -> tuple[Array, Array]:
+    """Exact (sigma, v) via eigh of the (r, r) Gram (test oracle)."""
+    evals, evecs = jnp.linalg.eigh(C)                   # ascending
+    return jnp.sqrt(jnp.maximum(evals[-1], 0.0)), evecs[:, -1]
+
+
 def top1_power(T: Array, *, n_iter: int = 24) -> Rank1Triple:
     """Top singular triple of T (m, r) via power iteration on the r x r Gram.
 
@@ -156,17 +180,7 @@ def top1_power(T: Array, *, n_iter: int = 24) -> Rank1Triple:
     accuracy for the gap ratios seen in practice (tested against eigh).
     """
     T = T.astype(jnp.float32)
-    C = T.T @ T                                         # (r, r)
-    r = C.shape[0]
-    v0 = jnp.full((r,), 1.0 / jnp.sqrt(r), dtype=jnp.float32)
-
-    def body(_, v):
-        w = C @ v
-        return w / jnp.maximum(jnp.linalg.norm(w), _TINY)
-
-    v = jax.lax.fori_loop(0, n_iter, body, v0)
-    sigma2 = v @ (C @ v)                                # Rayleigh quotient = sigma_1^2
-    sigma = jnp.sqrt(jnp.maximum(sigma2, 0.0))
+    sigma, v = _top1_gram_power(T.T @ T, n_iter=n_iter)
     u = (T @ v) / jnp.maximum(sigma, _TINY)             # (m,)
     return Rank1Triple(sigma=sigma, u=u, v=v)
 
@@ -174,10 +188,7 @@ def top1_power(T: Array, *, n_iter: int = 24) -> Rank1Triple:
 def top1_eigh(T: Array) -> Rank1Triple:
     """Exact top singular triple via eigh of the r x r Gram (test oracle)."""
     T = T.astype(jnp.float32)
-    C = T.T @ T
-    evals, evecs = jnp.linalg.eigh(C)                   # ascending
-    v = evecs[:, -1]
-    sigma = jnp.sqrt(jnp.maximum(evals[-1], 0.0))
+    sigma, v = _top1_gram_eigh(T.T @ T)
     u = (T @ v) / jnp.maximum(sigma, _TINY)
     return Rank1Triple(sigma=sigma, u=u, v=v)
 
@@ -335,6 +346,117 @@ def stabilize_triple(S: Array, triple: Rank1Triple,
     ok = (nu > rel_tol).astype(jnp.float32)
     u = ok * u_perp / jnp.maximum(nu, _TINY)
     return Rank1Triple(sigma=triple.sigma * ok, u=u, v=triple.v)
+
+
+class RowTrackResult(NamedTuple):
+    """Row-sharded tracking update: local basis rows + replicated algebra.
+
+    ``S_new`` holds THIS shard's rows of the updated basis; everything
+    else is replicated across the row group (identical on every shard by
+    construction — deterministic functions of psum'd quantities)."""
+
+    S_new: Array          # (m_loc, r) local rows of the updated basis
+    A: Array              # (r, n) global old-basis projection S^T G
+    A_new: Array          # (r, n) global NEW-basis projection S_new^T G
+    cos_theta: Array      # () cos(sigma*eta) — feeds the rank-1 rotation
+    v: Array              # (r,) right singular vector of the tangent
+    gsq: Array            # (n,) global ||G_:,j||^2 (Eq. 12 closed form)
+
+
+def track_subspace_rowsharded(
+    S: Array,
+    G: Array,
+    *,
+    eta: float,
+    exact_top1: bool = False,
+    power_iters: int = 24,
+    backend=None,
+    axis_name,
+) -> RowTrackResult:
+    """Grassmannian tracking update for a ROW-sharded leaf: S and G arrive
+    as (m/g, r) / (m/g, n) row slices inside ``shard_map`` over
+    ``axis_name``; exactly TWO collectives run, and everything after them
+    is replicated algebra plus row-local panel math.
+
+    Round 1 — the stacked (r+1, n) psum.  ``A = S^T G`` and the column
+    norms both contract over the sharded rows, so one psum of
+    ``[A_loc; ||G_loc||^2]`` makes them global.  Given global A, the
+    fused-form tangent is ROW-LOCAL: ``T_loc = -2 G_loc A^T + 2 S_loc
+    (A A^T)`` is exactly the global tangent's row slice — the (m, r)
+    tangent psum of the column regime has no row-regime counterpart.
+
+    Round 2 — the fused (r, n + 3r) Gram psum.  The top-1 triple needs
+    ``C = T^T T``, which contracts over the sharded rows and is quadratic
+    in A, so it provably cannot fold into round 1; psumming the stacked
+    ``[T^T G | S^T T | T^T T | S^T S]`` once provides every cross-row
+    statistic the rest of the update needs:
+
+    * ``(sigma, v)`` from C (power iteration / eigh on the replicated
+      Gram — bit-identical on every shard);
+    * the stabilizer scalars: with descent-signed ``u = -T v / sigma``,
+      ``S^T u = -(S^T T) v / sigma``, ``||u||^2 = v^T C v / sigma^2`` and
+      ``||u_perp||^2 = ||u||^2 - 2||S^T u||^2 + (S^T u)^T (S^T S)
+      (S^T u)`` — the exact norm of the orthogonal-complement scrub
+      :func:`stabilize_triple` performs, from (r,)-sized data;
+    * the NEW-basis projection without touching G again: ``S_new = S +
+      p v^T`` gives ``Gt_new = S_new^T G = A + v (p^T G)`` with ``p^T G =
+      (cos(theta) - 1)(v^T A) + sin(theta) (u_hat^T G)`` and ``u_hat^T G``
+      assembled from ``v^T T^T G`` — so the epilogue is collective-free.
+
+    The geodesic rows ``S_new_loc`` then come from the local ``u`` rows
+    (``u_loc = -T_loc v / sigma``).  Agreement with the replicated
+    :func:`track_subspace` is exact in real arithmetic (every formula is
+    an algebraic identity) and fp-close in practice — asserted over
+    multi-step loops in tests/test_mesh_fused.py.
+    """
+    rel_tol = 1e-6                        # matches stabilize_triple
+    if backend is not None:
+        A, gsq = backend.project_colnorms_rowsharded(S, G,
+                                                     axis_name=axis_name)
+        T = backend.tangent(G, A, S)      # local rows of the GLOBAL tangent
+        TtG, StT, C, StS = backend.tangent_gram(S, T, G,
+                                               axis_name=axis_name)
+    else:
+        G32 = G.astype(jnp.float32)
+        A_loc = S.T @ G32
+        gsq_loc = jnp.sum(G32 * G32, axis=0)
+        stacked = jax.lax.psum(
+            jnp.concatenate([A_loc, gsq_loc[None, :]], axis=0), axis_name)
+        A, gsq = stacked[:-1], stacked[-1]
+        T = tangent_fused(S, G32, A)
+        n, r = G.shape[1], S.shape[1]
+        payload = jnp.concatenate(
+            [T.T @ G32, S.T @ T, T.T @ T, S.T @ S], axis=1)
+        payload = jax.lax.psum(payload, axis_name)
+        TtG, StT, C, StS = (payload[:, :n], payload[:, n:n + r],
+                            payload[:, n + r:n + 2 * r],
+                            payload[:, n + 2 * r:])
+
+    sigma_raw, v = (_top1_gram_eigh(C) if exact_top1
+                    else _top1_gram_power(C, n_iter=power_iters))
+    denom = jnp.maximum(sigma_raw, _TINY)
+    # DESCENT sign, as in track_subspace: u = -T v / sigma
+    u_loc = -(T @ v) / denom                       # (m_loc,) local rows
+    Stu = -(StT @ v) / denom                       # (r,)  S^T u, replicated
+    u_sq = (v @ (C @ v)) / (denom * denom)         # ||u||^2 (sign-free)
+    perp_sq = u_sq - 2.0 * (Stu @ Stu) + Stu @ (StS @ Stu)
+    nu = jnp.sqrt(jnp.maximum(perp_sq, 0.0))       # ||u - S (S^T u)||
+    ok = (nu > rel_tol).astype(jnp.float32)
+    uhat_loc = ok * (u_loc - S @ Stu) / jnp.maximum(nu, _TINY)
+    sigma = sigma_raw * ok
+
+    theta = sigma * eta
+    cos_t, sin_t = jnp.cos(theta), jnp.sin(theta)
+    Sv_loc = S @ v                                 # (m_loc,)
+    S_new = S + jnp.outer(Sv_loc * (cos_t - 1.0) + uhat_loc * sin_t, v)
+
+    # Gt_new = A + v (p^T G), all replicated — no further pass over G
+    utG = -(v @ TtG) / denom                       # (n,)  u^T G
+    uhatG = ok * (utG - Stu @ A) / jnp.maximum(nu, _TINY)
+    ptG = (cos_t - 1.0) * (v @ A) + sin_t * uhatG
+    A_new = A + jnp.outer(v, ptG)
+    return RowTrackResult(S_new=S_new, A=A, A_new=A_new,
+                          cos_theta=cos_t, v=v, gsq=gsq)
 
 
 def change_of_basis(S_new: Array, S_old: Array) -> Array:

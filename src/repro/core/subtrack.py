@@ -125,11 +125,13 @@ def _get_backend(cfg: LowRankConfig):
 
 def _plain_matrix_step(cfg: LowRankConfig, hp: AdamHP, G: Array,
                        st: MatrixOptState, step: Array, lr: Array,
-                       param: Optional[Array], out_dtype, axis_name=None):
+                       param: Optional[Array], out_dtype, axis_name=None,
+                       row_axis_name=None):
     out = lowrank_adam_step(G, st, step, hp, recovery=cfg.recovery,
                             backend=_get_backend(cfg), lr=lr,
                             weight_decay=cfg.weight_decay, param=param,
-                            out_dtype=out_dtype, axis_name=axis_name)
+                            out_dtype=out_dtype, axis_name=axis_name,
+                            row_axis_name=row_axis_name)
     return out.delta, out.state
 
 
@@ -185,7 +187,7 @@ def _refresh_subspace(cfg: LowRankConfig, G: Array, st: MatrixOptState,
 def _tracking_matrix_step(cfg: LowRankConfig, hp: AdamHP, G: Array,
                           st: MatrixOptState, step: Array, n_updates: Array,
                           lr: Array, param: Optional[Array], out_dtype,
-                          axis_name=None):
+                          axis_name=None, row_axis_name=None):
     """The 1-of-k subspace-update step, fused end to end when kernels are
     on: project_tangent_colnorms (one read of G) -> geodesic -> O(rn)
     rank-1 rotation of (M, V) -> the same project/adam/fused_update
@@ -196,12 +198,40 @@ def _tracking_matrix_step(cfg: LowRankConfig, hp: AdamHP, G: Array,
     Under ``axis_name`` (column-sharded shard_map) the step needs exactly
     two collectives: the (m, r) tangent psum inside the refresh, after
     which the geodesic and the rank-1 (M, V) rotation run replicated /
-    shard-local, and the epilogue's scalar clip psum."""
+    shard-local, and the epilogue's scalar clip psum.
+
+    Under ``row_axis_name`` (row-sharded shard_map) it also needs exactly
+    two, with different payloads: the stacked (r+1, n) projection psum and
+    the fused (r, n + 3r) tangent-Gram psum
+    (:func:`repro.core.subspace.track_subspace_rowsharded`) — the tangent
+    itself is row-local given global A, and the epilogue reuses the
+    globally-assembled new-basis projection + norms, so it runs
+    collective-free."""
     backend = _get_backend(cfg)
     # the kernels (and their ref fallbacks) cast per tile, so keep the
     # gradient in its storage dtype on the fused path instead of
     # materializing an (m, n) fp32 copy up front
     Gc = G if backend is not None else G.astype(jnp.float32)
+
+    if row_axis_name is not None and cfg.method == "grassmann":
+        res = sub.track_subspace_rowsharded(
+            st.S, Gc, eta=cfg.eta, exact_top1=cfg.exact_top1,
+            power_iters=cfg.power_iters, backend=backend,
+            axis_name=row_axis_name)
+        rotated = None
+        if cfg.projection_aware:
+            # cos_theta and v are replicated, M/V replicated: the O(rn)
+            # rank-1 rotation runs redundantly-identically per shard
+            rotated = rotate_moments_rank1(res.cos_theta, res.v, st.M,
+                                           st.V, step, hp)
+        out = lowrank_adam_step(
+            Gc, st, step, hp, rotated=rotated, S_new=res.S_new,
+            recovery=cfg.recovery, backend=backend, lr=lr,
+            weight_decay=cfg.weight_decay, param=param, out_dtype=out_dtype,
+            precomputed_proj=res.A_new, precomputed_gsq=res.gsq,
+            row_axis_name=row_axis_name)
+        return out.delta, out.state
+
     S_new, rank1_info, gsq = _refresh_subspace(cfg, Gc, st, step, n_updates,
                                                backend, axis_name)
 
@@ -222,7 +252,8 @@ def _tracking_matrix_step(cfg: LowRankConfig, hp: AdamHP, G: Array,
                             recovery=cfg.recovery, backend=backend,
                             lr=lr, weight_decay=cfg.weight_decay, param=param,
                             out_dtype=out_dtype, precomputed_gsq=gsq,
-                            axis_name=axis_name)
+                            axis_name=axis_name,
+                            row_axis_name=row_axis_name)
     return out.delta, out.state
 
 
@@ -257,13 +288,21 @@ def lowrank_optimizer(cfg: LowRankConfig, *, mesh=None,
     """Build the SubTrack++/GaLore/Fira/... optimizer for arbitrary pytrees.
 
     ``mesh`` + ``param_specs`` (a pytree of PartitionSpec mirroring the
-    params) opt the fused hot path into mesh-native execution: every
-    low-rank leaf whose canonical column (n) dim is sharded — and whose m
-    and stack dims are not — runs its per-matrix step inside ``shard_map``
-    over the column axes, shard-local except one scalar psum for the
-    Eq. 12 clip (plain steps) plus one (m, r) tangent psum (tracking
-    steps).  Leaves outside that regime, and all runs built without
-    mesh/specs, execute exactly as before under plain GSPMD propagation.
+    params) opt the fused hot path into mesh-native execution, in one of
+    two regimes per leaf:
+
+    * **column** — canonical n sharded (m and stack dims replicated):
+      shard-local except one scalar psum for the Eq. 12 clip (plain
+      steps) plus one (m, r) tangent psum (tracking steps);
+    * **row** — canonical m sharded (n and stack dims replicated): the
+      projection is the collective — ONE stacked (r+1, n) [A; colnorms]
+      psum per plain step (the clip closed form is then free), plus one
+      fused (r, n + 3r) tangent-Gram psum on tracking steps (the tangent
+      itself is row-local given global A).  M/V replicate across the row
+      group; S, params and updates shard with the rows.
+
+    Leaves outside both regimes, and all runs built without mesh/specs,
+    execute exactly as before under plain GSPMD propagation.
     """
 
     hp = cfg.adam
@@ -315,49 +354,71 @@ def lowrank_optimizer(cfg: LowRankConfig, *, mesh=None,
         bucket = (cfg.bucket_leaves if cfg.bucket_leaves is not None
                   else jax.device_count() == 1 or sharded_hotpath)
 
-        def shard_axes_for(plan):
-            """Mesh axes to shard_map this leaf's matrix step over, or
-            None for the plain (GSPMD-propagated) path.  The column-local
-            scheme needs the fused kernel schedule; tracking steps
-            additionally need a column-separable refresh method."""
+        def shard_info_for(plan):
+            """(regime, axes) to shard_map this leaf's matrix step over —
+            regime "col" (n sharded) or "row" (m sharded) — or None for
+            the plain (GSPMD-propagated) path.  Both schemes need the
+            fused kernel schedule; tracking steps additionally need a
+            shardable refresh method ("grassmann" / "none"), and the
+            row regime routes reorth-scrubbing configs away (a QR of the
+            row-sharded basis is not shard-local)."""
             if not sharded_hotpath or not cfg.use_kernels:
                 return None
             if do_subspace_update and cfg.method not in ("grassmann", "none"):
                 return None
-            return plan_lib.spec_column_axes(plan)
+            col = plan_lib.spec_column_axes(plan)
+            if col is not None:
+                return ("col", col)
+            row = plan_lib.spec_row_axes(plan)
+            if row is not None:
+                if do_subspace_update and cfg.method == "grassmann" \
+                        and cfg.reorth_interval:
+                    return None
+                return ("row", row)
+            return None
 
-        def matrix_fn(out_dtype, axis_name=None):
+        def matrix_fn(out_dtype, axis_name=None, row_axis_name=None):
             """Per-(m, n)-matrix step closure; ``p`` is threaded only when
             weight decay needs it (it is DCE'd otherwise)."""
             if do_subspace_update:
                 def base(G, s, p=None):
                     return _tracking_matrix_step(cfg, hp, G, s, step, n_upd,
                                                  lr32, p, out_dtype,
-                                                 axis_name=axis_name)
+                                                 axis_name=axis_name,
+                                                 row_axis_name=row_axis_name)
             else:
                 def base(G, s, p=None):
                     return _plain_matrix_step(cfg, hp, G, s, step, lr32, p,
                                               out_dtype,
-                                              axis_name=axis_name)
+                                              axis_name=axis_name,
+                                              row_axis_name=row_axis_name)
             return base
 
-        def run_stacked(g2, st, p2, batch_dims, out_dtype, axes=None):
+        def run_stacked(g2, st, p2, batch_dims, out_dtype, shard_info=None):
             """Run the matrix step over a (possibly stacked) canonical
             gradient; returns (delta_stacked, new_state_stacked).
 
-            With ``axes`` (mesh axis names sharding the column dim) the
-            whole stacked step runs inside ``shard_map``: each device
-            launches the existing kernels on its (stack, m, n_loc) panel
-            and the two documented psums are the only cross-device
-            traffic.
+            With ``shard_info`` = (regime, axes) the whole stacked step
+            runs inside ``shard_map``.  Column regime: each device
+            launches the existing kernels on its (stack, m, n_loc) panel;
+            states shard with the columns.  Row regime: (stack, m_loc, n)
+            panels with S (and the update) row-sharded while M/V stay
+            replicated (they are functions of the globally-psum'd
+            projection, recomputed identically per shard).  Either way
+            the documented psums are the only cross-device traffic.
             """
             total_elems = int(np.prod(g2.shape))
-            axis_name = None
-            if axes is not None:
+            axis_name = row_axis_name = None
+            if shard_info is not None:
+                regime, axes = shard_info
                 n_shards = int(np.prod([mesh.shape[a] for a in axes]))
                 total_elems //= n_shards
-                axis_name = axes if len(axes) > 1 else axes[0]
-            base = matrix_fn(out_dtype, axis_name)
+                ax = axes if len(axes) > 1 else axes[0]
+                if regime == "col":
+                    axis_name = ax
+                else:
+                    row_axis_name = ax
+            base = matrix_fn(out_dtype, axis_name, row_axis_name)
             if cfg.weight_decay:
                 fn = plan_lib.map_rank(lambda G, s, p: base(G, s, p),
                                        batch_dims, total_elems)
@@ -366,14 +427,21 @@ def lowrank_optimizer(cfg: LowRankConfig, *, mesh=None,
                 fn = plan_lib.map_rank(lambda G, s: base(G, s),
                                        batch_dims, total_elems)
                 args = (g2, st)
-            if axes is None:
+            if shard_info is None:
                 return fn(*args)
             lead = (None,) * batch_dims
-            gspec = P(*lead, None, axis_name)
-            stspec = MatrixOptState(S=P(*lead, None, None),
-                                    M=P(*lead, None, axis_name),
-                                    V=P(*lead, None, axis_name),
-                                    lam_prev=P(*lead))
+            if axis_name is not None:          # column regime
+                gspec = P(*lead, None, axis_name)
+                stspec = MatrixOptState(S=P(*lead, None, None),
+                                        M=P(*lead, None, axis_name),
+                                        V=P(*lead, None, axis_name),
+                                        lam_prev=P(*lead))
+            else:                              # row regime
+                gspec = P(*lead, row_axis_name, None)
+                stspec = MatrixOptState(S=P(*lead, row_axis_name, None),
+                                        M=P(*lead, None, None),
+                                        V=P(*lead, None, None),
+                                        lam_prev=P(*lead))
             in_specs = (gspec, stspec) + \
                 ((gspec,) if cfg.weight_decay else ())
             sharded = shard_map(fn, mesh=mesh, in_specs=in_specs,
@@ -386,7 +454,7 @@ def lowrank_optimizer(cfg: LowRankConfig, *, mesh=None,
             g2 = plan_lib.canonical_grad(g, plan)
             p2 = plan_lib.canonical_grad(p, plan) if cfg.weight_decay else None
             delta, new_st = run_stacked(g2, st, p2, plan.batch_dims, p.dtype,
-                                        axes=shard_axes_for(plan))
+                                        shard_info=shard_info_for(plan))
             return plan_lib.uncanonical_update(delta, plan), new_st
 
         is_plan = lambda x: isinstance(x, plan_lib.ParamPlan)  # noqa: E731
@@ -449,7 +517,7 @@ def lowrank_optimizer(cfg: LowRankConfig, *, mesh=None,
                                   *st_parts)
             delta_all, st_new_all = run_stacked(
                 g_all, st_all, p_all, 1, param_leaves[idxs[0]].dtype,
-                axes=shard_axes_for(plan_leaves[idxs[0]]))
+                shard_info=shard_info_for(plan_leaves[idxs[0]]))
 
             # split back to leaves and restore each one's stack layout
             splits = list(np.cumsum(sizes)[:-1])

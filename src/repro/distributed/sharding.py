@@ -269,25 +269,29 @@ def to_named(spec_tree: Any, ctx: MeshContext) -> Any:
 
 
 def hotpath_param_specs(params_shape: Any, ctx: MeshContext,
-                        rank: int) -> Any:
-    """Column-sharded layout for the shard_map'd fused optimizer hot path.
+                        rank: int, regimes: tuple = ("column", "row")
+                        ) -> Any:
+    """Regime-aware sharded layout for the shard_map'd fused optimizer
+    hot path: per low-rank leaf, pick COLUMN sharding (canonical n over a
+    mesh axis; m and stack dims replicated) or ROW sharding (canonical m
+    over a mesh axis; n and stack dims replicated) by the modeled
+    per-device fused-step bytes in ``repro.kernels.traffic`` — lower
+    wins.  Dense leaves (vectors, small matrices) replicate; they are
+    noise next to the projected matrices.
 
-    Each low-rank leaf's canonical n (column) dim shards over the first
-    mesh axis that divides it — ``model`` preferred, then the DP axes —
-    while the canonical m dim and all leading stack dims stay replicated.
-    Under this layout the fused per-matrix step is shard-local except the
-    two documented collectives (scalar clip psum; tracking adds the
-    (m, r) tangent psum), and M/V — the dominant optimizer memory —
-    shard with the columns.  Dense leaves (vectors, small matrices)
-    replicate; they are noise next to the projected matrices.
-
-    Regime gate (matching the byte model in ``repro.kernels.traffic``
-    and the ``sharded/`` bench section): an axis is only used while the
-    local column count keeps ``n / axis_size >= 2 * rank`` — below that
-    the (r, n/g) state passes and the tangent psum stop amortizing and
-    column-sharding is the wrong axis, so the leaf stays replicated
-    rather than shipping a layout the model itself refuses to count as
-    a win.
+    Regime gates (single source of truth in the traffic module, matching
+    the ``sharded/`` and ``sharded-row/`` bench sections): a column axis
+    is only admissible while ``n / g >= 2 * rank``, a row axis while
+    ``m / g >= 2 * rank`` — below those the per-shard panels stop
+    shrinking relative to the fixed (r, n) state passes / psum payloads
+    and the fused-vs-literal ratio decays toward 1.  When both regimes
+    are admissible the byte model itself prefers column (its plain-step
+    collective is one scalar vs the row regime's (r+1, n) stacked psum,
+    and M/V shard with the columns instead of replicating), so
+    ``wo``/``w_down``-style leaves that FAIL the column gate — n
+    indivisible, or n/g < 2r at the configured rank — now land in the
+    row regime instead of replicating.  ``regimes`` restricts the
+    candidates (the trainer's ``--hotpath-layout`` flag).
 
     Feed the result to ``lowrank_optimizer(cfg, mesh=ctx.mesh,
     param_specs=...)`` and place params/grads with the same specs.
@@ -299,15 +303,33 @@ def hotpath_param_specs(params_shape: Any, ctx: MeshContext,
         plan = plan_lib.plan_for_shape(shape, rank)
         if plan.mode != "lowrank":
             return P()
-        # canonical n maps back to the original row dim when transposed
+        # canonical (m, n) map back through the transpose convention
         n_dim = len(shape) - 2 if plan.transpose else len(shape) - 1
-        spec: list = [None] * len(shape)
-        for ax in candidates:
+        m_dim = len(shape) - 1 if plan.transpose else len(shape) - 2
+        # tie-breaks after modeled bytes: column before row, then the
+        # candidate order (``model`` preferred over the DP axes, as in
+        # the pre-regime builder)
+        best = None   # (bytes, regime order, candidate order, dim, axis)
+        for ci, ax in enumerate(candidates):
             size = ctx.mesh.shape[ax]
-            if size > 1 and traffic.in_column_regime(plan.n, size,
-                                                     plan.rank):
-                spec[n_dim] = ax
-                break
+            if size <= 1:
+                continue
+            if "column" in regimes and traffic.in_column_regime(
+                    plan.n, size, plan.rank):
+                by = traffic.sharded_fused_step_bytes(
+                    plan.m, plan.n, plan.rank, size).total
+                cand = (by, 0, ci, n_dim, ax)
+                best = cand if best is None else min(best, cand)
+            if "row" in regimes and traffic.in_row_regime(
+                    plan.m, size, plan.rank):
+                by = traffic.sharded_row_fused_step_bytes(
+                    plan.m, plan.n, plan.rank, size).total
+                cand = (by, 1, ci, m_dim, ax)
+                best = cand if best is None else min(best, cand)
+        spec: list = [None] * len(shape)
+        if best is not None:
+            _, _, _, dim, ax = best
+            spec[dim] = ax
         return P(*spec)
 
     return jax.tree.map(leaf, params_shape)

@@ -377,6 +377,78 @@ def project_tangent_colnorms(S: Array, G: Array, *, bn: int = BN,
     return A, sq.reshape(n), T
 
 
+def _tangent_gram_kernel(s_ref, t_ref, g_ref, tg_ref, st_ref, tt_ref,
+                         ss_ref):
+    """grid = (n/bn, m/bm); accumulate T^T G over the m (minor) axis and
+    the three (r, r) Grams once per m block (on the j == 0 column sweep —
+    they have no n extent, so later column blocks must not re-add them)."""
+    j, i = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init_tg():
+        tg_ref[...] = jnp.zeros_like(tg_ref)
+
+    @pl.when((j == 0) & (i == 0))
+    def _init_grams():
+        st_ref[...] = jnp.zeros_like(st_ref)
+        tt_ref[...] = jnp.zeros_like(tt_ref)
+        ss_ref[...] = jnp.zeros_like(ss_ref)
+
+    t = t_ref[...].astype(jnp.float32)              # (bm, r)
+    g = g_ref[...].astype(jnp.float32)              # (bm, bn)
+    tg_ref[...] += jnp.dot(t.T, g, preferred_element_type=jnp.float32)
+
+    @pl.when(j == 0)
+    def _grams():
+        s = s_ref[...].astype(jnp.float32)          # (bm, r)
+        st_ref[...] += jnp.dot(s.T, t, preferred_element_type=jnp.float32)
+        tt_ref[...] += jnp.dot(t.T, t, preferred_element_type=jnp.float32)
+        ss_ref[...] += jnp.dot(s.T, s, preferred_element_type=jnp.float32)
+
+
+def tangent_gram(S: Array, T: Array, G: Array, *, bm: int = BM,
+                 bn: int = BN, interpret: bool = False
+                 ) -> tuple[Array, Array, Array, Array]:
+    """Row-regime tracking second pass: (T^T G, S^T T, T^T T, S^T S) from
+    ONE read of G (plus the small (m, r) S/T panels).
+
+    These are exactly the cross-row sufficient statistics the row-sharded
+    tracking step psums after the tangent: the Gram ``C = T^T T`` feeds
+    the top-1 power iteration, ``S^T T``/``S^T S`` the stabilizer's
+    orthogonal-complement scrub, and ``T^T G`` the rank-1 new-basis
+    projection identity ``Gt_new = A + v (p^T G)`` (``u^T G = v^T T^T G /
+    sigma``) — so after their single fused psum the whole geodesic +
+    epilogue runs replicated with no further collective (see
+    repro.core.subspace.track_subspace_rowsharded).  Also valid
+    unsharded, where the sums are simply the global Grams.
+
+    S, T: (m, r); G: (m, n) any float (cast per tile) ->
+    ((r, n), (r, r), (r, r), (r, r)) all fp32.  Tiles: (bm, bn) gradient
+    blocks with full-r S/T panels; T^T G accumulates over the m grid
+    axis, the Grams only on the first column sweep.  Oracle:
+    :func:`repro.kernels.ref.tangent_gram_ref`.
+    """
+    m, r = S.shape
+    _, n = G.shape
+    bm, bn = min(bm, m), min(bn, n)
+    rr_spec = pl.BlockSpec((r, r), lambda j, i: (0, 0))
+    TtG, StT, C, StS = pl.pallas_call(
+        _tangent_gram_kernel,
+        grid=(n // bn, m // bm),
+        in_specs=[
+            pl.BlockSpec((bm, r), lambda j, i: (i, 0)),
+            pl.BlockSpec((bm, r), lambda j, i: (i, 0)),
+            pl.BlockSpec((bm, bn), lambda j, i: (i, j)),
+        ],
+        out_specs=[pl.BlockSpec((r, bn), lambda j, i: (0, j)),
+                   rr_spec, rr_spec, rr_spec],
+        out_shape=[jax.ShapeDtypeStruct((r, n), jnp.float32)] +
+                  [jax.ShapeDtypeStruct((r, r), jnp.float32)] * 3,
+        interpret=interpret,
+    )(S, T, G)
+    return TtG, StT, C, StS
+
+
 def _fused_update_kernel(*refs, recovery: bool, decay: bool):
     """One tile of  upd = -coef (S Gto + (G - S Gt) * phi * clip) [- wd p].
 

@@ -37,9 +37,15 @@ these entry points from inside ``shard_map`` with per-shard (m, n_loc)
 panels — the kernels are reused unchanged (every fused pass is
 per-column), and the only axis-aware entry point is
 ``project_tangent_colnorms(axis_name=...)``, which psums the shard-local
-tangents into the global one.  Tile-alignment is then judged against the
-LOCAL column count: shards whose n_loc doesn't tile fall back to the
-reference per shard, exactly like odd shapes on one device.
+tangents into the global one.  On a ROW-sharded mesh (m sharded, n
+replicated) the same kernels run on (m_loc, n) panels; the axis-aware
+entry points are ``project_colnorms_rowsharded`` (the stacked (r+1, n)
+[A; colnorms] psum — the plain step's only collective) and
+``tangent_gram(axis_name=...)`` (the fused (r, n + 3r) cross-statistics
+psum tracking steps additionally need).  Tile-alignment is judged
+against the LOCAL panel dims either way: shards whose n_loc / m_loc
+doesn't tile fall back to the reference per shard, exactly like odd
+shapes on one device.
 """
 
 from __future__ import annotations
@@ -164,6 +170,55 @@ def project_tangent_colnorms(S: Array, G: Array, *, axis_name=None
     if axis_name is not None:
         A, gsq, T = out
         out = (A, gsq, jax.lax.psum(T, axis_name))
+    return out
+
+
+def project_colnorms_rowsharded(S: Array, G: Array, *, axis_name
+                                ) -> tuple[Array, Array]:
+    """Row-regime front end: the LOCAL project_colnorms launch on this
+    shard's (m/g, n) panel followed by the ONE stacked (r+1, n) psum of
+    [A_loc; ||G_loc||^2-row] — both sums are linear over the sharded
+    rows, so the psum'd result is the exact global (A, gsq).  This is
+    the row-sharded plain step's only collective: with A and the column
+    norms replicated, the Adam pass, phi, and the Eq. 12 clip closed
+    form all run redundantly per shard with no further communication.
+    """
+    A, gsq = project_colnorms(S, G)
+    stacked = jnp.concatenate([A, gsq[None, :]], axis=0)
+    stacked = jax.lax.psum(stacked, axis_name)
+    return stacked[:-1], stacked[-1]
+
+
+def tangent_gram(S: Array, T: Array, G: Array, *, axis_name=None
+                 ) -> tuple[Array, Array, Array, Array]:
+    """(T^T G, S^T T, T^T T, S^T S) in one pass over G — the row-regime
+    tracking step's second-round sufficient statistics.  Kernel:
+    grassmann.tangent_gram; oracle/fallback: ref.tangent_gram_ref.
+
+    ``axis_name`` is the mesh-native entry point: inside ``shard_map``
+    with S, T, G row-sharded, the four outputs are psum'd TOGETHER as
+    one fused (r, n + 3r) payload — every entry is linear in per-row
+    contributions, so the sum is the exact global statistic.  This is
+    the tracking step's only collective beyond the stacked projection
+    psum (the Gram is quadratic in the psum'd A, so it provably cannot
+    fold into that first linear round)."""
+    mode = _mode()
+    m, r = S.shape
+    n = G.shape[1]
+    if mode == "ref" or not _tiles_ok((m, grassmann.BM), (n, grassmann.BN)):
+        out = ref.tangent_gram_ref(S, T, G)
+    else:
+        out = grassmann.tangent_gram(S, T, G,
+                                     interpret=(mode == "interpret"))
+    if axis_name is not None:
+        TtG, StT, C, StS = out
+        payload = jnp.concatenate([TtG, StT, C, StS], axis=1)
+        payload = jax.lax.psum(payload, axis_name)
+        TtG = payload[:, :n]
+        StT = payload[:, n:n + r]
+        C = payload[:, n + r:n + 2 * r]
+        StS = payload[:, n + 2 * r:]
+        out = (TtG, StT, C, StS)
     return out
 
 

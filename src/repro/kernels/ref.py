@@ -74,6 +74,26 @@ def project_tangent_colnorms_ref(S: Array, G: Array
     return A, gsq, T
 
 
+def tangent_gram_ref(S: Array, T: Array, G: Array
+                     ) -> tuple[Array, Array, Array, Array]:
+    """Row-regime tracking cross statistics from one logical pass over G:
+
+        TtG = T^T G   (r, n)     feeds u^T G = v^T TtG / sigma
+        StT = S^T T   (r, r)     stabilizer's in-subspace component
+        C   = T^T T   (r, r)     tangent Gram (top-1 power iteration)
+        StS = S^T S   (r, r)     fp-exact orthonormality correction
+
+    Summed over shards these are global (every entry is linear in the
+    per-row-block contributions), which is what makes the row-sharded
+    tracking step's second psum a single fused collective.
+    S, T: (m, r); G: (m, n) any float.  All outputs fp32.
+    """
+    S32 = S.astype(jnp.float32)
+    T32 = T.astype(jnp.float32)
+    G32 = G.astype(jnp.float32)
+    return T32.T @ G32, S32.T @ T32, T32.T @ T32, S32.T @ S32
+
+
 def fused_update_ref(G: Array | None, S: Array, Gt: Array | None,
                      Gto: Array, phi: Array | None, coef: Array,
                      clip: Array, *, out_dtype=None,

@@ -346,19 +346,190 @@ def sharded_tracking_unfused_step_bytes(m: int, n: int, r: int, shards: int,
                                  coll)
 
 
+# ---------------------------------------------------------------------------
+# Row-sharded (m) regime: the second mesh-native layout
+# ---------------------------------------------------------------------------
+#
+# Under the row-sharded layout (G, S, params and the update sharded over m;
+# M, V, phi and all per-column vectors replicated) the projection A = S^T G
+# contracts over the sharded rows, so it is the collective:
+#
+#   plain step     — ONE stacked (r+1, n) all-reduce ([A; ||G_:,j||^2]
+#                    psum'd together).  After it, A and the column norms
+#                    are replicated, so the Adam pass, phi, and the Eq. 12
+#                    clip closed form are all computed redundantly per
+#                    shard with NO further collective (the clip sums
+#                    replicated per-column quantities) and the epilogue
+#                    writes the local (m/g, n) update rows.
+#   tracking step  — the same stacked psum, plus ONE fused (r, n + 3r)
+#                    all-reduce of [T^T G | S^T T | T^T T | S^T S].  The
+#                    tangent itself is row-local given global A (T_loc =
+#                    -2 G_loc A^T + 2 S_loc (A A^T) is exactly the global
+#                    tangent's row slice — no (m, r) psum, unlike the
+#                    column regime), but the top-1 triple needs the Gram
+#                    C = T^T T, which contracts over the sharded rows and
+#                    is QUADRATIC in the first psum's result — it cannot
+#                    be folded into a single linear collective round.
+#                    Given that second payload the geodesic scalars, the
+#                    stabilizer, the rank-1 (M, V) rotation and even the
+#                    new-basis projection (Gt_new = A + v (p^T G), with
+#                    p^T G assembled from v^T T^T G) are replicated, so
+#                    the epilogue again runs collective-free.
+#
+# Local G passes: plain = the unchanged fused pipeline on the (m/g, n)
+# panel (2 reads + 1 write).  Tracking = 4 reads + 1 write: the
+# project_colnorms pass, the tangent pass (global A), the tangent_gram
+# pass (T^T G), and the fused_update pass — one more read than the column
+# regime's 3, bought back by the absent (m, r) tangent psum and the
+# replicated-geometry epilogue.  The (r, n) state traffic is NOT divided
+# by g (M/V replicate across the row group — the memory cost of this
+# regime, which is why the layout builder prefers column sharding when
+# both regimes are admissible).
+
+
+def in_row_regime(m: int, shards: int, r: int) -> bool:
+    """The deployment rule for row-sharding a leaf over ``shards``
+    devices: the shard count must divide m AND the local row count must
+    stay >= 2r.  Below that the S_loc/T_loc panels and the (r+1, n)
+    stacked psum stop shrinking relative to the local gradient panel and
+    the fused-vs-literal ratio decays toward 1 — shard a different axis
+    (or replicate) instead.  Mirror of :func:`in_column_regime`; single
+    source of truth for the layout builder, the benches and the tests.
+    """
+    return shards >= 1 and m % shards == 0 and m // shards >= 2 * r
+
+
+def _shard_rows(m: int, shards: int) -> int:
+    if shards < 1 or m % shards:
+        raise ValueError(f"m={m} not divisible by shards={shards}")
+    return m // shards
+
+
+def _row_plain_collective(n: int, r: int, shards: int) -> int:
+    """Ring wire bytes of the stacked (r+1, n) [A; colnorms] psum."""
+    return allreduce_wire_bytes((r + 1) * n * F32, shards)
+
+
+def _row_tracking_collective(n: int, r: int, shards: int) -> int:
+    """Stacked (r+1, n) psum + the fused (r, n + 3r) Gram psum
+    ([T^T G | S^T T | T^T T | S^T S])."""
+    return _row_plain_collective(n, r, shards) \
+        + allreduce_wire_bytes(r * (n + 3 * r) * F32, shards)
+
+
+def sharded_row_fused_step_bytes(m: int, n: int, r: int, shards: int, *,
+                                 grad_bytes: int = F32,
+                                 param_bytes: int = F32
+                                 ) -> ShardedHotPathTraffic:
+    """Mesh-native fused plain step, row regime: the unchanged fused
+    pipeline on the local (m/g, n) panel (full-width (r, n) state passes
+    — M/V replicate across the row group) + the stacked (r+1, n) psum."""
+    local = fused_step_bytes(_shard_rows(m, shards), n, r,
+                             grad_bytes=grad_bytes, param_bytes=param_bytes)
+    return ShardedHotPathTraffic("sharded_row_fused", shards, local,
+                                 _row_plain_collective(n, r, shards))
+
+
+def sharded_row_unfused_step_bytes(m: int, n: int, r: int, shards: int, *,
+                                   grad_bytes: int = F32,
+                                   param_bytes: int = F32
+                                   ) -> ShardedHotPathTraffic:
+    """Paper-literal plain step distributed over the same row sharding
+    (charged the same stacked psum — its projection needs the identical
+    cross-row sum; generous to the baseline, as in the column model)."""
+    local = unfused_step_bytes(_shard_rows(m, shards), n, r,
+                               grad_bytes=grad_bytes,
+                               param_bytes=param_bytes)
+    return ShardedHotPathTraffic("sharded_row_unfused", shards, local,
+                                 _row_plain_collective(n, r, shards))
+
+
+def row_tracking_fused_step_bytes(m_loc: int, n: int, r: int, *,
+                                  grad_bytes: int = F32,
+                                  param_bytes: int = F32) -> HotPathTraffic:
+    """Local bytes of the row-regime fused tracking step on an (m_loc, n)
+    panel: project_colnorms -> [psum] -> tangent (global A) ->
+    tangent_gram -> [psum] -> replicated geometry (top1/geodesic/rank-1
+    rotation/Gt_new via the rank-1 identity, all O(rn + r^2)) ->
+    adam_lowrank_norms -> fused_update.  4 reads of the local G + 1
+    final-dtype write; no (m, n) intermediates."""
+    mn = (
+        4 * m_loc * n * grad_bytes  # G read by project_colnorms, tangent,
+                                    # tangent_gram and fused_update
+        + m_loc * n * param_bytes   # update write (final dtype, once)
+    )
+    rn = (
+        r * n * F32               # A write (project_colnorms)
+        + 2 * r * n * F32         # A read by tangent + tangent_gram epochs
+        + 2 * r * n * F32         # T^T G write + read (Gt_new assembly)
+        + r * n * F32             # Gt_new write (rank-1 identity, O(rn))
+        + 4 * r * n * F32         # rank-1 rotation: M, V read; M', V' write
+        + 6 * r * n * F32         # adam_lowrank_norms: 3 reads + 3 writes
+        + 2 * r * n * F32         # Gt, Gto read (fused_update panels)
+    )
+    mr = (
+        3 * m_loc * r * F32       # S read by project_colnorms, tangent,
+                                  # tangent_gram
+        + 2 * m_loc * r * F32     # T write (tangent) + T read (tangent_gram)
+        + 2 * m_loc * r * F32     # T read (u = T v) + geodesic S read
+        + m_loc * r * F32         # S_new write
+        + m_loc * r * F32         # S_new read (fused_update)
+    )
+    nb = 5 * n * F32              # gsq/gtsq/gtosq + phi write/read
+    return HotPathTraffic("row_tracking_fused", mn, rn, mr, nb)
+
+
+def sharded_row_tracking_fused_step_bytes(m: int, n: int, r: int,
+                                          shards: int, *,
+                                          grad_bytes: int = F32,
+                                          param_bytes: int = F32
+                                          ) -> ShardedHotPathTraffic:
+    """Mesh-native fused tracking step, row regime: local 4-read pipeline
+    + the two documented psums (stacked (r+1, n); fused (r, n+3r) Gram)."""
+    local = row_tracking_fused_step_bytes(
+        _shard_rows(m, shards), n, r, grad_bytes=grad_bytes,
+        param_bytes=param_bytes)
+    return ShardedHotPathTraffic("sharded_row_tracking_fused", shards, local,
+                                 _row_tracking_collective(n, r, shards))
+
+
+def sharded_row_tracking_unfused_step_bytes(m: int, n: int, r: int,
+                                            shards: int, *,
+                                            grad_bytes: int = F32,
+                                            param_bytes: int = F32
+                                            ) -> ShardedHotPathTraffic:
+    """Paper-literal tracking step distributed over the same row sharding
+    (same two collectives charged — its projections and tangent Gram need
+    the identical cross-row sums; generous to the baseline)."""
+    local = tracking_unfused_step_bytes(_shard_rows(m, shards), n, r,
+                                        grad_bytes=grad_bytes,
+                                        param_bytes=param_bytes)
+    return ShardedHotPathTraffic("sharded_row_tracking_unfused", shards,
+                                 local,
+                                 _row_tracking_collective(n, r, shards))
+
+
 def sharded_traffic_ratio(m: int, n: int, r: int, shards: int, *,
-                          tracking: bool = False, grad_bytes: int = F32,
+                          tracking: bool = False, regime: str = "column",
+                          grad_bytes: int = F32,
                           param_bytes: int = F32) -> float:
     """Per-shard fused / paper-literal total-byte ratio (target <= 0.7:
-    the single-chip fusion win must survive distribution)."""
-    if tracking:
-        fus = sharded_tracking_fused_step_bytes(
-            m, n, r, shards, grad_bytes=grad_bytes, param_bytes=param_bytes)
-        unf = sharded_tracking_unfused_step_bytes(
-            m, n, r, shards, grad_bytes=grad_bytes, param_bytes=param_bytes)
+    the single-chip fusion win must survive distribution).  ``regime``
+    selects the column- (n-sharded) or row- (m-sharded) layout model."""
+    if regime not in ("column", "row"):
+        raise ValueError(f"unknown sharding regime {regime!r}")
+    if regime == "row":
+        fus_fn = (sharded_row_tracking_fused_step_bytes if tracking
+                  else sharded_row_fused_step_bytes)
+        unf_fn = (sharded_row_tracking_unfused_step_bytes if tracking
+                  else sharded_row_unfused_step_bytes)
     else:
-        fus = sharded_fused_step_bytes(
-            m, n, r, shards, grad_bytes=grad_bytes, param_bytes=param_bytes)
-        unf = sharded_unfused_step_bytes(
-            m, n, r, shards, grad_bytes=grad_bytes, param_bytes=param_bytes)
+        fus_fn = (sharded_tracking_fused_step_bytes if tracking
+                  else sharded_fused_step_bytes)
+        unf_fn = (sharded_tracking_unfused_step_bytes if tracking
+                  else sharded_unfused_step_bytes)
+    fus = fus_fn(m, n, r, shards, grad_bytes=grad_bytes,
+                 param_bytes=param_bytes)
+    unf = unf_fn(m, n, r, shards, grad_bytes=grad_bytes,
+                 param_bytes=param_bytes)
     return fus.total / unf.total

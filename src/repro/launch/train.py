@@ -26,9 +26,11 @@ Production behaviours exercised here (and tested in tests/test_train_loop.py):
   trails dispatch by one step, so host work never serializes the device
   queue (divergence detection runs one step late by design).
 * **mesh-native hot path**: on a multi-device mesh with ``--use-kernels``
-  the low-rank leaves are column-sharded (``hotpath_param_specs``) and
+  each low-rank leaf is sharded in its cheapest admissible regime —
+  column (n) or row (m), picked by the modeled per-device bytes
+  (``hotpath_param_specs``; override with ``--hotpath-layout``) — and
   the fused optimizer step runs under ``shard_map`` — see
-  repro.core.subtrack for the two-collective contract.
+  repro.core.subtrack for the per-regime collective contract.
 """
 
 from __future__ import annotations
@@ -114,6 +116,13 @@ def train(argv=None) -> dict:
     ap.add_argument("--eta", type=float, default=10.0)
     ap.add_argument("--metrics-out", default="")
     ap.add_argument("--use-kernels", action="store_true")
+    ap.add_argument("--hotpath-layout", default="auto",
+                    choices=["auto", "column", "row", "off"],
+                    help="mesh-native fused-optimizer layout: auto picks "
+                         "column or row sharding per leaf by the modeled "
+                         "per-device bytes (repro.kernels.traffic); "
+                         "column/row restrict to one regime; off disables "
+                         "the shard_map'd hot path (GSPMD propagation)")
     args = ap.parse_args(argv)
 
     ctx = (smoke_context() if args.mesh == "smoke"
@@ -130,20 +139,29 @@ def train(argv=None) -> dict:
             opt_kw = dict(rank=rank, update_interval=args.update_interval,
                           eta=args.eta, weight_decay=args.weight_decay,
                           use_kernels=args.use_kernels)
-            if args.use_kernels and ctx.mesh.devices.size > 1:
-                # mesh-native fused hot path: column-shard every low-rank
-                # leaf and run the per-matrix step under shard_map (one
-                # scalar psum per plain step, +1 tangent psum on tracking
-                # steps — see repro.core.subtrack)
+            if args.use_kernels and ctx.mesh.devices.size > 1 \
+                    and args.hotpath_layout != "off":
+                # mesh-native fused hot path: shard every low-rank leaf in
+                # its cheapest admissible regime — column (n sharded: one
+                # scalar clip psum per plain step, +1 (m, r) tangent psum
+                # on tracking) or row (m sharded: one stacked (r+1, n)
+                # psum per plain step, +1 fused (r, n+3r) Gram psum on
+                # tracking) — and run the per-matrix step under shard_map
+                # (see repro.core.subtrack)
+                regimes = (("column", "row")
+                           if args.hotpath_layout == "auto"
+                           else (args.hotpath_layout,))
                 shapes = jax.eval_shape(bundle.init,
                                         jax.random.PRNGKey(args.seed))
-                hot_specs = sh.hotpath_param_specs(shapes, ctx, rank)
+                hot_specs = sh.hotpath_param_specs(shapes, ctx, rank,
+                                                   regimes=regimes)
                 opt_kw.update(mesh=ctx.mesh, param_specs=hot_specs)
         elif args.weight_decay:
             opt_kw = dict(weight_decay=args.weight_decay)
         optimizer = get_optimizer(args.optimizer, **opt_kw)
         if args.use_kernels and "use_kernels" in opt_kw:
-            mode = ("mesh-sharded (shard_map over column axes)"
+            mode = (f"mesh-sharded (shard_map, regime-aware layout: "
+                    f"{args.hotpath_layout})"
                     if "mesh" in opt_kw else "single-device")
             print("[train] optimizer hot path: fused single-pass kernels "
                   f"[{mode}] "

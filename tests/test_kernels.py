@@ -146,6 +146,48 @@ class TestFusedHotPath:
         assert _rel(sq, sq2) < tol
         assert _rel(T, T2) < tol
 
+    def test_tangent_gram(self, m, n, r, dtype):
+        """The row-regime second pass: (T^T G, S^T T, T^T T, S^T S) from
+        one read of G — the cross-row sufficient statistics the
+        row-sharded tracking step psums as a single fused payload."""
+        G, S, _ = _inputs(m, n, r, dtype)
+        A = ref.project_ref(S, G)
+        T = ref.tangent_ref(G, A, S)
+        got = grassmann.tangent_gram(S, T, G, interpret=True)
+        want = ref.tangent_gram_ref(S, T, G)
+        tol = 1e-4 if dtype == jnp.float32 else 3e-2
+        # S^T T is analytically ZERO (tangent ⟂ range(S)): both sides are
+        # cancellation noise there, so its error is judged against the
+        # operand scale |T| rather than the (noise-floor) result scale
+        tmax = float(jnp.max(jnp.abs(T)))
+        denoms = (None, tmax, None, None)
+        for g_, w_, base in zip(got, want, denoms):
+            denom = float(jnp.max(jnp.abs(w_))) if base is None else base
+            err = float(jnp.max(jnp.abs(g_ - w_)))
+            assert err < tol * denom + 1e-6, (err, denom)
+
+    def test_tangent_gram_rowsum_linearity(self, m, n, r, dtype):
+        """Summing per-row-block tangent_gram outputs equals the whole-
+        matrix result — the linearity the row regime's single fused psum
+        relies on (each shard contributes its row block).  Tolerances are
+        scaled by the OPERANDS, not the results: S^T T is analytically
+        zero (the tangent lies in S's orthogonal complement), so both
+        sides are fp cancellation noise of magnitude ~eps * m * |S||T| —
+        exactly the noise the row tracker's stabilizer later scrubs."""
+        G, S, _ = _inputs(m, n, r, dtype)
+        A = ref.project_ref(S, G)
+        T = ref.tangent_ref(G, A, S)
+        whole = ref.tangent_gram_ref(S, T, G)
+        half = m // 2
+        parts = [ref.tangent_gram_ref(S[sl], T[sl], G[sl])
+                 for sl in (slice(0, half), slice(half, None))]
+        tmax = float(jnp.max(jnp.abs(T)))
+        gmax = float(jnp.max(jnp.abs(G.astype(jnp.float32))))
+        scales = (tmax * gmax, tmax, tmax * tmax, 1.0)  # TtG, StT, C, StS
+        for w_, a_, b_, sc in zip(whole, *parts, scales):
+            err = float(jnp.max(jnp.abs(a_ + b_ - w_)))
+            assert err < 1e-4 * sc + 1e-6, (err, sc)
+
     def test_lam_norm_identity(self, m, n, r, dtype):
         """||Lam||^2 == sum_j phi_j^2 (||G_:,j||^2 - ||Gt_:,j||^2) — the
         closed form (exact for orthonormal S) vs the materialized
@@ -295,6 +337,52 @@ def test_sharded_traffic_model_below_bound():
     one = traffic.sharded_fused_step_bytes(1024, 2560, 256, 1)
     assert one.collective_bytes == 0
     assert one.total == traffic.fused_step_bytes(1024, 2560, 256).total
+
+
+def test_sharded_row_traffic_model_below_bound():
+    """Acceptance (row regime): inside the documented m/g >= 2r gate the
+    per-shard PLAIN ratio stays <= 0.7 (fp32 and bf16, every admissible
+    shard count); the TRACKING ratio stays <= 0.8 in-gate and <= 0.7 once
+    m/g >= 4r (near the boundary the replicated full-width M/V state
+    passes dilute its win — the plain step, which dominates wall time at
+    k = 200, is unaffected).  Collective terms behave as documented: the
+    plain step's one stacked (r+1, n) psum; tracking adds exactly the
+    fused (r, n + 3r) Gram psum — no (m, r)-sized collective exists in
+    this regime."""
+    from repro.kernels import traffic
+    for (m, n, r) in [(1024, 2560, 128), (2048, 5632, 256),
+                      (4096, 11008, 256), (8192, 8192, 512)]:
+        for g in (4, 8, 16):
+            if not traffic.in_row_regime(m, g, r):
+                continue
+            for gb, pb in ((4, 4), (2, 2)):
+                plain_ratio = traffic.sharded_traffic_ratio(
+                    m, n, r, g, regime="row", grad_bytes=gb, param_bytes=pb)
+                assert plain_ratio <= 0.7, (m, n, r, g, gb, plain_ratio)
+                track_ratio = traffic.sharded_traffic_ratio(
+                    m, n, r, g, tracking=True, regime="row",
+                    grad_bytes=gb, param_bytes=pb)
+                bound = 0.7 if m // g >= 4 * r else 0.8
+                assert track_ratio <= bound, (m, n, r, g, gb, track_ratio)
+            plain = traffic.sharded_row_fused_step_bytes(m, n, r, g)
+            track = traffic.sharded_row_tracking_fused_step_bytes(m, n, r, g)
+            assert plain.collective_bytes == \
+                traffic.allreduce_wire_bytes((r + 1) * n * 4, g)
+            assert track.collective_bytes == \
+                traffic.allreduce_wire_bytes(r * (n + 3 * r) * 4, g) + \
+                plain.collective_bytes
+            # local per-shard bytes are exactly the single-chip model on
+            # the (m/g, n) panel — full-width (r, n) state (M/V replicate)
+            assert plain.local.total == \
+                traffic.fused_step_bytes(m // g, n, r).total
+    # gate boundary is exactly m/g == 2r, mirroring the column gate
+    assert traffic.in_row_regime(4096, 16, 128)
+    assert not traffic.in_row_regime(4096, 16, 129)
+    assert not traffic.in_row_regime(4097, 16, 64)   # indivisible m
+    # one shard == the unsharded model with zero wire bytes
+    one = traffic.sharded_row_fused_step_bytes(1024, 2560, 128, 1)
+    assert one.collective_bytes == 0
+    assert one.total == traffic.fused_step_bytes(1024, 2560, 128).total
 
 
 def test_ops_dispatch_fallback_for_odd_shapes(monkeypatch):

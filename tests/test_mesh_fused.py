@@ -2,16 +2,25 @@
 
 Run with ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI
 tier-1 sharded step does); on a single-device interpreter every test here
-skips.  Covers the tentpole contract end to end:
+skips.  Covers the tentpole contract end to end, in BOTH regimes:
 
 * the column-shard_map'd fused step reproduces the replicated fused step
   (updates, S, M, V, lam_prev) within the PR 1 per-step budgets over a
   multi-step loop with tracking steps firing;
-* the compiled plain step contains EXACTLY one all-reduce (the Eq. 12
-  clip scalar) and the tracking step at most two (+ the (m, r) tangent
-  psum) — asserted on post-SPMD HLO via repro.distributed.hlo_analysis;
+* the compiled column-regime plain step contains EXACTLY one all-reduce
+  (the Eq. 12 clip scalar) and the tracking step at most two (+ the
+  (m, r) tangent psum) — asserted on post-SPMD HLO via
+  repro.distributed.hlo_analysis;
+* the ROW-shard_map'd fused step (m sharded, n replicated) reproduces
+  the replicated step within the same budgets, and its compiled
+  collective structure is pinned EXACTLY: one all-reduce per plain step
+  (the stacked (r+1, n) [A; colnorms] psum — the clip closed form is
+  then free) and exactly two per tracking step (+ the fused (r, n + 3r)
+  tangent-Gram psum; the tangent itself is row-local given global A, so
+  no (m, r)-sized collective exists — the second psum is irreducible
+  because the tangent Gram is quadratic in the first psum's result);
 * spec-aware bucketing stacks same-layout leaves into one launch without
-  changing results.
+  changing results, in either regime.
 """
 
 import functools
@@ -47,6 +56,7 @@ def _params(key):
 
 
 SPECS = {"w": P(None, "x"), "layers": P(None, None, "x"), "b": P()}
+ROW_SPECS = {"w": P("x", None), "layers": P(None, "x", None), "b": P()}
 
 
 def _grad_at(key, params, s):
@@ -55,12 +65,12 @@ def _grad_at(key, params, s):
         for i, (k, v) in enumerate(sorted(params.items()))}
 
 
-def _optimizers(mesh, **overrides):
+def _optimizers(mesh, specs=SPECS, **overrides):
     kw = dict(rank=RANK, update_interval=4, eta=2e-5, use_kernels=True)
     kw.update(overrides)
     rep = lowrank_optimizer(LowRankConfig(**kw))
     shd = lowrank_optimizer(LowRankConfig(**kw), mesh=mesh,
-                            param_specs=SPECS)
+                            param_specs=specs)
     return rep, shd
 
 
@@ -230,3 +240,200 @@ class TestShardedBucketing:
                 np.testing.assert_allclose(np.asarray(a[k]),
                                            np.asarray(b[k]),
                                            rtol=1e-6, atol=1e-8)
+
+
+# ---------------------------------------------------------------------------
+# Row-sharded (m) regime
+# ---------------------------------------------------------------------------
+
+
+class TestRowShardedAgreement:
+    def test_row_sharded_matches_replicated_over_loop(self, mesh):
+        """Per-step agreement from a shared evolving state over 10 steps
+        (tracking at 4 and 8) — the same PR 1 budgets as the column
+        regime: 1e-5 plain steps, 1e-3 tracking steps.  Every replicated
+        quantity (M, V, lam) and the row-sharded ones (S, updates) must
+        match the replicated run."""
+        key = jax.random.PRNGKey(10)
+        params = _params(key)
+        opt_rep, opt_shd = _optimizers(mesh, specs=ROW_SPECS)
+        state = opt_rep.init(params)
+        state = opt_rep.warm_start(state, _grad_at(key, params, 0))
+        shardings = {k: NamedSharding(mesh, s)
+                     for k, s in ROW_SPECS.items()}
+        upd_rep = jax.jit(opt_rep.update,
+                          static_argnames=("do_subspace_update",))
+        upd_shd = jax.jit(opt_shd.update,
+                          static_argnames=("do_subspace_update",))
+        with mesh:
+            tracked = 0
+            for s in range(10):
+                g = _grad_at(key, params, s)
+                do = s > 0 and s % 4 == 0
+                tracked += do
+                u_r, st_r = upd_rep(g, state, params, 0.03,
+                                    do_subspace_update=do)
+                u_s, st_s = upd_shd(jax.device_put(g, shardings), state,
+                                    jax.device_put(params, shardings),
+                                    0.03, do_subspace_update=do)
+                budget = 1e-3 if do else 1e-5
+                for k in ("w", "layers"):
+                    rel = float(jnp.max(jnp.abs(u_r[k] - u_s[k]))
+                                / (jnp.max(jnp.abs(u_r[k])) + 1e-12))
+                    assert rel < budget, (s, k, rel)
+                    for f in range(3):  # S, M, V
+                        a = np.asarray(st_r.inner[k][f])
+                        b = np.asarray(st_s.inner[k][f])
+                        rel = float(np.max(np.abs(a - b))
+                                    / (np.max(np.abs(a)) + 1e-12))
+                        assert rel < budget, (s, k, f, rel)
+                    np.testing.assert_allclose(
+                        np.asarray(st_r.inner[k].lam_prev),
+                        np.asarray(st_s.inner[k].lam_prev), rtol=1e-4)
+                state = st_r
+            assert tracked == 2
+            assert float(state.inner["w"].lam_prev) > 0
+
+    def test_row_sharded_final_params_close(self, mesh):
+        """Closed loop: both paths free-run their own params/state; after
+        10 steps (2 tracking) the parameters still agree to fp
+        tolerance."""
+        key = jax.random.PRNGKey(11)
+        params = _params(key)
+        opt_rep, opt_shd = _optimizers(mesh, specs=ROW_SPECS)
+        shardings = {k: NamedSharding(mesh, s)
+                     for k, s in ROW_SPECS.items()}
+
+        def run(opt, place):
+            p = jax.device_put(params, shardings) if place else dict(params)
+            state = opt.init(p)
+            state = opt.warm_start(state, _grad_at(key, params, 0))
+            upd = jax.jit(opt.update,
+                          static_argnames=("do_subspace_update",))
+            with mesh:
+                for s in range(10):
+                    g = _grad_at(key, params, s)
+                    if place:
+                        g = jax.device_put(g, shardings)
+                    u, state = upd(g, state, p, 0.03,
+                                   do_subspace_update=(s > 0 and s % 4 == 0))
+                    p = jax.tree.map(lambda a, b: a + b, p, u)
+            return p
+
+        p_rep = run(opt_rep, False)
+        p_shd = run(opt_shd, True)
+        for k in ("w", "layers"):
+            rel = float(jnp.max(jnp.abs(p_rep[k] - p_shd[k]))
+                        / (jnp.max(jnp.abs(p_rep[k])) + 1e-12))
+            assert rel < 1e-3, (k, rel)
+
+    def test_row_sharded_weight_decay_and_bucketing(self, mesh):
+        """Weight decay threads the row-sharded param panel through
+        shard_map, and auto-on bucketing (specs present) must match
+        forced per-leaf execution exactly."""
+        key = jax.random.PRNGKey(12)
+        params = _params(key)
+        shardings = {k: NamedSharding(mesh, s)
+                     for k, s in ROW_SPECS.items()}
+
+        def run(bucket):
+            opt = lowrank_optimizer(
+                LowRankConfig(rank=RANK, update_interval=4, eta=2e-5,
+                              use_kernels=True, bucket_leaves=bucket,
+                              weight_decay=0.1),
+                mesh=mesh, param_specs=ROW_SPECS)
+            p = jax.device_put(params, shardings)
+            state = opt.init(p)
+            state = opt.warm_start(state, jax.device_put(
+                _grad_at(key, params, 0), shardings))
+            upd = jax.jit(opt.update,
+                          static_argnames=("do_subspace_update",))
+            outs = []
+            with mesh:
+                for s in range(6):
+                    g = jax.device_put(_grad_at(key, params, s), shardings)
+                    u, state = upd(g, state, p, 0.03,
+                                   do_subspace_update=(s == 4))
+                    outs.append(u)
+            return outs
+
+        for a, b in zip(run(None), run(False)):   # None auto-ons w/ specs
+            for k in ("w", "layers"):
+                np.testing.assert_allclose(np.asarray(a[k]),
+                                           np.asarray(b[k]),
+                                           rtol=1e-6, atol=1e-8)
+
+
+class TestRowCollectiveStructure:
+    @pytest.mark.parametrize("do_update,n_allreduce", [(False, 1),
+                                                       (True, 2)])
+    def test_row_fused_step_collective_counts(self, mesh, do_update,
+                                              n_allreduce):
+        """The compiled row-sharded step's ONLY collectives are the
+        documented psums, pinned EXACTLY: 1 all-reduce per plain step
+        (the stacked (r+1, n) [A; colnorms] panel — the Eq. 12 clip then
+        sums replicated quantities, costing nothing) and exactly 2 per
+        tracking step (+ the fused (r, n + 3r) [T^T G | S^T T | T^T T |
+        S^T S] Gram psum).  No (m, r) tangent psum exists in this regime
+        — the tangent is row-local given global A — and the second
+        tracking psum is irreducible: the Gram is quadratic in the first
+        psum's output, so no single linear collective can carry both.
+        Nothing else of any collective kind may appear."""
+        key = jax.random.PRNGKey(13)
+        params = _params(key)
+        _, opt_shd = _optimizers(mesh, specs=ROW_SPECS)
+        state = opt_shd.init(params)
+        shardings = {k: NamedSharding(mesh, s)
+                     for k, s in ROW_SPECS.items()}
+        g = jax.device_put(_grad_at(key, params, 1), shardings)
+        p = jax.device_put(params, shardings)
+        with mesh:
+            f = functools.partial(opt_shd.update,
+                                  do_subspace_update=do_update)
+            comp = jax.jit(f).lower(g, state, p,
+                                    jnp.float32(0.03)).compile()
+        summ = summarize_compiled(comp, 8)
+        n_ar = summ.collective_counts.get("all-reduce", 0)
+        assert n_ar == n_allreduce, summ.collective_counts
+        others = {k: v for k, v in summ.collective_counts.items()
+                  if k != "all-reduce"}
+        assert not others, others
+
+
+class TestRowShardedPlans:
+    def test_spec_row_axes_and_regime(self):
+        """Regime classification: row = m sharded with n + lead dims
+        replicated; mutually exclusive with the column regime; lead
+        sharding disqualifies; the canonical transpose folds the spec."""
+        row = plan_lib.plan_for_shape((M, N), RANK, spec=P("x", None))
+        row_stacked = plan_lib.plan_for_shape((3, M, N), RANK,
+                                              spec=P(None, "x", None))
+        # (N, M) sharded on dim 1 is ROW-sharded after canonicalization
+        transposed = plan_lib.plan_for_shape((N, M), RANK,
+                                             spec=P(None, "x"))
+        col = plan_lib.plan_for_shape((M, N), RANK, spec=P(None, "x"))
+        both = plan_lib.plan_for_shape((M, N), RANK, spec=P("x", "y"))
+        lead = plan_lib.plan_for_shape((8, M, N), RANK,
+                                       spec=P("x", "y", None))
+        assert plan_lib.spec_row_axes(row) == ("x",)
+        assert plan_lib.spec_row_axes(row_stacked) == ("x",)
+        assert plan_lib.spec_row_axes(transposed) == ("x",)
+        assert plan_lib.spec_row_axes(col) is None
+        assert plan_lib.spec_row_axes(both) is None
+        assert plan_lib.spec_row_axes(lead) is None
+        assert plan_lib.spec_regime(row) == "row"
+        assert plan_lib.spec_regime(col) == "column"
+        assert plan_lib.spec_regime(both) is None
+        assert plan_lib.spec_regime(
+            plan_lib.plan_for_shape((M, N), RANK, spec=P())) is None
+
+    def test_row_layout_bucket_keys(self):
+        """Same-row-layout leaves share a bucket; row and column layouts
+        never mix; the stacked twin folds in."""
+        row = plan_lib.plan_for_shape((M, N), RANK, spec=P("x", None))
+        row_stacked = plan_lib.plan_for_shape((3, M, N), RANK,
+                                              spec=P(None, "x", None))
+        col = plan_lib.plan_for_shape((M, N), RANK, spec=P(None, "x"))
+        k = plan_lib.bucket_key(row, jnp.float32)
+        assert plan_lib.bucket_key(row_stacked, jnp.float32) == k
+        assert plan_lib.bucket_key(col, jnp.float32) != k

@@ -148,6 +148,59 @@ class TestHotpathSpecs:
         assert plan_lib.spec_column_axes(plans["w"]) == ("model",)
 
 
+class TestHotpathRegimeSelection:
+    """Regime-aware layout builder: column vs row per leaf, by the
+    modeled per-device bytes (repro.kernels.traffic)."""
+
+    def test_column_preferred_when_both_admissible(self, ctx):
+        # square leaf, both gates pass at rank 128 — the byte model
+        # prefers column (state shards with the columns; scalar psum)
+        specs = sh.hotpath_param_specs({"w": _sds(4096, 4096)}, ctx,
+                                       rank=128)
+        assert specs["w"] == P(None, "model")
+
+    def test_row_leaf_picks_row_regime(self, ctx):
+        # n = 4097 divides neither axis -> column inadmissible; m = 2048
+        # with m/16 = 128 >= 2r = 128 -> the leaf row-shards instead of
+        # replicating (the wo/w_down coverage gap this PR closes)
+        specs = sh.hotpath_param_specs({"w": _sds(2048, 4097)}, ctx,
+                                       rank=64)
+        assert specs["w"] == P("model", None)
+        # transposed twin: canonical m is the ORIGINAL column dim
+        specs = sh.hotpath_param_specs({"w": _sds(4097, 2048)}, ctx,
+                                       rank=64)
+        assert specs["w"] == P(None, "model")
+
+    def test_row_gate_boundary_at_two_r(self, ctx):
+        # m/g = 4096/16 = 256: admissible at r = 128 (== 2r), blocked at
+        # r = 129 — the m/g >= 2r rule, mirroring the column gate
+        specs = sh.hotpath_param_specs({"w": _sds(4096, 4097)}, ctx,
+                                       rank=128)
+        assert specs["w"] == P("model", None)
+        specs = sh.hotpath_param_specs({"w": _sds(4096, 4097)}, ctx,
+                                       rank=129)
+        assert specs["w"] == P(None, None)
+
+    def test_regimes_restriction(self, ctx):
+        # the trainer's --hotpath-layout flag: restricting to one regime
+        # replicates leaves only the other regime could shard
+        params = {"w": _sds(2048, 4097)}
+        specs = sh.hotpath_param_specs(params, ctx, rank=64,
+                                       regimes=("column",))
+        assert specs["w"] == P(None, None)
+        specs = sh.hotpath_param_specs(params, ctx, rank=64,
+                                       regimes=("row",))
+        assert specs["w"] == P("model", None)
+
+    def test_row_specs_feed_row_shardable_plans(self, ctx):
+        from repro.core import plan as plan_lib
+        params = {"w": _sds(2048, 4097)}
+        specs = sh.hotpath_param_specs(params, ctx, rank=64)
+        plans = plan_lib.make_plans(params, 64, specs=specs)
+        assert plan_lib.spec_row_axes(plans["w"]) == ("model",)
+        assert plan_lib.spec_regime(plans["w"]) == "row"
+
+
 class TestHloAnalysis:
     def test_scan_trip_multiplication(self):
         """Validated against a real compiled program: the analyzer must

@@ -1,0 +1,129 @@
+"""Bench-artifact hygiene checker: the committed ``BENCH_kernels.json``
+must stay structurally in sync with ``benchmarks/kernels_bench.py``.
+
+The JSON is the machine-readable perf trajectory across PRs; a stale
+artifact (sections missing after a bench gains one, agreement loops that
+silently regressed, modeled ratios drifting past their documented
+targets) would quietly rot.  This checker fails CI fast instead:
+
+* every expected section is present (``hotpath``, ``tracking``,
+  ``sharded``, ``sharded-row``) with a non-empty ``shapes`` map;
+* the numeric agreement loops recorded their worst relative error and it
+  is inside the documented budget (1e-5 plain / 1e-3 with tracking
+  steps);
+* modeled traffic ratios respect their targets: hotpath <= 0.5,
+  tracking <= 0.7, sharded (column) <= 0.7, sharded-row <= the per-row
+  recorded target (0.7 plain / 0.8 tracking near the m/g >= 2r gate
+  boundary, 0.7 from m/g >= 4r);
+* the flat timing ``rows`` list exists and covers every section.
+
+Run: ``python tools/check_bench.py [PATH]`` (default:
+repo-root/BENCH_kernels.json).  Wired into the CI docs job next to
+tools/check_docs.py.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+EXPECTED_SECTIONS = ("hotpath", "tracking", "sharded", "sharded-row")
+AGREEMENT_BUDGETS = {"hotpath": 1e-5, "tracking": 1e-3}
+FLAT_RATIO_TARGETS = {"hotpath": 0.5, "tracking": 0.7}
+
+
+def _iter_ratio_cells(by_shape: dict):
+    """Yield (key, dtype_tag, cell) from a sharded-section shapes map
+    (cells are {'ratio': ..., 'target': ...?, ...} dicts per dtype)."""
+    for kind_key, by_dtype in by_shape.items():
+        for tag, cell in by_dtype.items():
+            yield kind_key, tag, cell
+
+
+def check_bench(path: Path) -> list[str]:
+    errors: list[str] = []
+    try:
+        payload = json.loads(path.read_text())
+    except FileNotFoundError:
+        return [f"{path}: missing — run `PYTHONPATH=src python "
+                "benchmarks/kernels_bench.py --json`"]
+    except json.JSONDecodeError as e:
+        return [f"{path}: not valid JSON ({e})"]
+
+    sections = payload.get("sections", {})
+    for name in EXPECTED_SECTIONS:
+        if name not in sections:
+            errors.append(f"section {name!r} missing — stale artifact?")
+            continue
+        shapes = sections[name].get("shapes", {})
+        if not shapes:
+            errors.append(f"section {name!r}: empty 'shapes' map")
+
+    # per-step numeric agreement loops must have run and stayed in budget
+    for name, budget in AGREEMENT_BUDGETS.items():
+        rel = sections.get(name, {}).get("agreement_rel")
+        if rel is None:
+            errors.append(f"section {name!r}: no 'agreement_rel' recorded")
+        elif rel > budget:
+            errors.append(f"section {name!r}: agreement {rel:.2e} "
+                          f"exceeds budget {budget}")
+    row = sections.get("sharded-row", {})
+    agree = row.get("agreement_rel")
+    if isinstance(agree, dict):
+        if agree.get("plain", 1.0) > 1e-5:
+            errors.append("sharded-row plain agreement "
+                          f"{agree.get('plain'):.2e} exceeds 1e-5")
+        if agree.get("tracking", 1.0) > 1e-3:
+            errors.append("sharded-row tracking agreement "
+                          f"{agree.get('tracking'):.2e} exceeds 1e-3")
+    elif "mesh" not in row:
+        errors.append("sharded-row: neither an agreement loop result nor "
+                      "a mesh-skip note — regenerate with "
+                      "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+    # modeled ratios against their targets
+    for name, target in FLAT_RATIO_TARGETS.items():
+        for shape, by_tag in sections.get(name, {}).get("shapes",
+                                                        {}).items():
+            for tag, ratio in by_tag.items():
+                if ratio > target:
+                    errors.append(f"{name}/{shape}/{tag}: ratio "
+                                  f"{ratio:.3f} > {target}")
+    for name in ("sharded", "sharded-row"):
+        for shape, by_shape in sections.get(name, {}).get("shapes",
+                                                          {}).items():
+            for kind_key, tag, cell in _iter_ratio_cells(by_shape):
+                target = cell.get("target", 0.7)
+                if cell["ratio"] > target:
+                    errors.append(f"{name}/{shape}/{kind_key}/{tag}: "
+                                  f"ratio {cell['ratio']:.3f} > {target}")
+
+    rows = payload.get("rows", [])
+    if not rows:
+        errors.append("no flat timing 'rows' recorded")
+    else:
+        prefixes = {r["name"].split("/", 1)[0] for r in rows
+                    if isinstance(r, dict) and "/" in r.get("name", "")}
+        for name in EXPECTED_SECTIONS:
+            if name not in prefixes:
+                errors.append(f"no timing rows with prefix {name!r}/")
+    return errors
+
+
+def main() -> int:
+    path = Path(sys.argv[1]) if len(sys.argv) > 1 \
+        else REPO / "BENCH_kernels.json"
+    errors = check_bench(path)
+    for e in errors:
+        print(f"[check_bench] {e}", file=sys.stderr)
+    if errors:
+        return 1
+    print(f"[check_bench] {path.name} OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
