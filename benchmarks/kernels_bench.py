@@ -27,18 +27,32 @@ collective bytes (clip scalar; tracking adds the (m, r) tangent psum),
 fused vs the paper-literal schedule distributed the same way (claim:
 per-shard ratio <= 0.7 at every shard count).
 
-The ``sharded-row/`` section covers the ROW-sharded (m) regime: local
-bytes on the (m/shards, n) row panel plus the stacked (r+1, n)
-projection psum (tracking adds the fused (r, n + 3r) tangent-Gram
-psum).  Claims: plain ratio <= 0.7 everywhere inside the documented
-m/g >= 2r gate; tracking ratio <= 0.8 in-gate and <= 0.7 once
-m/g >= 4r (near the boundary the replicated full-width M/V passes —
-the memory cost of this regime — dilute the tracking win; the plain
+The ``sharded-row/`` section covers the ROW-sharded (m) regime with
+replicated M/V: local bytes on the (m/shards, n) row panel plus the
+stacked (r+1, n) projection psum (tracking adds the fused (r, n + 3r)
+tangent-Gram psum).  Claims: plain ratio <= 0.7 everywhere inside the
+documented m/g >= 2r gate; tracking ratio <= 0.8 in-gate and <= 0.7
+once m/g >= 4r (near the boundary the replicated full-width M/V passes
+— the memory cost of this flavour — dilute the tracking win; the plain
 step, which dominates wall time at k = 200, is unaffected).  When the
 process exposes >= 8 devices (XLA_FLAGS=--xla_force_host_platform_
 device_count=8) the section also times the row-shard_map'd optimizer
 step against the replicated one and runs a multi-step agreement loop
 with tracking steps firing.
+
+The ``sharded-row-rs/`` section covers the REDUCE-SCATTER row flavour
+(StepProgram regime "row-rs"): the (r+1, n) projection panel is
+reduce-scattered so each shard owns an (r, n/g) slice of M/V, the Adam
+pass runs sharded, and one all-gather restores the per-column epilogue
+panel before fused_update (2 collectives plain / 3 tracking — the
+collective terms are read off repro.core.program.regime_rounds).
+Claims: ratio <= 0.7 for BOTH step kinds everywhere inside the gate
+(row gate + n divisible — the sliced state passes beat even the
+tracking dilution), and the modeled per-device bytes sit strictly below
+the replicated-M/V flavour at every cell (the program's auto selection
+gate).  On a >= 8-device process the section runs the rs-shard_map'd
+optimizer against the replicated one: timings plus a 10-step agreement
+loop with tracking steps firing.
 
 ``--json [PATH]`` additionally writes the machine-readable
 ``BENCH_kernels.json`` (per-section modeled ratios + every timing row)
@@ -297,11 +311,6 @@ def sharded_row() -> dict:
     inside the m/g >= 2r gate, plus — when the process exposes a fake
     multi-device mesh — timings and a row-vs-replicated agreement loop
     through the real shard_map'd optimizer.  Returns the summary dict."""
-    import numpy as np
-    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-
-    from repro.core.subtrack import lowrank_optimizer
-
     summary: dict = {"shapes": {}}
     for (m, n, r) in HOTPATH_SHAPES:
         by_shape: dict = {}
@@ -355,13 +364,35 @@ def sharded_row() -> dict:
         return summary
 
     # real shard_map'd loop on the fake mesh: timings + agreement
-    m, n, r, g = 512, 1280, 64, 8
+    # (row_state pinned: this section benches the replicated-M/V
+    # flavour; sharded-row-rs/ covers the reduce-scatter one)
+    summary["agreement_rel"] = _row_mesh_loop(
+        section="sharded-row", row_state="replicated",
+        step_label="row_sharded", agreement_label="row_vs_replicated",
+        seed=3)
+    return summary
+
+
+def _row_mesh_loop(*, section: str, row_state: str, step_label: str,
+                   agreement_label: str, seed: int,
+                   shape=(512, 1280, 64, 8)) -> dict:
+    """Shared mesh harness for the row-family sections: time the
+    shard_map'd optimizer step (in the given Adam-state flavour) against
+    the replicated one and run a 10-step agreement loop with tracking
+    steps firing.  Returns the worst per-step-kind relative error."""
+    import numpy as np
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    from repro.core.subtrack import lowrank_optimizer
+
+    m, n, r, g = shape
     mesh = Mesh(np.array(jax.devices()[:g]).reshape(g), ("x",))
-    key = jax.random.PRNGKey(3)
+    key = jax.random.PRNGKey(seed)
     params = {"w": 0.1 * jax.random.normal(key, (m, n), jnp.float32)}
     specs = {"w": P("x", None)}
     shardings = {"w": NamedSharding(mesh, specs["w"])}
-    kw = dict(rank=r, update_interval=4, eta=2e-5, use_kernels=True)
+    kw = dict(rank=r, update_interval=4, eta=2e-5, use_kernels=True,
+              row_state=row_state)
     opt_rep = lowrank_optimizer(LowRankConfig(**kw))
     opt_row = lowrank_optimizer(LowRankConfig(**kw), mesh=mesh,
                                 param_specs=specs)
@@ -382,8 +413,8 @@ def sharded_row() -> dict:
                                         jnp.float32(0.03)), iters=5)
         t_row = time_fn(lambda: upd_row(g1, state, p1, jnp.float32(0.03)),
                         iters=5)
-        record(f"sharded-row/step_replicated_m{m}_n{n}_r{r}", t_rep, "")
-        record(f"sharded-row/step_row_sharded_m{m}_n{n}_r{r}_g{g}", t_row,
+        record(f"{section}/step_replicated_m{m}_n{n}_r{r}", t_rep, "")
+        record(f"{section}/step_{step_label}_m{m}_n{n}_r{r}_g{g}", t_row,
                f"vs_replicated={t_rep/max(t_row,1e-9):.2f}x "
                "(fake CPU mesh — the byte model is the HBM/wire claim)")
         for s in range(10):
@@ -399,11 +430,90 @@ def sharded_row() -> dict:
             worst["tracking" if do else "plain"] = max(
                 worst["tracking" if do else "plain"], rel)
             state = st_r
-    summary["agreement_rel"] = worst
-    record("sharded-row/row_vs_replicated_agreement", 0.0,
+    record(f"{section}/{agreement_label}_agreement", 0.0,
            f"max_rel plain={worst['plain']:.2e} (target<=1e-5) "
            f"tracking={worst['tracking']:.2e} (target<=1e-3) over 10 steps "
            f"{'PASS' if worst['plain'] <= 1e-5 and worst['tracking'] <= 1e-3 else 'FAIL'}")
+    return worst
+
+
+def sharded_row_rs() -> dict:
+    """Reduce-scatter row flavour (StepProgram "row-rs"): per-shard byte
+    model at every in-gate shard count (row gate + n divisible), a
+    rs-vs-replicated-flavour byte comparison per cell (the program's
+    auto-selection gate), plus — on a fake multi-device mesh — timings
+    and a 10-step rs-vs-replicated agreement loop through the real
+    shard_map'd optimizer.  Returns the summary dict."""
+    summary: dict = {"shapes": {}}
+    for (m, n, r) in HOTPATH_SHAPES:
+        by_shape: dict = {}
+        for shards in SHARD_COUNTS:
+            if not traffic.in_row_rs_regime(m, n, shards, r):
+                continue
+            for kind, is_tracking in (("plain", False), ("tracking", True)):
+                # <= 0.7 for BOTH step kinds everywhere in-gate: the
+                # sliced (r, n/g) state passes beat even the tracking
+                # dilution that caps the replicated flavour at 0.8
+                target = 0.7
+                by_dtype = {}
+                for tag, gb, pb in (("fp32", 4, 4), ("bf16", 2, 2)):
+                    kw = dict(grad_bytes=gb, param_bytes=pb)
+                    if is_tracking:
+                        fus = traffic.sharded_row_rs_tracking_fused_step_bytes(
+                            m, n, r, shards, **kw)
+                        unf = \
+                            traffic.sharded_row_rs_tracking_unfused_step_bytes(
+                                m, n, r, shards, **kw)
+                        rep = traffic.sharded_row_tracking_fused_step_bytes(
+                            m, n, r, shards, **kw).total
+                    else:
+                        fus = traffic.sharded_row_rs_fused_step_bytes(
+                            m, n, r, shards, **kw)
+                        unf = traffic.sharded_row_rs_unfused_step_bytes(
+                            m, n, r, shards, **kw)
+                        rep = traffic.sharded_row_fused_step_bytes(
+                            m, n, r, shards, **kw).total
+                    ratio = fus.total / unf.total
+                    # the auto-selection gate compares PLAIN-step bytes
+                    # only (program.pick_row_flavor — the k-1-of-k hot
+                    # path decides); the tracking cell's replicated-
+                    # flavour bytes are recorded as information
+                    gate = traffic.sharded_row_rs_fused_step_bytes(
+                        m, n, r, shards, **kw).total < \
+                        traffic.sharded_row_fused_step_bytes(
+                            m, n, r, shards, **kw).total
+                    by_dtype[tag] = {
+                        "ratio": ratio,
+                        "target": target,
+                        "fused_local_bytes": fus.local.total,
+                        "fused_collective_bytes": fus.collective_bytes,
+                        "unfused_total_bytes": unf.total,
+                        "replicated_flavor_bytes": rep,
+                        "below_replicated_flavor": gate,
+                    }
+                    record(
+                        f"sharded-row-rs/traffic_{kind}_{tag}_m{m}_n{n}"
+                        f"_r{r}_g{shards}", 0.0,
+                        f"local={fus.local.total} "
+                        f"collective={fus.collective_bytes} "
+                        f"unfused={unf.total} ratio={ratio:.3f} "
+                        f"target<={target} vs_replicated_flavor={rep} "
+                        f"{'PASS' if ratio <= target and gate else 'FAIL'}")
+                by_shape[f"{kind}_g{shards}"] = by_dtype
+        summary["shapes"][f"m{m}_n{n}_r{r}"] = by_shape
+
+    n_dev = jax.device_count()
+    if n_dev < 8:
+        summary["mesh"] = (f"skipped: {n_dev} device(s); rerun with "
+                           "XLA_FLAGS=--xla_force_host_platform_device_"
+                           "count=8 for timings + agreement")
+        record("sharded-row-rs/mesh_loop", 0.0, summary["mesh"])
+        return summary
+
+    # real shard_map'd loop on the fake mesh: timings + 10-step agreement
+    summary["agreement_rel"] = _row_mesh_loop(
+        section="sharded-row-rs", row_state="reduce-scatter",
+        step_label="row_rs", agreement_label="rs_vs_replicated", seed=5)
     return summary
 
 
@@ -439,7 +549,8 @@ def run(json_path: str | None = None) -> dict:
                f"flops~{6*r*n:.2e} speedup={t_dense/max(t_r1,1e-9):.2f}x")
 
     sections = {"hotpath": hotpath(), "tracking": tracking(),
-                "sharded": sharded(), "sharded-row": sharded_row()}
+                "sharded": sharded(), "sharded-row": sharded_row(),
+                "sharded-row-rs": sharded_row_rs()}
     if json_path:
         payload = {
             "sections": sections,

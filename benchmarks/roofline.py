@@ -268,6 +268,45 @@ def hotpath_table(shapes=((1024, 2736, 256), (2048, 5461, 512),
                 f"{fus.total/1e6:.2f} | {fus.total/unf.total:.3f} | "
                 f"{fus.collective_bytes/1e3:.1f} | "
                 f"{fus.total/HBM_BW*1e6:.1f} |")
+
+    # row-rs: the reduce-scattered Adam-state flavour (StepProgram
+    # "row-rs") on the same wo/w_down-style shapes — per-device M/V and
+    # the (r, n) state passes shrink by g, bought with the epilogue
+    # gather (program rounds: RS + AG plain; AR + AR + AG tracking)
+    from repro.kernels.traffic import (
+        in_row_rs_regime, sharded_row_rs_fused_step_bytes,
+        sharded_row_rs_tracking_fused_step_bytes,
+        sharded_row_rs_tracking_unfused_step_bytes,
+        sharded_row_rs_unfused_step_bytes)
+    lines += [
+        "\n### Row-rs hot path (m sharded, M/V reduce-scattered into "
+        "(r, n/g) slices; collectives read off the StepProgram rounds)\n",
+        "| step | m | n | r | g | unfused MB/dev | fused MB/dev | ratio | "
+        "collective KB | fused us @HBM |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for kind, unf_fn, fus_fn in (
+            ("plain@sharded-row-rs", sharded_row_rs_unfused_step_bytes,
+             sharded_row_rs_fused_step_bytes),
+            ("tracking@sharded-row-rs",
+             sharded_row_rs_tracking_unfused_step_bytes,
+             sharded_row_rs_tracking_fused_step_bytes)):
+        for (m, n, r) in row_shapes:
+            g = next((c for c in (16, 8, 4)
+                      if in_row_rs_regime(m, n, c, r)), None)
+            if g is None:
+                lines.append(
+                    f"| {kind} | {m} | {n} | {r} | – | no shard count in "
+                    "(16, 8, 4) inside the row gate with n divisible | "
+                    "| | |")
+                continue
+            unf = unf_fn(m, n, r, g, grad_bytes=2, param_bytes=2)
+            fus = fus_fn(m, n, r, g, grad_bytes=2, param_bytes=2)
+            lines.append(
+                f"| {kind} | {m} | {n} | {r} | {g} | {unf.total/1e6:.2f} | "
+                f"{fus.total/1e6:.2f} | {fus.total/unf.total:.3f} | "
+                f"{fus.collective_bytes/1e3:.1f} | "
+                f"{fus.total/HBM_BW*1e6:.1f} |")
     return "\n".join(lines)
 
 

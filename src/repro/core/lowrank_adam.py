@@ -27,6 +27,8 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import program as program_lib
+
 Array = jax.Array
 
 _TINY = 1e-30
@@ -157,13 +159,16 @@ def _limiter(lam_norm: Array, lam_prev: Array, zeta: float
 
 
 def _fused_step(G, st, step, hp, rotated, S, recovery, backend, lr,
-                weight_decay, param, out_dtype, gsq=None, proj=None,
-                axis_name=None, row_axis_name=None) -> MatrixStepOut:
+                weight_decay, param, out_dtype, exec, gsq=None,
+                proj=None) -> MatrixStepOut:
     """Single-pass hot-path schedule (one read of G per pass, final-dtype
     write):
 
         project_colnorms     Gt = S^T G  (+ ||G_:,j||^2 byproduct)
+        [round "proj"]       make the stacked [Gt; gsq] panel global —
+                             or this shard's state slice of it
         adam_lowrank_norms   M', V', Gto (+ ||Gt_:,j||^2, ||Gto_:,j||^2)
+        [round "clip" / "epilogue_gather"]
         fused_update         upd = -lr*scale*(S Gto + (G - S Gt) phi clip)
 
     The Eq. 12 clip scalar is known *before* the epilogue runs via the
@@ -174,40 +179,60 @@ def _fused_step(G, st, step, hp, rotated, S, recovery, backend, lr,
     so the (m, n) residual is never materialized and the epilogue's output
     is the final parameter-dtype update.
 
-    The tracking step passes ``gsq`` (||G_:,j||^2 already harvested by its
-    ``project_tangent_colnorms`` launch — the norms are basis-independent),
-    in which case the projection onto the *new* basis runs through the
-    plain ``project`` kernel instead of recomputing them.
+    Every cross-device interaction is a named round of the step's
+    :class:`repro.core.program.StepProgram`, executed (or skipped) by
+    ``exec``:
 
-    With ``axis_name`` set (running inside ``shard_map`` with G, Gt, M, V
-    column-sharded and S replicated) every pass above is shard-local —
-    the projection, the moments, phi and the update are all per-column —
-    except the Eq. 12 clip scalar, whose closed form sums over columns:
-    ``||Lam||^2 = sum_shards sum_j phi_j^2 (||G_:,j||^2 - ||Gt_:,j||^2)``.
-    That one scalar psum is the plain fused step's only collective.
+    * replicated programs declare nothing — all rounds are identities;
+    * column programs declare ``clip`` (the scalar psum — every other
+      pass is per-column and shard-local);
+    * row programs declare ``proj`` as an all-reduce: the stacked
+      (r+1, n) [Gt; gsq] psum makes the projection global, after which
+      the Adam pass, phi and the clip closed form run redundantly per
+      shard from replicated inputs (no clip round) and ``fused_update``
+      writes the local rows;
+    * row-rs programs declare ``proj`` as a REDUCE-SCATTER — each shard
+      receives only its (r, n/g) column slice, the Adam pass runs on the
+      sliced (memory-sharded) M/V — plus ``epilogue_gather``: one
+      all-gather of the stacked [Gt; Gto; phi; clip-partials] panel
+      restores full width (and the clip sum) right before the epilogue.
 
-    With ``row_axis_name`` set instead (G, S, param and the update
-    ROW-sharded; M, V and every per-column vector replicated) the
-    projection itself is the collective: ``project_colnorms_rowsharded``
-    psums the stacked (r+1, n) [A; colnorms] panel once, after which A
-    and gsq are global, the Adam pass and phi run redundantly per shard,
-    the clip closed form sums REPLICATED per-column quantities (no
-    psum), and ``fused_update`` writes the local (m/g, n) rows.  One
-    all-reduce per plain step, total.  The row-regime tracking epilogue
-    passes ``proj`` (the global new-basis projection its geodesic round
-    already assembled via the rank-1 identity) together with ``gsq``, so
-    no pass here communicates at all.
+    The tracking step passes ``gsq`` (||G_:,j||^2 already harvested by
+    its subspace-update front end — the norms are basis-independent), in
+    which case the projection onto the *new* basis runs through the
+    plain ``project`` kernel; gram-schedule programs instead pass
+    ``proj`` (the global new-basis projection their geodesic round
+    already assembled via the rank-1 identity), which the state layout
+    merely slices — no projection pass communicates at all.
     """
+    n = G.shape[-1]
     if proj is not None:
-        Gt = proj                     # global (r, n), with gsq also given
+        # already-global new-basis projection (gram-schedule tracking)
+        Gt_full = proj
+        Gt = exec.state_slice(proj)
+        gsq_st = exec.state_slice(gsq)
     elif gsq is None:
-        if row_axis_name is not None:
-            Gt, gsq = backend.project_colnorms_rowsharded(
-                S, G, axis_name=row_axis_name)
-        else:
-            Gt, gsq = backend.project_colnorms(S, G)
+        Gt, gsq_st = backend.project_colnorms(S, G)
+        if exec.has("proj"):
+            stacked = exec.collective(
+                "proj", jnp.concatenate([Gt, gsq_st[None, :]], axis=0))
+            Gt, gsq_st = stacked[:-1], stacked[-1]
+        # the reduce-scatter flavour never materializes the global panel
+        Gt_full = Gt if Gt.shape[-1] == n else None
+        if Gt.shape[-1] != exec.state_width(n):
+            # Pure invariant guard — no current program reaches this:
+            # every slice-layout program either reduce-scatters here
+            # (already state width) or precomputes the projection (gram
+            # tracking, first branch).  A future program pairing a
+            # full-width psum round with sliced state still degrades
+            # correctly: take this shard's block locally.
+            Gt = exec.state_slice(Gt)
+            gsq_st = exec.state_slice(gsq_st)
     else:
+        # tangent-schedule tracking epilogue: norms reused, re-project
         Gt = backend.project(S, G)
+        gsq_st = gsq
+        Gt_full = Gt
     M_prev, V_prev = (st.M, st.V) if rotated is None else rotated
     M, V, Gto, gtsq, gtosq = backend.adam_lowrank_norms(
         Gt, M_prev, V_prev, step, beta1=hp.beta1, beta2=hp.beta2,
@@ -221,19 +246,33 @@ def _fused_step(G, st, step, hp, rotated, S, recovery, backend, lr,
         # phi_i = ||G~^O_{:,i}|| / ||G~_{:,i}||  (Eq. 11; columns over r),
         # zeroed where the column's residual energy sits below the fp32
         # cancellation floor (see _RESID_REL_FLOOR).
-        resid_sq = jnp.maximum(gsq - gtsq, 0.0)
-        keep = (resid_sq > _RESID_REL_FLOOR * gsq).astype(jnp.float32)
+        resid_sq = jnp.maximum(gsq_st - gtsq, 0.0)
+        keep = (resid_sq > _RESID_REL_FLOOR * gsq_st).astype(jnp.float32)
         phi = keep * jnp.sqrt(gtosq) / jnp.maximum(jnp.sqrt(gtsq), _TINY)
-        lam_sq = jnp.sum(phi * phi * resid_sq)
-        if axis_name is not None:
-            lam_sq = jax.lax.psum(lam_sq, axis_name)
+        lam_part = phi * phi * resid_sq               # (n_state,)
+        if exec.has("epilogue_gather"):
+            # restore full width for the writeback pass: gather the
+            # stacked per-column panel ([Gt only when the scatter left it
+            # sliced]; Gto; phi; clip partials) in ONE round
+            pieces = ([] if Gt_full is not None else [Gt]) + \
+                [Gto, phi[None, :], lam_part[None, :]]
+            full = exec.collective("epilogue_gather",
+                                   jnp.concatenate(pieces, axis=0))
+            r = Gto.shape[-2]
+            if Gt_full is None:
+                Gt_full, full = full[:r], full[r:]
+            Gto, phi = full[:r], full[r]
+            lam_sq = jnp.sum(full[r + 1])
+        else:
+            lam_sq = exec.collective("clip", jnp.sum(lam_part))
         lam_norm = jnp.sqrt(lam_sq)
         clip, lam_new = _limiter(lam_norm, st.lam_prev, hp.zeta)
-        upd = backend.fused_update(G, S, Gt, Gto, phi, coef, clip,
+        upd = backend.fused_update(G, S, Gt_full, Gto, phi, coef, clip,
                                    out_dtype=out_dtype, param=wd_param,
                                    wd_coef=wd_coef)
     else:
         lam_new = st.lam_prev
+        Gto = exec.collective("epilogue_gather", Gto)
         upd = backend.fused_update(None, S, None, Gto, None, coef,
                                    jnp.float32(1.0), out_dtype=out_dtype,
                                    param=wd_param, wd_coef=wd_coef)
@@ -258,8 +297,7 @@ def lowrank_adam_step(
     param: Optional[Array] = None,
     out_dtype=None,
     precomputed_gsq: Optional[Array] = None,
-    axis_name=None,
-    row_axis_name=None,
+    exec=None,
 ) -> MatrixStepOut:
     """One Alg. 1 iteration for a single matrix.
 
@@ -268,8 +306,9 @@ def lowrank_adam_step(
     (Eq. 6-7) apply on the stored moments.  ``precomputed_proj`` lets the
     tracking path reuse ``A = S_old^T G`` when S did not change (GaLore-style
     refresh reuses nothing; SubTrack++ plain steps reuse nothing either —
-    the projection must use the *current* basis; the fused backend path
-    ignores it because the projection pass also harvests column norms).
+    the projection must use the *current* basis) and lets the gram-schedule
+    tracking epilogue hand down the already-global NEW-basis projection
+    its geodesic rounds assembled.
 
     With ``lr=None`` (legacy contract) returns the fp32 descent direction
     ``delta`` such that the weight update is ``W <- W - lr * delta``.
@@ -281,32 +320,28 @@ def lowrank_adam_step(
     ``precomputed_gsq`` lets the fused tracking step hand down the
     per-column ||G_:,j||^2 its subspace-update pass already produced.
 
-    ``axis_name`` marks the step as running inside ``shard_map`` with G
-    column-sharded over that mesh axis (S replicated, M/V sharded with
-    G's columns): all passes are shard-local except the recovery-norm
-    reduction, which psums once over the axis.  ``row_axis_name`` marks
-    the ROW-sharded regime instead (G/S/param row-sharded, M/V
-    replicated): the projection psums the stacked (r+1, n) [A; colnorms]
-    panel — the step's only collective — and the recovery norm needs
-    none (its inputs are replicated after that psum).  On the fused
-    row-regime tracking epilogue, ``precomputed_proj`` +
-    ``precomputed_gsq`` carry the already-global new-basis projection
-    and norms, so no pass here communicates at all.
+    ``exec`` is a :class:`repro.core.program.Exec` bound to the leaf's
+    StepProgram when the step runs inside ``shard_map``: the program's
+    declared rounds are the ONLY collectives executed — see
+    :func:`_fused_step` for the per-regime round contract.  Without an
+    exec the replicated null program applies (identity rounds).
     """
     S = st.S if S_new is None else S_new
     out_dtype = out_dtype or jnp.float32
+    exec = exec if exec is not None else program_lib.NULL_EXEC
 
     if backend is not None and lr is not None:
         # no fp32 upcast here: the kernels (and their ref fallbacks) cast
         # per tile, so a bf16 gradient streams at 2 bytes/elem instead of
         # materializing an (m, n) fp32 copy first (the traffic model in
         # repro.kernels.traffic charges G reads at the gradient dtype).
-        proj = precomputed_proj if row_axis_name is not None else None
+        # Only the gram-schedule tracking epilogue threads a precomputed
+        # projection in (the tangent schedule's fused front end harvests
+        # norms instead — its epilogue re-projects).
+        proj = precomputed_proj if exec.schedule == "gram" else None
         return _fused_step(G, st, step, hp, rotated, S, recovery, backend,
-                           lr, weight_decay, param, out_dtype,
-                           gsq=precomputed_gsq, proj=proj,
-                           axis_name=axis_name,
-                           row_axis_name=row_axis_name)
+                           lr, weight_decay, param, out_dtype, exec,
+                           gsq=precomputed_gsq, proj=proj)
 
     G = G.astype(jnp.float32)
 
@@ -317,8 +352,8 @@ def lowrank_adam_step(
             Gt = backend.project(S, G)                # (r, n) kernel path
         else:
             Gt = S.T @ G                              # (r, n)
-        if row_axis_name is not None:                 # row-sharded shard_map:
-            Gt = jax.lax.psum(Gt, row_axis_name)      # A contracts over rows
+        if exec.rows_sharded:                         # row-sharded shard_map:
+            Gt = exec.psum(Gt)                        # A contracts over rows
 
     M_prev, V_prev = (st.M, st.V) if rotated is None else rotated
     M = hp.beta1 * M_prev + (1.0 - hp.beta1) * Gt
@@ -348,11 +383,9 @@ def lowrank_adam_step(
         else:
             resid = G - S @ Gt                        # (m, n) orthogonal component
             Lam = resid * phi[None, :]
-        lam_sq = jnp.sum(Lam * Lam)
-        if axis_name is not None:                     # column-sharded shard_map
-            lam_sq = jax.lax.psum(lam_sq, axis_name)
-        elif row_axis_name is not None:               # row-sharded: Lam rows
-            lam_sq = jax.lax.psum(lam_sq, row_axis_name)   # are shard-local
+        # the unfused ||Lam||^2 partial is shard-local under either
+        # sharded layout (columns or rows of Lam) — one raw psum either way
+        lam_sq = exec.psum(jnp.sum(Lam * Lam))
         lam_norm = jnp.sqrt(lam_sq)
         scale, lam_new = _limiter(lam_norm, st.lam_prev, hp.zeta)
         Lam = Lam * scale

@@ -1,0 +1,471 @@
+"""StepProgram IR: declarative per-bucket execution plans for the optimizer
+hot path, and the single lowering path that runs them.
+
+Motivation (PR 5): PRs 1-4 grew three hand-built execution regimes —
+replicated, column-sharded and row-sharded — whose dispatch logic was
+smeared across ``subtrack.update`` (shard_info_for / axis-name plumbing),
+``subspace`` (track_subspace vs track_subspace_rowsharded),
+``lowrank_adam`` (per-regime psum placement) and ``distributed/sharding``.
+This module makes the per-leaf execution scheme a first-class object:
+
+* :func:`build_program` classifies a :class:`~repro.core.plan.ParamPlan`
+  (+ config + mesh) into a :class:`StepProgram` — the regime, the
+  shard_map axes, the Adam-state layout, the tracking schedule, and the
+  full list of :class:`CollectiveRound`\\ s (name, kind, payload shape)
+  the step is allowed to execute;
+* :func:`regime_rounds` is the **single source of truth** for the
+  collective structure: the byte model in :mod:`repro.kernels.traffic`
+  charges wire bytes off these rounds, the HLO pins in
+  ``tests/test_mesh_fused.py`` assert compiled collective counts against
+  :meth:`StepProgram.collective_counts`, and the runtime
+  :class:`Exec`\\ utor will only fire collectives the program declares —
+  three consumers, one definition, no drift possible;
+* :func:`lower` turns a per-matrix step function into the shard_map'd
+  (or plain) runner, deriving every in/out PartitionSpec from the
+  program's declared layouts;
+* :class:`Exec` is the runtime face of a program inside the lowered
+  step: the math code in ``subspace`` / ``lowrank_adam`` expresses its
+  schedule once, invoking collectives **by round name**
+  (``exec.collective("proj", x)``); rounds the program does not declare
+  are identities, so one code path serves all four regimes.
+
+The four regimes
+----------------
+========== ============ =============== ======================================
+regime     G/S layout   M/V layout      collectives (plain / tracking)
+========== ============ =============== ======================================
+replicated whole leaf   whole leaf      none (single device / GSPMD)
+column     n sharded    n sharded       clip scalar AR / + (m, r) tangent AR
+row        m sharded    replicated      (r+1, n) proj AR / + (r, n+3r) Gram AR
+row-rs     m sharded    n/g slice       (r+1, n) proj RS + epilogue AG /
+                                        proj AR + Gram AR + epilogue AG
+========== ============ =============== ======================================
+
+``row-rs`` is the reduce-scatter flavour of the row regime (the ROADMAP
+item this PR lands): instead of psumming the stacked (r+1, n)
+[A; colnorms] panel to every row shard and recomputing the full-width
+Adam pass redundantly (replicated M/V — the row regime's memory cost),
+the panel is reduce-SCATTERED so each shard owns an n/g column slice of
+M/V, the Adam pass runs sharded, and one all-gather of the
+[G~; G~^O; phi; clip-partials] panel restores full width right before
+``fused_update`` writes the local rows.  Per-device M/V memory drops by
+the group factor and the sliced state passes outweigh the extra gather
+wire everywhere inside the row gate (see the byte comparison in
+``_row_flavor`` and ``traffic.sharded_row_rs_*``).  Tracking steps keep
+the row regime's all-reduce front end (the tangent needs global A) and
+shard only the rotation + Adam passes, gathering [G~^O; phi; partials]
+at the end — exactly 2 collectives plain / 3 tracking.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core import plan as plan_lib
+
+F32 = 4
+
+REGIMES = ("replicated", "column", "row", "row-rs")
+
+# collective kinds (HLO opcode names — hlo_analysis counts these)
+ALL_REDUCE = "all-reduce"
+REDUCE_SCATTER = "reduce-scatter"
+ALL_GATHER = "all-gather"
+
+
+@dataclass(frozen=True)
+class CollectiveRound:
+    """One declared collective of a step program.
+
+    ``rows, cols`` are the logical 2-D payload shape: the pre-collective
+    per-device operand for all-reduce / reduce-scatter, the *gathered*
+    (output) panel for all-gather — in both conventions this is the HLO
+    result-bytes quantity the ring wire model multiplies.
+    """
+
+    name: str          # semantic label the runtime invokes it by
+    kind: str          # ALL_REDUCE | REDUCE_SCATTER | ALL_GATHER
+    rows: int
+    cols: int
+    dtype_bytes: int = F32
+
+    @property
+    def payload_bytes(self) -> int:
+        return self.rows * self.cols * self.dtype_bytes
+
+    def wire_bytes(self, group: int) -> int:
+        """Per-device ring-model wire bytes (matching
+        repro.distributed.hlo_analysis: AR = 2(g-1)/g * result, RS =
+        (g-1)/g * result * g with result = payload/g, AG = (g-1)/g *
+        gathered result)."""
+        if group <= 1:
+            return 0
+        ring = (group - 1) / group
+        if self.kind == ALL_REDUCE:
+            return int(2.0 * ring * self.payload_bytes)
+        if self.kind in (REDUCE_SCATTER, ALL_GATHER):
+            return int(ring * self.payload_bytes)
+        raise ValueError(f"unknown collective kind {self.kind!r}")
+
+
+def regime_rounds(regime: str, m: int, n: int, r: int, group: int, *,
+                  tracking: bool, recovery: bool = True
+                  ) -> tuple[CollectiveRound, ...]:
+    """The collective rounds of one optimizer step — the single source of
+    truth consumed by the runtime executor, the traffic byte model and
+    the HLO count pins.
+
+    Round names are the contract with the lowered code paths:
+
+    * ``proj``            — makes the stacked (r+1, n) [A; colnorms]
+                            projection panel global (row regimes; the
+                            projection contracts over sharded rows);
+    * ``tangent_psum``    — (m, r) tangent accumulator psum (column
+                            tracking; T is linear in W = G A^T);
+    * ``gram_psum``       — fused (r, n + 3r) [T^T G | S^T T | T^T T |
+                            S^T S] psum (row-family tracking; the Gram
+                            is quadratic in ``proj``'s result, so this
+                            second round is provably irreducible);
+    * ``clip``            — the Eq. 12 scalar psum (column; the row
+                            family gets the clip free off replicated or
+                            gathered per-column quantities);
+    * ``epilogue_gather`` — row-rs only: all-gather of the stacked
+                            per-column epilogue panel ([G~; ] G~^O; phi;
+                            clip partials) back to full width before
+                            ``fused_update``.
+    """
+    if group <= 1 or regime == "replicated":
+        return ()
+    if regime == "column":
+        rounds = []
+        if tracking:
+            rounds.append(CollectiveRound("tangent_psum", ALL_REDUCE, m, r))
+        if recovery:
+            rounds.append(CollectiveRound("clip", ALL_REDUCE, 1, 1))
+        return tuple(rounds)
+    if regime == "row":
+        rounds = [CollectiveRound("proj", ALL_REDUCE, r + 1, n)]
+        if tracking:
+            rounds.append(CollectiveRound("gram_psum", ALL_REDUCE,
+                                          r, n + 3 * r))
+        return tuple(rounds)
+    if regime == "row-rs":
+        if tracking:
+            # AR front end (the tangent needs global A), sharded
+            # rotation+Adam, then gather [G~^O; phi; partials] — G~ (the
+            # new-basis projection) is already global via the rank-1
+            # identity, so it is NOT re-gathered
+            gathered = (r + 2) if recovery else r
+            return (CollectiveRound("proj", ALL_REDUCE, r + 1, n),
+                    CollectiveRound("gram_psum", ALL_REDUCE, r, n + 3 * r),
+                    CollectiveRound("epilogue_gather", ALL_GATHER,
+                                    gathered, n))
+        # plain: scatter the projection so the Adam pass runs on the
+        # (r, n/g) slice; the gather restores [G~; G~^O; phi; partials]
+        gathered = (2 * r + 2) if recovery else r
+        return (CollectiveRound("proj", REDUCE_SCATTER, r + 1, n),
+                CollectiveRound("epilogue_gather", ALL_GATHER, gathered, n))
+    raise ValueError(f"unknown regime {regime!r}")
+
+
+@dataclass(frozen=True)
+class StepProgram:
+    """Declarative description of one bucket's optimizer step.
+
+    Static and hashable (like ParamPlan); built at trace time, never
+    enters the jitted graph.  ``axes`` empty means the plain (GSPMD /
+    single-device) path: no shard_map, every round an identity.
+    """
+
+    regime: str                 # one of REGIMES
+    axes: tuple                 # shard_map mesh axes; () = plain path
+    shards: int                 # total group size over `axes`
+    m: int
+    n: int
+    rank: int
+    tracking: bool              # which step kind this program describes
+    tracks: bool                # effective geometry: does the refresh
+    #                             actually move the basis?  False for
+    #                             plain steps AND for tracking steps of
+    #                             frozen-subspace methods — such steps
+    #                             declare (and the byte model charges)
+    #                             the plain rounds
+    recovery: bool
+    rounds: tuple               # tuple[CollectiveRound, ...]
+    grad_layout: str            # "replicated" | "column" | "row"
+    state_layout: str           # M/V: "inherit" | "column" | "replicated"
+    #                             | "slice" (n/g column slice per row shard)
+    schedule: str               # tracking geometry: "tangent" | "gram"
+
+    def round(self, name: str) -> Optional[CollectiveRound]:
+        for rnd in self.rounds:
+            if rnd.name == name:
+                return rnd
+        return None
+
+    def collective_counts(self) -> dict[str, int]:
+        """{HLO opcode: count} — what tests pin compiled programs
+        against (see tests/test_mesh_fused.py / tests/test_program.py)."""
+        counts: dict[str, int] = {}
+        for rnd in self.rounds:
+            counts[rnd.kind] = counts.get(rnd.kind, 0) + 1
+        return counts
+
+    def collective_wire_bytes(self) -> int:
+        """Per-device ring-model wire bytes of all rounds — the term the
+        traffic byte model charges on top of local HBM bytes."""
+        return sum(rnd.wire_bytes(self.shards) for rnd in self.rounds)
+
+    def describe(self) -> str:
+        """Human-readable program listing (tools/dump_program.py)."""
+        lines = [f"StepProgram[{self.regime}] "
+                 f"({'tracking' if self.tracking else 'plain'} step, "
+                 f"m={self.m} n={self.n} r={self.rank} "
+                 f"shards={self.shards} axes={self.axes or '-'})",
+                 f"  grad layout : {self.grad_layout}",
+                 f"  M/V layout  : {self.state_layout}",
+                 f"  schedule    : {self.schedule}"]
+        if not self.rounds:
+            lines.append("  collectives : none")
+        for rnd in self.rounds:
+            lines.append(
+                f"  collective  : {rnd.name:16s} {rnd.kind:15s} "
+                f"payload ({rnd.rows}, {rnd.cols}) "
+                f"= {rnd.payload_bytes} B, "
+                f"wire {rnd.wire_bytes(self.shards)} B/device")
+        return "\n".join(lines)
+
+
+_GRAD_LAYOUT = {"replicated": "replicated", "column": "column",
+                "row": "row", "row-rs": "row"}
+_STATE_LAYOUT = {"replicated": "inherit", "column": "column",
+                 "row": "replicated", "row-rs": "slice"}
+_SCHEDULE = {"replicated": "tangent", "column": "tangent",
+             "row": "gram", "row-rs": "gram"}
+
+
+def pick_row_flavor(m: int, n: int, r: int, group: int,
+                    row_state: str = "auto") -> str:
+    """THE row-family state-flavour policy: replicated M/V ("row") or
+    the reduce-scatter slice layout ("row-rs").
+
+    ``row_state`` forces a flavour ("replicated" / "reduce-scatter");
+    "auto" compares the modeled per-device plain-step bytes (the
+    k-1-of-k hot path) and takes the cheaper one.  row-rs additionally
+    needs n divisible by the group (the scatter slices columns evenly) —
+    a forced "reduce-scatter" degrades to "row" when it isn't.  Single
+    implementation shared by :func:`build_program` and the layout
+    builder (``distributed/sharding._row_bytes``), so the ranking and
+    the executed flavour cannot drift.
+    """
+    if row_state == "replicated" or n % group != 0:
+        return "row"
+    if row_state == "reduce-scatter":
+        return "row-rs"
+    from repro.kernels import traffic  # lazy: traffic reads our rounds
+
+    rs = traffic.sharded_row_rs_fused_step_bytes(m, n, r, group).total
+    rep = traffic.sharded_row_fused_step_bytes(m, n, r, group).total
+    return "row-rs" if rs < rep else "row"
+
+
+def _row_flavor(cfg, m: int, n: int, r: int, group: int) -> str:
+    return pick_row_flavor(m, n, r, group,
+                           getattr(cfg, "row_state", "auto"))
+
+
+def build_program(plan: plan_lib.ParamPlan, cfg, mesh, *,
+                  tracking: bool) -> StepProgram:
+    """Classify one leaf (or bucket representative) into its StepProgram.
+
+    This is the regime dispatch that used to live in
+    ``subtrack.update.shard_info_for`` + ``plan.spec_regime``: a leaf
+    enters a shard_map'd regime only when the optimizer was built with a
+    mesh + specs, runs the fused kernels, and — on tracking steps — uses
+    a shardable refresh method ("grassmann" / "none"; the SVD/random/Oja
+    refreshes contract over all columns).  Row-family regimes route
+    reorth-scrubbing tracking steps away (a QR of the row-sharded basis
+    is not shard-local).  Everything else lowers to the replicated
+    program: no shard_map, plain GSPMD propagation, zero declared
+    rounds.
+    """
+    m, n, r = plan.m, plan.n, plan.rank
+    regime, axes = "replicated", ()
+    if (mesh is not None and getattr(cfg, "use_kernels", False)
+            and plan.mode == "lowrank"
+            and not (tracking and cfg.method not in ("grassmann", "none"))):
+        col = plan_lib.spec_column_axes(plan)
+        row = plan_lib.spec_row_axes(plan)
+        if col is not None:
+            regime, axes = "column", col
+        elif row is not None and not (tracking and cfg.method == "grassmann"
+                                      and cfg.reorth_interval):
+            regime, axes = "row", row
+    shards = (int(np.prod([mesh.shape[a] for a in axes])) if axes else 1)
+    if regime == "row":
+        regime = _row_flavor(cfg, m, n, r, shards)
+    recovery = bool(getattr(cfg, "recovery", True))
+    # Rounds reflect the EFFECTIVE geometry: a tracking step whose
+    # refresh method moves no basis (method="none" — the frozen-subspace
+    # ablation) fires no geodesic collectives, so it declares (and the
+    # byte model charges, and the HLO pins expect) the plain rounds.
+    tracks = tracking and getattr(cfg, "method", "grassmann") == "grassmann"
+    return StepProgram(
+        regime=regime, axes=tuple(axes), shards=shards, m=m, n=n, rank=r,
+        tracking=tracking, tracks=tracks, recovery=recovery,
+        rounds=regime_rounds(regime, m, n, r, shards, tracking=tracks,
+                             recovery=recovery),
+        grad_layout=_GRAD_LAYOUT[regime],
+        state_layout=_STATE_LAYOUT[regime],
+        schedule=_SCHEDULE[regime])
+
+
+# ---------------------------------------------------------------------------
+# Runtime execution: named-round collectives inside the lowered step
+# ---------------------------------------------------------------------------
+
+
+class Exec:
+    """Runtime face of a StepProgram inside the lowered per-matrix step.
+
+    The math in ``subspace`` / ``lowrank_adam`` is written once against
+    this interface: collectives are invoked by round name and are
+    identities unless the program declares them, layout questions
+    (``state_slice``, ``state_width``) answer from the program's
+    declared layouts.  One instance is built per bucket per step kind
+    (:func:`executor`); the replicated singleton :data:`NULL_EXEC` serves
+    every exec-less caller (tests, benchmarks, the legacy jnp path).
+    """
+
+    def __init__(self, program: StepProgram):
+        self.program = program
+        axes = program.axes
+        self.axis = None if not axes else (axes if len(axes) > 1
+                                           else axes[0])
+
+    # --- program data reads -------------------------------------------
+    @property
+    def schedule(self) -> str:
+        return self.program.schedule
+
+    @property
+    def rows_sharded(self) -> bool:
+        return self.program.grad_layout == "row"
+
+    def has(self, name: str) -> bool:
+        return self.program.round(name) is not None
+
+    def state_width(self, n: int) -> int:
+        """Columns of the Adam-state block this shard owns."""
+        if self.program.state_layout == "slice":
+            return n // self.program.shards
+        return n
+
+    # --- communication primitives -------------------------------------
+    def _axis_index(self):
+        import jax
+
+        axes = self.program.axes
+        idx = jax.lax.axis_index(axes[0])
+        for a in axes[1:]:
+            idx = idx * jax.lax.psum(1, a) + jax.lax.axis_index(a)
+        return idx
+
+    def collective(self, name: str, x):
+        """Execute round ``name`` on ``x`` — identity when the program
+        does not declare it (or the program is unsharded)."""
+        rnd = self.program.round(name)
+        if rnd is None or self.axis is None:
+            return x
+        import jax
+
+        if rnd.kind == ALL_REDUCE:
+            return jax.lax.psum(x, self.axis)
+        if rnd.kind == REDUCE_SCATTER:
+            return jax.lax.psum_scatter(x, self.axis,
+                                        scatter_dimension=x.ndim - 1,
+                                        tiled=True)
+        if rnd.kind == ALL_GATHER:
+            return jax.lax.all_gather(x, self.axis, axis=x.ndim - 1,
+                                      tiled=True)
+        raise ValueError(f"unknown collective kind {rnd.kind!r}")
+
+    def psum(self, x):
+        """Raw psum over the program axes (legacy unfused-path reductions
+        that predate the fused rounds); identity when unsharded."""
+        if self.axis is None:
+            return x
+        import jax
+
+        return jax.lax.psum(x, self.axis)
+
+    def state_slice(self, x):
+        """This shard's Adam-state column block of a replicated-width
+        array (identity unless the program's state layout is "slice")."""
+        if self.program.state_layout != "slice" or self.axis is None:
+            return x
+        import jax
+
+        n_loc = x.shape[-1] // self.program.shards
+        return jax.lax.dynamic_slice_in_dim(
+            x, self._axis_index() * n_loc, n_loc, axis=x.ndim - 1)
+
+
+NULL_PROGRAM = StepProgram(
+    regime="replicated", axes=(), shards=1, m=0, n=0, rank=0,
+    tracking=False, tracks=False, recovery=True, rounds=(),
+    grad_layout="replicated", state_layout="inherit", schedule="tangent")
+
+NULL_EXEC = Exec(NULL_PROGRAM)
+
+
+def executor(program: StepProgram) -> Exec:
+    return NULL_EXEC if not program.axes else Exec(program)
+
+
+# ---------------------------------------------------------------------------
+# Lowering: program -> (shard_map'd or plain) stacked runner
+# ---------------------------------------------------------------------------
+
+
+def lower(program: StepProgram, fn: Callable, *, mesh, batch_dims: int,
+          with_param: bool) -> Callable:
+    """Turn the per-bucket stacked step ``fn(g, st[, p]) -> (delta, st')``
+    into the program's runner.
+
+    Replicated programs return ``fn`` unchanged (plain jit path, GSPMD
+    propagation).  Sharded programs wrap ``fn`` in ``shard_map`` with
+    every in/out PartitionSpec derived from the program's declared
+    layouts: the gradient/param/update panels follow ``grad_layout``, S
+    shards with the gradient rows, M/V follow ``state_layout`` ("column"
+    and "slice" both shard the global (r, n) state arrays along n —
+    the slice layout simply pairs that with a row-sharded gradient),
+    and ``lam_prev`` replicates.
+    """
+    if not program.axes:
+        return fn
+    import jax
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.lowrank_adam import MatrixOptState
+
+    ax = program.axes if len(program.axes) > 1 else program.axes[0]
+    lead = (None,) * batch_dims
+    if program.grad_layout == "column":
+        gspec = P(*lead, None, ax)
+        s_spec = P(*lead, None, None)
+    else:                                        # row family
+        gspec = P(*lead, ax, None)
+        s_spec = P(*lead, ax, None)
+    mv = {"column": P(*lead, None, ax),
+          "replicated": P(*lead, None, None),
+          "slice": P(*lead, None, ax)}[program.state_layout]
+    stspec = MatrixOptState(S=s_spec, M=mv, V=mv, lam_prev=P(*lead))
+    in_specs = (gspec, stspec) + ((gspec,) if with_param else ())
+    sharded = shard_map(fn, mesh=mesh, in_specs=in_specs,
+                        out_specs=(gspec, stspec), check_rep=False)
+    return sharded

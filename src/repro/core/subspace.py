@@ -30,6 +30,8 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import program as program_lib
+
 Array = jax.Array
 
 # Numerical floor used to guard divisions; fp32 throughout the optimizer.
@@ -250,66 +252,45 @@ def reorthonormalize(S: Array) -> Array:
 
 
 class TrackResult(NamedTuple):
-    S_new: Array          # (m, r) updated orthonormal basis
-    A: Array              # (r, n) least-squares coefficients (= old-basis projection)
-    cos_theta: Array      # () cos(sigma*eta) — used for the O(rn) rotation shortcut
+    """One subspace-tracking update's outputs (both schedules).
+
+    Under a sharded gram-schedule program ``S_new`` holds this shard's
+    rows of the updated basis and ``A_new`` the globally-assembled
+    NEW-basis projection; everything else is replicated (deterministic
+    functions of psum'd quantities).  The tangent schedule leaves
+    ``A_new`` None — its epilogue re-projects G directly (same traffic,
+    see the module notes on the rank-1 identity)."""
+
+    S_new: Array          # (m[, /g], r) updated orthonormal basis (rows)
+    A: Array              # (r, n) least-squares coefficients (old basis)
+    cos_theta: Array      # () cos(sigma*eta) — the O(rn) rotation shortcut
     v: Array              # (r,) right singular vector of the tangent
     gsq: Optional[Array] = None   # (n,) ||G_:,j||^2 — harvested by the fused
     #                               backend pass; basis-independent, so it
     #                               feeds the Eq. 12 clip even after the
     #                               basis moves (None on the jnp path)
+    A_new: Optional[Array] = None  # (r, n) global NEW-basis projection
+    #                                (gram schedule only)
 
 
-def track_subspace(
-    S: Array,
-    G: Array,
-    *,
-    eta: float,
-    fused_tangent: bool = True,
-    exact_top1: bool = False,
-    power_iters: int = 24,
-    backend=None,
-    axis_name=None,
-) -> TrackResult:
-    """Grassmannian subspace-tracking update (SubTrack++ Alg. 1, update block).
-
-    Returns the new basis plus the ``(cos_theta, v)`` pair that fully
-    determines the change-of-basis matrix ``Q = S_new^T S_old`` via
-
-        Q = I + (cos(theta) - 1) v v^T
-
-    (derivation: S_new - S_old = p v^T with S_old^T p = (cos-1) v, and
-    u ⟂ S_old).  Downstream projection-aware moment rotation can therefore
-    run in O(rn) instead of O(m r^2 + r^2 n) — see
-    :func:`repro.core.lowrank_adam.rotate_moments`.
-
-    With ``backend`` (:mod:`repro.kernels.ops`) set, the projection, the
-    per-column gradient norms and the tangent all come from ONE
-    ``project_tangent_colnorms`` launch — a single read of G instead of the
-    two jnp passes (project, then the fused tangent), and the gradient is
-    never upcast to an (m, n) fp32 copy (kernels cast per tile).  The
-    tangent is then always the residual-free fused form; ``fused_tangent``
-    only selects the schedule on the jnp path.
-
-    With ``axis_name`` set this runs inside ``shard_map`` with G (and A,
-    and the column norms) column-sharded over that mesh axis while S is
-    replicated.  The tangent is linear in the cross-shard accumulator
-    ``W = G A^T`` — expand ``T = -2 W + 2 S (S^T W)`` with
-    ``A A^T = S^T W`` — so the psum of the shard-local tangents IS the
-    global tangent: ONE (m, r) all-reduce, after which the geodesic runs
-    replicated on every shard and S_new is bitwise-identical across the
-    mesh.  The per-column quantities (A, gsq) stay shard-local.
-    """
+def _track_tangent_schedule(S, G, *, eta, fused_tangent, exact_top1,
+                            power_iters, backend, exec) -> TrackResult:
+    """Tangent schedule (replicated / column programs): the global (m, r)
+    tangent is materialized on every shard (via the program's
+    ``tangent_psum`` round when column-sharded — T is linear in the
+    cross-shard accumulator ``W = G A^T``: expand ``T = -2 W + 2 S
+    (S^T W)`` with ``A A^T = S^T W``, so psumming shard-local tangents
+    yields the global one), and the top-1 triple / stabilizer / geodesic
+    run directly on it.  Per-column quantities (A, gsq) stay
+    shard-local."""
     if backend is not None:
-        A, gsq, T = backend.project_tangent_colnorms(S, G,
-                                                     axis_name=axis_name)
+        A, gsq, T = backend.project_tangent_colnorms(S, G)
     else:
         G = G.astype(jnp.float32)
         A = project(S, G)                               # (r, n)
         gsq = None
         T = (tangent_fused if fused_tangent else tangent_naive)(S, G, A)
-        if axis_name is not None:
-            T = jax.lax.psum(T, axis_name)
+    T = exec.collective("tangent_psum", T)
     triple = (top1_eigh if exact_top1 else functools.partial(
         top1_power, n_iter=power_iters))(T)
     # DESCENT: the geodesic must follow -grad F to *minimize* the estimation
@@ -324,6 +305,146 @@ def track_subspace(
     return TrackResult(S_new=S_new, A=A,
                        cos_theta=jnp.cos(triple.sigma * eta), v=triple.v,
                        gsq=gsq)
+
+
+def _track_gram_schedule(S, G, *, eta, fused_tangent, exact_top1,
+                         power_iters, backend, exec) -> TrackResult:
+    """Gram schedule (row-family programs): S and G arrive as (m/g, r) /
+    (m/g, n) row slices; the program's two psum rounds make everything
+    else replicated algebra plus row-local panel math.
+
+    Round ``proj`` — the stacked (r+1, n) psum.  ``A = S^T G`` and the
+    column norms both contract over the sharded rows, so one psum of
+    ``[A_loc; ||G_loc||^2]`` makes them global.  Given global A, the
+    fused-form tangent is ROW-LOCAL: ``T_loc = -2 G_loc A^T + 2 S_loc
+    (A A^T)`` is exactly the global tangent's row slice — the (m, r)
+    tangent psum of the column regime has no row-regime counterpart.
+
+    Round ``gram_psum`` — the fused (r, n + 3r) psum.  The top-1 triple
+    needs ``C = T^T T``, which contracts over the sharded rows and is
+    quadratic in A, so it provably cannot fold into the first round;
+    psumming the stacked ``[T^T G | S^T T | T^T T | S^T S]`` once
+    provides every cross-row statistic the rest of the update needs:
+
+    * ``(sigma, v)`` from C (power iteration / eigh on the replicated
+      Gram — bit-identical on every shard);
+    * the stabilizer scalars: with descent-signed ``u = -T v / sigma``,
+      ``S^T u = -(S^T T) v / sigma``, ``||u||^2 = v^T C v / sigma^2`` and
+      ``||u_perp||^2 = ||u||^2 - 2||S^T u||^2 + (S^T u)^T (S^T S)
+      (S^T u)`` — the exact norm of the orthogonal-complement scrub
+      :func:`stabilize_triple` performs, from (r,)-sized data;
+    * the NEW-basis projection without touching G again: ``S_new = S +
+      p v^T`` gives ``Gt_new = S_new^T G = A + v (p^T G)`` with ``p^T G =
+      (cos(theta) - 1)(v^T A) + sin(theta) (u_hat^T G)`` and ``u_hat^T G``
+      assembled from ``v^T T^T G`` — so the epilogue is collective-free
+      (the row-rs program's Adam pass then slices A_new locally).
+
+    The geodesic rows ``S_new_loc`` come from the local ``u`` rows
+    (``u_loc = -T_loc v / sigma``).  Agreement with the tangent schedule
+    is exact in real arithmetic (every formula is an algebraic identity)
+    and fp-close in practice — asserted over multi-step loops in
+    tests/test_mesh_fused.py.  At group size 1 (replicated program) the
+    rounds are identities and the same code computes the single-device
+    update."""
+    del fused_tangent  # the gram schedule always uses the fused form
+    rel_tol = 1e-6                        # matches stabilize_triple
+    if backend is not None:
+        A_loc, gsq_loc = backend.project_colnorms(S, G)
+    else:
+        G = G.astype(jnp.float32)
+        A_loc = S.T @ G
+        gsq_loc = jnp.sum(G * G, axis=0)
+    stacked = exec.collective(
+        "proj", jnp.concatenate([A_loc, gsq_loc[None, :]], axis=0))
+    A, gsq = stacked[:-1], stacked[-1]
+    n, r = G.shape[1], S.shape[1]
+    if backend is not None:
+        T = backend.tangent(G, A, S)      # local rows of the GLOBAL tangent
+        TtG, StT, C, StS = backend.tangent_gram(S, T, G)
+    else:
+        T = tangent_fused(S, G, A)
+        TtG, StT, C, StS = (T.T @ G, S.T @ T, T.T @ T, S.T @ S)
+    payload = exec.collective(
+        "gram_psum", jnp.concatenate([TtG, StT, C, StS], axis=1))
+    TtG, StT, C, StS = (payload[:, :n], payload[:, n:n + r],
+                        payload[:, n + r:n + 2 * r],
+                        payload[:, n + 2 * r:])
+
+    sigma_raw, v = (_top1_gram_eigh(C) if exact_top1
+                    else _top1_gram_power(C, n_iter=power_iters))
+    denom = jnp.maximum(sigma_raw, _TINY)
+    # DESCENT sign, as in the tangent schedule: u = -T v / sigma
+    u_loc = -(T @ v) / denom                       # (m_loc,) local rows
+    Stu = -(StT @ v) / denom                       # (r,)  S^T u, replicated
+    u_sq = (v @ (C @ v)) / (denom * denom)         # ||u||^2 (sign-free)
+    perp_sq = u_sq - 2.0 * (Stu @ Stu) + Stu @ (StS @ Stu)
+    nu = jnp.sqrt(jnp.maximum(perp_sq, 0.0))       # ||u - S (S^T u)||
+    ok = (nu > rel_tol).astype(jnp.float32)
+    uhat_loc = ok * (u_loc - S @ Stu) / jnp.maximum(nu, _TINY)
+    sigma = sigma_raw * ok
+
+    theta = sigma * eta
+    cos_t, sin_t = jnp.cos(theta), jnp.sin(theta)
+    Sv_loc = S @ v                                 # (m_loc,)
+    S_new = S + jnp.outer(Sv_loc * (cos_t - 1.0) + uhat_loc * sin_t, v)
+
+    # Gt_new = A + v (p^T G), all replicated — no further pass over G
+    utG = -(v @ TtG) / denom                       # (n,)  u^T G
+    uhatG = ok * (utG - Stu @ A) / jnp.maximum(nu, _TINY)
+    ptG = (cos_t - 1.0) * (v @ A) + sin_t * uhatG
+    A_new = A + jnp.outer(v, ptG)
+    return TrackResult(S_new=S_new, A=A, cos_theta=cos_t, v=v, gsq=gsq,
+                       A_new=A_new)
+
+
+_SCHEDULES = {"tangent": _track_tangent_schedule,
+              "gram": _track_gram_schedule}
+
+
+def track_subspace(
+    S: Array,
+    G: Array,
+    *,
+    eta: float,
+    fused_tangent: bool = True,
+    exact_top1: bool = False,
+    power_iters: int = 24,
+    backend=None,
+    exec=None,
+) -> TrackResult:
+    """Grassmannian subspace-tracking update (SubTrack++ Alg. 1, update
+    block) — ONE program-driven entry point for every execution regime.
+
+    Returns the new basis plus the ``(cos_theta, v)`` pair that fully
+    determines the change-of-basis matrix ``Q = S_new^T S_old`` via
+
+        Q = I + (cos(theta) - 1) v v^T
+
+    (derivation: S_new - S_old = p v^T with S_old^T p = (cos-1) v, and
+    u ⟂ S_old).  Downstream projection-aware moment rotation can therefore
+    run in O(rn) instead of O(m r^2 + r^2 n) — see
+    :func:`repro.core.lowrank_adam.rotate_moments_rank1`.
+
+    With ``backend`` (:mod:`repro.kernels.ops`) set, the front end runs
+    the fused kernel launches (one read of G on the tangent schedule's
+    ``project_tangent_colnorms``; the gram schedule's
+    project_colnorms/tangent/tangent_gram pipeline) and the gradient is
+    never upcast to an (m, n) fp32 copy (kernels cast per tile).
+    ``fused_tangent`` selects the jnp tangent form on the tangent
+    schedule only.
+
+    ``exec`` is a :class:`repro.core.program.Exec` bound to the leaf's
+    :class:`~repro.core.program.StepProgram`: the program's declared
+    ``schedule`` picks the geometry pipeline ("tangent" — replicated and
+    column-sharded programs; "gram" — row-family programs) and its
+    declared rounds are the ONLY collectives executed.  Without an exec
+    the replicated null program applies (identity rounds, tangent
+    schedule) — the plain single-device update.
+    """
+    exec = exec if exec is not None else program_lib.NULL_EXEC
+    return _SCHEDULES[exec.schedule](
+        S, G, eta=eta, fused_tangent=fused_tangent, exact_top1=exact_top1,
+        power_iters=power_iters, backend=backend, exec=exec)
 
 
 def stabilize_triple(S: Array, triple: Rank1Triple,
@@ -346,117 +467,6 @@ def stabilize_triple(S: Array, triple: Rank1Triple,
     ok = (nu > rel_tol).astype(jnp.float32)
     u = ok * u_perp / jnp.maximum(nu, _TINY)
     return Rank1Triple(sigma=triple.sigma * ok, u=u, v=triple.v)
-
-
-class RowTrackResult(NamedTuple):
-    """Row-sharded tracking update: local basis rows + replicated algebra.
-
-    ``S_new`` holds THIS shard's rows of the updated basis; everything
-    else is replicated across the row group (identical on every shard by
-    construction — deterministic functions of psum'd quantities)."""
-
-    S_new: Array          # (m_loc, r) local rows of the updated basis
-    A: Array              # (r, n) global old-basis projection S^T G
-    A_new: Array          # (r, n) global NEW-basis projection S_new^T G
-    cos_theta: Array      # () cos(sigma*eta) — feeds the rank-1 rotation
-    v: Array              # (r,) right singular vector of the tangent
-    gsq: Array            # (n,) global ||G_:,j||^2 (Eq. 12 closed form)
-
-
-def track_subspace_rowsharded(
-    S: Array,
-    G: Array,
-    *,
-    eta: float,
-    exact_top1: bool = False,
-    power_iters: int = 24,
-    backend=None,
-    axis_name,
-) -> RowTrackResult:
-    """Grassmannian tracking update for a ROW-sharded leaf: S and G arrive
-    as (m/g, r) / (m/g, n) row slices inside ``shard_map`` over
-    ``axis_name``; exactly TWO collectives run, and everything after them
-    is replicated algebra plus row-local panel math.
-
-    Round 1 — the stacked (r+1, n) psum.  ``A = S^T G`` and the column
-    norms both contract over the sharded rows, so one psum of
-    ``[A_loc; ||G_loc||^2]`` makes them global.  Given global A, the
-    fused-form tangent is ROW-LOCAL: ``T_loc = -2 G_loc A^T + 2 S_loc
-    (A A^T)`` is exactly the global tangent's row slice — the (m, r)
-    tangent psum of the column regime has no row-regime counterpart.
-
-    Round 2 — the fused (r, n + 3r) Gram psum.  The top-1 triple needs
-    ``C = T^T T``, which contracts over the sharded rows and is quadratic
-    in A, so it provably cannot fold into round 1; psumming the stacked
-    ``[T^T G | S^T T | T^T T | S^T S]`` once provides every cross-row
-    statistic the rest of the update needs:
-
-    * ``(sigma, v)`` from C (power iteration / eigh on the replicated
-      Gram — bit-identical on every shard);
-    * the stabilizer scalars: with descent-signed ``u = -T v / sigma``,
-      ``S^T u = -(S^T T) v / sigma``, ``||u||^2 = v^T C v / sigma^2`` and
-      ``||u_perp||^2 = ||u||^2 - 2||S^T u||^2 + (S^T u)^T (S^T S)
-      (S^T u)`` — the exact norm of the orthogonal-complement scrub
-      :func:`stabilize_triple` performs, from (r,)-sized data;
-    * the NEW-basis projection without touching G again: ``S_new = S +
-      p v^T`` gives ``Gt_new = S_new^T G = A + v (p^T G)`` with ``p^T G =
-      (cos(theta) - 1)(v^T A) + sin(theta) (u_hat^T G)`` and ``u_hat^T G``
-      assembled from ``v^T T^T G`` — so the epilogue is collective-free.
-
-    The geodesic rows ``S_new_loc`` then come from the local ``u`` rows
-    (``u_loc = -T_loc v / sigma``).  Agreement with the replicated
-    :func:`track_subspace` is exact in real arithmetic (every formula is
-    an algebraic identity) and fp-close in practice — asserted over
-    multi-step loops in tests/test_mesh_fused.py.
-    """
-    rel_tol = 1e-6                        # matches stabilize_triple
-    if backend is not None:
-        A, gsq = backend.project_colnorms_rowsharded(S, G,
-                                                     axis_name=axis_name)
-        T = backend.tangent(G, A, S)      # local rows of the GLOBAL tangent
-        TtG, StT, C, StS = backend.tangent_gram(S, T, G,
-                                               axis_name=axis_name)
-    else:
-        G32 = G.astype(jnp.float32)
-        A_loc = S.T @ G32
-        gsq_loc = jnp.sum(G32 * G32, axis=0)
-        stacked = jax.lax.psum(
-            jnp.concatenate([A_loc, gsq_loc[None, :]], axis=0), axis_name)
-        A, gsq = stacked[:-1], stacked[-1]
-        T = tangent_fused(S, G32, A)
-        n, r = G.shape[1], S.shape[1]
-        payload = jnp.concatenate(
-            [T.T @ G32, S.T @ T, T.T @ T, S.T @ S], axis=1)
-        payload = jax.lax.psum(payload, axis_name)
-        TtG, StT, C, StS = (payload[:, :n], payload[:, n:n + r],
-                            payload[:, n + r:n + 2 * r],
-                            payload[:, n + 2 * r:])
-
-    sigma_raw, v = (_top1_gram_eigh(C) if exact_top1
-                    else _top1_gram_power(C, n_iter=power_iters))
-    denom = jnp.maximum(sigma_raw, _TINY)
-    # DESCENT sign, as in track_subspace: u = -T v / sigma
-    u_loc = -(T @ v) / denom                       # (m_loc,) local rows
-    Stu = -(StT @ v) / denom                       # (r,)  S^T u, replicated
-    u_sq = (v @ (C @ v)) / (denom * denom)         # ||u||^2 (sign-free)
-    perp_sq = u_sq - 2.0 * (Stu @ Stu) + Stu @ (StS @ Stu)
-    nu = jnp.sqrt(jnp.maximum(perp_sq, 0.0))       # ||u - S (S^T u)||
-    ok = (nu > rel_tol).astype(jnp.float32)
-    uhat_loc = ok * (u_loc - S @ Stu) / jnp.maximum(nu, _TINY)
-    sigma = sigma_raw * ok
-
-    theta = sigma * eta
-    cos_t, sin_t = jnp.cos(theta), jnp.sin(theta)
-    Sv_loc = S @ v                                 # (m_loc,)
-    S_new = S + jnp.outer(Sv_loc * (cos_t - 1.0) + uhat_loc * sin_t, v)
-
-    # Gt_new = A + v (p^T G), all replicated — no further pass over G
-    utG = -(v @ TtG) / denom                       # (n,)  u^T G
-    uhatG = ok * (utG - Stu @ A) / jnp.maximum(nu, _TINY)
-    ptG = (cos_t - 1.0) * (v @ A) + sin_t * uhatG
-    A_new = A + jnp.outer(v, ptG)
-    return RowTrackResult(S_new=S_new, A=A, A_new=A_new,
-                          cos_theta=cos_t, v=v, gsq=gsq)
 
 
 def change_of_basis(S_new: Array, S_old: Array) -> Array:

@@ -40,10 +40,9 @@ from typing import Any, Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.experimental.shard_map import shard_map
-from jax.sharding import PartitionSpec as P
 
 from repro.core import plan as plan_lib
+from repro.core import program as program_lib
 from repro.core import subspace as sub
 from repro.core.lowrank_adam import (
     AdamHP,
@@ -78,6 +77,14 @@ class LowRankConfig:
     exact_top1: bool = False            # eigh instead of power iteration
     reorth_interval: int = 0            # QR scrub every N subspace updates (0=off)
     use_kernels: bool = False           # Pallas kernels (fused single-pass hot path)
+    # Row-regime Adam-state flavour: "replicated" recomputes the full-width
+    # (r, n) M/V pass redundantly per row shard (zero extra collectives),
+    # "reduce-scatter" shards M/V into n/g column slices (the plain step's
+    # projection psum becomes a reduce-scatter + one epilogue all-gather —
+    # per-device state memory AND the Adam pass shrink by the group
+    # factor).  "auto" picks per leaf by the modeled per-device bytes
+    # (repro.core.program._row_flavor; rs needs n divisible by the group).
+    row_state: str = "auto"
     # Stack same-(m, n, rank) leaves into one vmapped launch per step instead
     # of one dispatch per leaf.  None (default) = auto: enabled on
     # single-device runs, and on sharded meshes whenever the optimizer was
@@ -125,121 +132,103 @@ def _get_backend(cfg: LowRankConfig):
 
 def _plain_matrix_step(cfg: LowRankConfig, hp: AdamHP, G: Array,
                        st: MatrixOptState, step: Array, lr: Array,
-                       param: Optional[Array], out_dtype, axis_name=None,
-                       row_axis_name=None):
+                       param: Optional[Array], out_dtype, exec=None):
     out = lowrank_adam_step(G, st, step, hp, recovery=cfg.recovery,
                             backend=_get_backend(cfg), lr=lr,
                             weight_decay=cfg.weight_decay, param=param,
-                            out_dtype=out_dtype, axis_name=axis_name,
-                            row_axis_name=row_axis_name)
+                            out_dtype=out_dtype, exec=exec)
     return out.delta, out.state
 
 
 def _refresh_subspace(cfg: LowRankConfig, G: Array, st: MatrixOptState,
                       step: Array, n_updates: Array, backend=None,
-                      axis_name=None):
+                      exec=None):
     """Compute the new basis per the configured method.
 
-    Returns (S_new, rank1_info, gsq): rank1_info is (cos_theta, v) for the
-    Grassmann method (enabling the O(rn) rotation) and None otherwise; gsq
-    is the per-column ||G_:,j||^2 harvested by the fused Grassmann backend
-    pass (basis-independent, reused by the Eq. 12 clip) and None otherwise.
+    Returns (S_new, rank1_info, gsq, proj): rank1_info is (cos_theta, v)
+    for the Grassmann method (enabling the O(rn) rotation) and None
+    otherwise; gsq is the per-column ||G_:,j||^2 harvested by the fused
+    Grassmann backend pass (basis-independent, reused by the Eq. 12 clip);
+    proj is the globally-assembled NEW-basis projection when the
+    program's gram schedule produced it (row-family regimes) — the
+    epilogue then re-projects nothing.
 
-    ``axis_name`` means G arrives column-sharded inside ``shard_map``.
-    Only the Grassmann tracker (whose tangent psums — see
-    ``subspace.track_subspace``) and the frozen subspace are column-local;
-    the SVD/random/Oja refreshes contract over all columns, so the
-    dispatch layer never routes them here sharded.
+    ``exec`` carries the leaf's StepProgram.  Only the Grassmann tracker
+    (whose collectives are the program's declared rounds — see
+    ``subspace.track_subspace``) and the frozen subspace are shardable;
+    the SVD/random/Oja refreshes contract over all columns, so
+    ``program.build_program`` never routes them here sharded.
     """
     rank = st.S.shape[-1]
-    if axis_name is not None and cfg.method not in ("grassmann", "none"):
-        raise ValueError(
-            f"subspace method {cfg.method!r} is not column-shardable; "
-            "the sharded hot path supports methods 'grassmann' and 'none'")
     if cfg.method == "grassmann":
         res = sub.track_subspace(
             st.S, G, eta=cfg.eta, fused_tangent=cfg.fused_tangent,
             exact_top1=cfg.exact_top1, power_iters=cfg.power_iters,
-            backend=backend, axis_name=axis_name)
+            backend=backend, exec=exec)
         S_new = res.S_new
         if cfg.reorth_interval:
             do = (n_updates % cfg.reorth_interval) == (cfg.reorth_interval - 1)
             S_new = jax.lax.cond(do, sub.reorthonormalize, lambda s: s, S_new)
             # after a QR scrub the rank-1 rotation identity no longer holds
-            return S_new, None, res.gsq
-        return S_new, (res.cos_theta, res.v), res.gsq
+            return S_new, None, res.gsq, res.A_new
+        return S_new, (res.cos_theta, res.v), res.gsq, res.A_new
     if cfg.method == "svd":
-        return sub.refresh_svd(G, rank), None, None
+        return sub.refresh_svd(G, rank), None, None, None
     if cfg.method == "random":
-        return sub.refresh_random(G, rank, step=step), None, None
+        return sub.refresh_random(G, rank, step=step), None, None, None
     if cfg.method == "osd":
         # Oja-style online PCA: S <- orth(S + lr * (I - SS^T) G G^T S)
         G32 = G.astype(jnp.float32)
         GS = G32.T @ st.S                        # (n, r)
         GGS = G32 @ GS                           # (m, r)
         corr = GGS - st.S @ (st.S.T @ GGS)
-        return sub.reorthonormalize(st.S + cfg.osd_lr * corr), None, None
+        return sub.reorthonormalize(st.S + cfg.osd_lr * corr), None, None, \
+            None
     if cfg.method == "none":
-        return st.S, None, None
+        # frozen subspace: the change of basis is exactly I, expressed as
+        # the rank-1 identity (cos_theta = 1, v = 0) so the rotation path
+        # stays shard-local under row-family programs (the dense
+        # Q = S^T S fallback would contract over sharded rows)
+        return st.S, (jnp.float32(1.0), jnp.zeros(rank, jnp.float32)), \
+            None, None
     raise ValueError(f"unknown subspace method {cfg.method!r}")
 
 
 def _tracking_matrix_step(cfg: LowRankConfig, hp: AdamHP, G: Array,
                           st: MatrixOptState, step: Array, n_updates: Array,
                           lr: Array, param: Optional[Array], out_dtype,
-                          axis_name=None, row_axis_name=None):
+                          exec=None):
     """The 1-of-k subspace-update step, fused end to end when kernels are
-    on: project_tangent_colnorms (one read of G) -> geodesic -> O(rn)
-    rank-1 rotation of (M, V) -> the same project/adam/fused_update
-    epilogue the plain steps use (the column norms from the first launch
-    feed the Eq. 12 clip, so no norm pass repeats).  Without kernels this
-    is the paper-literal unfused schedule.
+    on: the program-scheduled subspace refresh (one read of G on the
+    tangent schedule; the gram schedule's project/tangent/tangent_gram
+    pipeline) -> geodesic -> O(rn) rank-1 rotation of (M, V) -> the same
+    project/adam/fused_update epilogue the plain steps use (the column
+    norms from the first launch feed the Eq. 12 clip, so no norm pass
+    repeats; gram-schedule programs also hand the epilogue the
+    already-assembled new-basis projection).  Without kernels this is the
+    paper-literal unfused schedule.
 
-    Under ``axis_name`` (column-sharded shard_map) the step needs exactly
-    two collectives: the (m, r) tangent psum inside the refresh, after
-    which the geodesic and the rank-1 (M, V) rotation run replicated /
-    shard-local, and the epilogue's scalar clip psum.
-
-    Under ``row_axis_name`` (row-sharded shard_map) it also needs exactly
-    two, with different payloads: the stacked (r+1, n) projection psum and
-    the fused (r, n + 3r) tangent-Gram psum
-    (:func:`repro.core.subspace.track_subspace_rowsharded`) — the tangent
-    itself is row-local given global A, and the epilogue reuses the
-    globally-assembled new-basis projection + norms, so it runs
-    collective-free."""
+    Every collective is a round of the leaf's StepProgram, executed by
+    ``exec`` — see :mod:`repro.core.program` for the per-regime round
+    tables."""
     backend = _get_backend(cfg)
     # the kernels (and their ref fallbacks) cast per tile, so keep the
     # gradient in its storage dtype on the fused path instead of
     # materializing an (m, n) fp32 copy up front
     Gc = G if backend is not None else G.astype(jnp.float32)
 
-    if row_axis_name is not None and cfg.method == "grassmann":
-        res = sub.track_subspace_rowsharded(
-            st.S, Gc, eta=cfg.eta, exact_top1=cfg.exact_top1,
-            power_iters=cfg.power_iters, backend=backend,
-            axis_name=row_axis_name)
-        rotated = None
-        if cfg.projection_aware:
-            # cos_theta and v are replicated, M/V replicated: the O(rn)
-            # rank-1 rotation runs redundantly-identically per shard
-            rotated = rotate_moments_rank1(res.cos_theta, res.v, st.M,
-                                           st.V, step, hp)
-        out = lowrank_adam_step(
-            Gc, st, step, hp, rotated=rotated, S_new=res.S_new,
-            recovery=cfg.recovery, backend=backend, lr=lr,
-            weight_decay=cfg.weight_decay, param=param, out_dtype=out_dtype,
-            precomputed_proj=res.A_new, precomputed_gsq=res.gsq,
-            row_axis_name=row_axis_name)
-        return out.delta, out.state
-
-    S_new, rank1_info, gsq = _refresh_subspace(cfg, Gc, st, step, n_updates,
-                                               backend, axis_name)
+    S_new, rank1_info, gsq, proj = _refresh_subspace(
+        cfg, Gc, st, step, n_updates, backend, exec)
 
     rotated = None
     if cfg.projection_aware:
         # the rank-1 rotation is an exact rewrite of the dense one (the
         # geodesic's Q = I + (cos-1) vv^T), so the fused path always takes
         # it when available; cfg.rank1_rotation opts the jnp path in.
+        # Under a sharded program cos_theta/v are replicated, so the
+        # rotation runs per shard on whatever M/V block the state layout
+        # holds (full width, column shard, or n/g slice) — it is
+        # column-wise, so every layout is closed under it.
         if rank1_info is not None and (cfg.rank1_rotation
                                        or backend is not None):
             cos_t, v = rank1_info
@@ -251,9 +240,8 @@ def _tracking_matrix_step(cfg: LowRankConfig, hp: AdamHP, G: Array,
     out = lowrank_adam_step(Gc, st, step, hp, rotated=rotated, S_new=S_new,
                             recovery=cfg.recovery, backend=backend,
                             lr=lr, weight_decay=cfg.weight_decay, param=param,
-                            out_dtype=out_dtype, precomputed_gsq=gsq,
-                            axis_name=axis_name,
-                            row_axis_name=row_axis_name)
+                            out_dtype=out_dtype, precomputed_proj=proj,
+                            precomputed_gsq=gsq, exec=exec)
     return out.delta, out.state
 
 
@@ -288,21 +276,29 @@ def lowrank_optimizer(cfg: LowRankConfig, *, mesh=None,
     """Build the SubTrack++/GaLore/Fira/... optimizer for arbitrary pytrees.
 
     ``mesh`` + ``param_specs`` (a pytree of PartitionSpec mirroring the
-    params) opt the fused hot path into mesh-native execution, in one of
-    two regimes per leaf:
+    params) opt the fused hot path into mesh-native execution.  Per leaf
+    (bucket), :func:`repro.core.program.build_program` classifies the
+    canonical (m, n) sharding into a **StepProgram** — the declarative
+    description of the regime, the Adam-state layout and every collective
+    round the step may execute — and ONE lowering path
+    (:func:`repro.core.program.lower`) turns it into the shard_map'd (or
+    plain) step.  The regimes (full table in ``repro.core.program``):
 
-    * **column** — canonical n sharded (m and stack dims replicated):
-      shard-local except one scalar psum for the Eq. 12 clip (plain
-      steps) plus one (m, r) tangent psum (tracking steps);
-    * **row** — canonical m sharded (n and stack dims replicated): the
-      projection is the collective — ONE stacked (r+1, n) [A; colnorms]
-      psum per plain step (the clip closed form is then free), plus one
-      fused (r, n + 3r) tangent-Gram psum on tracking steps (the tangent
-      itself is row-local given global A).  M/V replicate across the row
-      group; S, params and updates shard with the rows.
+    * **column** — canonical n sharded: shard-local except one scalar
+      clip psum (plain) plus one (m, r) tangent psum (tracking);
+    * **row** — canonical m sharded, replicated M/V: ONE stacked
+      (r+1, n) [A; colnorms] psum per plain step (the clip closed form
+      is then free), plus one fused (r, n + 3r) tangent-Gram psum on
+      tracking steps (the tangent itself is row-local given global A);
+    * **row-rs** — canonical m sharded, M/V reduce-scattered into n/g
+      column slices (``cfg.row_state``): the projection psum becomes a
+      reduce-scatter, the Adam pass runs sharded, and one epilogue
+      all-gather restores full width before ``fused_update`` — 2
+      collectives plain / 3 tracking, per-device state memory down by
+      the group factor.
 
-    Leaves outside both regimes, and all runs built without mesh/specs,
-    execute exactly as before under plain GSPMD propagation.
+    Leaves outside every regime, and all runs built without mesh/specs,
+    execute under plain GSPMD propagation (the replicated program).
     """
 
     hp = cfg.adam
@@ -354,71 +350,42 @@ def lowrank_optimizer(cfg: LowRankConfig, *, mesh=None,
         bucket = (cfg.bucket_leaves if cfg.bucket_leaves is not None
                   else jax.device_count() == 1 or sharded_hotpath)
 
-        def shard_info_for(plan):
-            """(regime, axes) to shard_map this leaf's matrix step over —
-            regime "col" (n sharded) or "row" (m sharded) — or None for
-            the plain (GSPMD-propagated) path.  Both schemes need the
-            fused kernel schedule; tracking steps additionally need a
-            shardable refresh method ("grassmann" / "none"), and the
-            row regime routes reorth-scrubbing configs away (a QR of the
-            row-sharded basis is not shard-local)."""
-            if not sharded_hotpath or not cfg.use_kernels:
-                return None
-            if do_subspace_update and cfg.method not in ("grassmann", "none"):
-                return None
-            col = plan_lib.spec_column_axes(plan)
-            if col is not None:
-                return ("col", col)
-            row = plan_lib.spec_row_axes(plan)
-            if row is not None:
-                if do_subspace_update and cfg.method == "grassmann" \
-                        and cfg.reorth_interval:
-                    return None
-                return ("row", row)
-            return None
+        def leaf_program(plan):
+            """The leaf's StepProgram — every regime decision (column vs
+            row vs row-rs vs replicated, shardable refresh methods,
+            reorth routing) lives in ``program.build_program``; this
+            layer only lowers and runs what the program declares."""
+            return program_lib.build_program(
+                plan, cfg, mesh if sharded_hotpath else None,
+                tracking=do_subspace_update)
 
-        def matrix_fn(out_dtype, axis_name=None, row_axis_name=None):
+        def matrix_fn(out_dtype, exec):
             """Per-(m, n)-matrix step closure; ``p`` is threaded only when
             weight decay needs it (it is DCE'd otherwise)."""
             if do_subspace_update:
                 def base(G, s, p=None):
                     return _tracking_matrix_step(cfg, hp, G, s, step, n_upd,
-                                                 lr32, p, out_dtype,
-                                                 axis_name=axis_name,
-                                                 row_axis_name=row_axis_name)
+                                                 lr32, p, out_dtype, exec)
             else:
                 def base(G, s, p=None):
                     return _plain_matrix_step(cfg, hp, G, s, step, lr32, p,
-                                              out_dtype,
-                                              axis_name=axis_name,
-                                              row_axis_name=row_axis_name)
+                                              out_dtype, exec)
             return base
 
-        def run_stacked(g2, st, p2, batch_dims, out_dtype, shard_info=None):
+        def run_stacked(g2, st, p2, batch_dims, out_dtype, prog):
             """Run the matrix step over a (possibly stacked) canonical
             gradient; returns (delta_stacked, new_state_stacked).
 
-            With ``shard_info`` = (regime, axes) the whole stacked step
-            runs inside ``shard_map``.  Column regime: each device
-            launches the existing kernels on its (stack, m, n_loc) panel;
-            states shard with the columns.  Row regime: (stack, m_loc, n)
-            panels with S (and the update) row-sharded while M/V stay
-            replicated (they are functions of the globally-psum'd
-            projection, recomputed identically per shard).  Either way
-            the documented psums are the only cross-device traffic.
+            ONE lowering path for every regime: the per-matrix step is
+            built against the program's executor (collectives by round
+            name), vmapped over the stack dims, and handed to
+            ``program.lower`` — which returns it unchanged for
+            replicated programs and shard_map's it with
+            program-derived in/out specs otherwise.
             """
-            total_elems = int(np.prod(g2.shape))
-            axis_name = row_axis_name = None
-            if shard_info is not None:
-                regime, axes = shard_info
-                n_shards = int(np.prod([mesh.shape[a] for a in axes]))
-                total_elems //= n_shards
-                ax = axes if len(axes) > 1 else axes[0]
-                if regime == "col":
-                    axis_name = ax
-                else:
-                    row_axis_name = ax
-            base = matrix_fn(out_dtype, axis_name, row_axis_name)
+            total_elems = int(np.prod(g2.shape)) // prog.shards
+            exec = program_lib.executor(prog)
+            base = matrix_fn(out_dtype, exec)
             if cfg.weight_decay:
                 fn = plan_lib.map_rank(lambda G, s, p: base(G, s, p),
                                        batch_dims, total_elems)
@@ -427,26 +394,10 @@ def lowrank_optimizer(cfg: LowRankConfig, *, mesh=None,
                 fn = plan_lib.map_rank(lambda G, s: base(G, s),
                                        batch_dims, total_elems)
                 args = (g2, st)
-            if shard_info is None:
-                return fn(*args)
-            lead = (None,) * batch_dims
-            if axis_name is not None:          # column regime
-                gspec = P(*lead, None, axis_name)
-                stspec = MatrixOptState(S=P(*lead, None, None),
-                                        M=P(*lead, None, axis_name),
-                                        V=P(*lead, None, axis_name),
-                                        lam_prev=P(*lead))
-            else:                              # row regime
-                gspec = P(*lead, row_axis_name, None)
-                stspec = MatrixOptState(S=P(*lead, row_axis_name, None),
-                                        M=P(*lead, None, None),
-                                        V=P(*lead, None, None),
-                                        lam_prev=P(*lead))
-            in_specs = (gspec, stspec) + \
-                ((gspec,) if cfg.weight_decay else ())
-            sharded = shard_map(fn, mesh=mesh, in_specs=in_specs,
-                                out_specs=(gspec, stspec), check_rep=False)
-            return sharded(*args)
+            runner = program_lib.lower(prog, fn, mesh=mesh,
+                                       batch_dims=batch_dims,
+                                       with_param=bool(cfg.weight_decay))
+            return runner(*args)
 
         def leaf_single(plan, g, st, p):
             """Unbucketed path: one launch for one leaf (original layout —
@@ -454,7 +405,7 @@ def lowrank_optimizer(cfg: LowRankConfig, *, mesh=None,
             g2 = plan_lib.canonical_grad(g, plan)
             p2 = plan_lib.canonical_grad(p, plan) if cfg.weight_decay else None
             delta, new_st = run_stacked(g2, st, p2, plan.batch_dims, p.dtype,
-                                        shard_info=shard_info_for(plan))
+                                        leaf_program(plan))
             return plan_lib.uncanonical_update(delta, plan), new_st
 
         is_plan = lambda x: isinstance(x, plan_lib.ParamPlan)  # noqa: E731
@@ -517,7 +468,7 @@ def lowrank_optimizer(cfg: LowRankConfig, *, mesh=None,
                                   *st_parts)
             delta_all, st_new_all = run_stacked(
                 g_all, st_all, p_all, 1, param_leaves[idxs[0]].dtype,
-                shard_info=shard_info_for(plan_leaves[idxs[0]]))
+                leaf_program(plan_leaves[idxs[0]]))
 
             # split back to leaves and restore each one's stack layout
             splits = list(np.cumsum(sizes)[:-1])

@@ -24,6 +24,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import plan as plan_lib
+from repro.core import program as program_lib
 from repro.core.lowrank_adam import DenseOptState, MatrixOptState
 from repro.kernels import traffic
 from repro.core.subtrack import OptState
@@ -268,9 +269,26 @@ def to_named(spec_tree: Any, ctx: MeshContext) -> Any:
 # ---------------------------------------------------------------------------
 
 
+def _row_bytes(m: int, n: int, r: int, size: int, regimes: tuple,
+               row_state: str) -> int | None:
+    """Modeled per-device plain-step bytes of the row flavour the
+    program will actually run — the flavour comes from THE shared policy
+    (:func:`repro.core.program.pick_row_flavor`, the same call
+    ``build_program`` makes), so the layout ranking cannot drift from
+    the executed scheme.  None when the ``regimes`` restriction excludes
+    the selected flavour (e.g. regimes=("row-rs",) on a leaf whose
+    indivisible n degrades the policy to replicated M/V)."""
+    flavor = program_lib.pick_row_flavor(m, n, r, size, row_state)
+    if flavor == "row-rs":
+        return traffic.sharded_row_rs_fused_step_bytes(m, n, r, size).total
+    if "row" not in regimes:
+        return None
+    return traffic.sharded_row_fused_step_bytes(m, n, r, size).total
+
+
 def hotpath_param_specs(params_shape: Any, ctx: MeshContext,
-                        rank: int, regimes: tuple = ("column", "row")
-                        ) -> Any:
+                        rank: int, regimes: tuple = ("column", "row"),
+                        row_state: str = "auto") -> Any:
     """Regime-aware sharded layout for the shard_map'd fused optimizer
     hot path: per low-rank leaf, pick COLUMN sharding (canonical n over a
     mesh axis; m and stack dims replicated) or ROW sharding (canonical m
@@ -280,18 +298,29 @@ def hotpath_param_specs(params_shape: Any, ctx: MeshContext,
     noise next to the projected matrices.
 
     Regime gates (single source of truth in the traffic module, matching
-    the ``sharded/`` and ``sharded-row/`` bench sections): a column axis
-    is only admissible while ``n / g >= 2 * rank``, a row axis while
-    ``m / g >= 2 * rank`` — below those the per-shard panels stop
-    shrinking relative to the fixed (r, n) state passes / psum payloads
-    and the fused-vs-literal ratio decays toward 1.  When both regimes
-    are admissible the byte model itself prefers column (its plain-step
-    collective is one scalar vs the row regime's (r+1, n) stacked psum,
-    and M/V shard with the columns instead of replicating), so
-    ``wo``/``w_down``-style leaves that FAIL the column gate — n
-    indivisible, or n/g < 2r at the configured rank — now land in the
-    row regime instead of replicating.  ``regimes`` restricts the
-    candidates (the trainer's ``--hotpath-layout`` flag).
+    the ``sharded*/`` bench sections): a column axis is only admissible
+    while ``n / g >= 2 * rank``, a row axis while ``m / g >= 2 * rank``
+    — below those the per-shard panels stop shrinking relative to the
+    fixed (r, n) state passes / psum payloads and the fused-vs-literal
+    ratio decays toward 1.  Row leaves are ranked by their cheapest
+    admissible STATE FLAVOUR: when n also divides the group, the
+    reduce-scatter variant (StepProgram regime "row-rs" — M/V sharded
+    into n/g slices, 2 collectives) models below replicated-M/V row mode
+    everywhere in the gate, so its bytes represent the row family in the
+    column-vs-row comparison — exactly what ``program.build_program``
+    will then select at run time.  When both families are admissible the
+    byte model itself prefers column, so ``wo``/``w_down``-style leaves
+    that FAIL the column gate — n indivisible, or n/g < 2r at the
+    configured rank — land in the row family instead of replicating.
+    ``regimes`` restricts the candidates (the trainer's
+    ``--hotpath-layout`` flag): entries from {"column", "row",
+    "row-rs"}, where "row" admits both state flavours and "row-rs" only
+    the reduce-scatter one.  ``row_state`` mirrors
+    ``LowRankConfig.row_state`` — pass the same value the optimizer will
+    be built with so the ranking matches the flavour
+    ``program.build_program`` actually selects ("replicated" ranks by
+    replicated-M/V bytes only; "reduce-scatter" by rs bytes with the
+    same indivisible-n fallback ``_row_flavor`` takes).
 
     Feed the result to ``lowrank_optimizer(cfg, mesh=ctx.mesh,
     param_specs=...)`` and place params/grads with the same specs.
@@ -320,12 +349,13 @@ def hotpath_param_specs(params_shape: Any, ctx: MeshContext,
                     plan.m, plan.n, plan.rank, size).total
                 cand = (by, 0, ci, n_dim, ax)
                 best = cand if best is None else min(best, cand)
-            if "row" in regimes and traffic.in_row_regime(
-                    plan.m, size, plan.rank):
-                by = traffic.sharded_row_fused_step_bytes(
-                    plan.m, plan.n, plan.rank, size).total
-                cand = (by, 1, ci, m_dim, ax)
-                best = cand if best is None else min(best, cand)
+            if ("row" in regimes or "row-rs" in regimes) \
+                    and traffic.in_row_regime(plan.m, size, plan.rank):
+                by = _row_bytes(plan.m, plan.n, plan.rank, size, regimes,
+                                row_state)
+                if by is not None:
+                    cand = (by, 1, ci, m_dim, ax)
+                    best = cand if best is None else min(best, cand)
         spec: list = [None] * len(shape)
         if best is not None:
             _, _, _, dim, ax = best

@@ -418,8 +418,8 @@ def tangent_gram(S: Array, T: Array, G: Array, *, bm: int = BM,
     orthogonal-complement scrub, and ``T^T G`` the rank-1 new-basis
     projection identity ``Gt_new = A + v (p^T G)`` (``u^T G = v^T T^T G /
     sigma``) — so after their single fused psum the whole geodesic +
-    epilogue runs replicated with no further collective (see
-    repro.core.subspace.track_subspace_rowsharded).  Also valid
+    epilogue runs replicated with no further collective (see the gram
+    schedule in repro.core.subspace.track_subspace).  Also valid
     unsharded, where the sums are simply the global Grams.
 
     S, T: (m, r); G: (m, n) any float (cast per tile) ->

@@ -32,20 +32,15 @@ the pure-jnp reference executes.  Shapes that don't tile evenly fall back
 to the reference (the assigned archs' dims are all 128-aligned; the
 fallback keeps odd user models working).
 
-Mesh-native execution: on a column-sharded mesh the optimizer calls
-these entry points from inside ``shard_map`` with per-shard (m, n_loc)
-panels — the kernels are reused unchanged (every fused pass is
-per-column), and the only axis-aware entry point is
-``project_tangent_colnorms(axis_name=...)``, which psums the shard-local
-tangents into the global one.  On a ROW-sharded mesh (m sharded, n
-replicated) the same kernels run on (m_loc, n) panels; the axis-aware
-entry points are ``project_colnorms_rowsharded`` (the stacked (r+1, n)
-[A; colnorms] psum — the plain step's only collective) and
-``tangent_gram(axis_name=...)`` (the fused (r, n + 3r) cross-statistics
-psum tracking steps additionally need).  Tile-alignment is judged
-against the LOCAL panel dims either way: shards whose n_loc / m_loc
-doesn't tile fall back to the reference per shard, exactly like odd
-shapes on one device.
+Mesh-native execution: every entry point here is a PURE LOCAL launch.
+Inside ``shard_map`` the optimizer runs the same kernels on per-shard
+panels — (m, n_loc) column slices or (m_loc, n) row slices — and every
+cross-device interaction is a named CollectiveRound of the leaf's
+StepProgram, executed by :class:`repro.core.program.Exec` (the psums /
+reduce-scatters / all-gathers that used to be plumbed through
+``axis_name`` kwargs here).  Tile-alignment is judged against the LOCAL
+panel dims: shards whose n_loc / m_loc doesn't tile fall back to the
+reference per shard, exactly like odd shapes on one device.
 """
 
 from __future__ import annotations
@@ -53,7 +48,6 @@ from __future__ import annotations
 import os
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import grassmann, ref
 
@@ -140,86 +134,51 @@ def project_colnorms(S: Array, G: Array) -> tuple[Array, Array]:
     return grassmann.project_colnorms(S, G, interpret=(mode == "interpret"))
 
 
-def project_tangent_colnorms(S: Array, G: Array, *, axis_name=None
+def project_tangent_colnorms(S: Array, G: Array
                              ) -> tuple[Array, Array, Array]:
     """Tracking-step front end: (A = S^T G, ||G_:,j||^2, Grassmann tangent T)
     from one pass over G when the full-m panels fit VMEM
     (m <= grassmann.MAX_FUSED_TANGENT_M), two passes otherwise.
 
-    ``axis_name`` is the mesh-native entry point: inside ``shard_map``
-    with G column-sharded and S replicated, the same local launch runs on
-    each shard's (m, n_loc) panel unchanged, and the shard-local tangents
-    are psum'd into the global one — valid because the tangent is linear
-    in the cross-shard accumulator W = G A^T (T = -2 W + 2 S (S^T W), and
-    A A^T = S^T W since A = S^T G).  This is the tracking step's single
-    (m, r) collective; A and the column norms stay shard-local.
+    Inside ``shard_map`` with G column-sharded and S replicated, the same
+    local launch runs on each shard's (m, n_loc) panel unchanged and the
+    program's ``tangent_psum`` round psums the shard-local tangents into
+    the global one — valid because the tangent is linear in the
+    cross-shard accumulator W = G A^T (T = -2 W + 2 S (S^T W), and
+    A A^T = S^T W since A = S^T G).  A and the column norms stay
+    shard-local.
     """
     mode = _mode()
     m, r = S.shape
     n = G.shape[1]
     if mode == "ref" or not _tiles_ok((m, grassmann.BM), (n, grassmann.BN)):
-        out = ref.project_tangent_colnorms_ref(S, G)
-    elif m <= grassmann.MAX_FUSED_TANGENT_M:
-        out = grassmann.project_tangent_colnorms(
+        return ref.project_tangent_colnorms_ref(S, G)
+    if m <= grassmann.MAX_FUSED_TANGENT_M:
+        return grassmann.project_tangent_colnorms(
             S, G, interpret=(mode == "interpret"))
-    else:
-        interp = mode == "interpret"
-        A, gsq = grassmann.project_colnorms(S, G, interpret=interp)
-        T = grassmann.tangent(G, A, S, interpret=interp)
-        out = (A, gsq, T)
-    if axis_name is not None:
-        A, gsq, T = out
-        out = (A, gsq, jax.lax.psum(T, axis_name))
-    return out
+    interp = mode == "interpret"
+    A, gsq = grassmann.project_colnorms(S, G, interpret=interp)
+    T = grassmann.tangent(G, A, S, interpret=interp)
+    return A, gsq, T
 
 
-def project_colnorms_rowsharded(S: Array, G: Array, *, axis_name
-                                ) -> tuple[Array, Array]:
-    """Row-regime front end: the LOCAL project_colnorms launch on this
-    shard's (m/g, n) panel followed by the ONE stacked (r+1, n) psum of
-    [A_loc; ||G_loc||^2-row] — both sums are linear over the sharded
-    rows, so the psum'd result is the exact global (A, gsq).  This is
-    the row-sharded plain step's only collective: with A and the column
-    norms replicated, the Adam pass, phi, and the Eq. 12 clip closed
-    form all run redundantly per shard with no further communication.
-    """
-    A, gsq = project_colnorms(S, G)
-    stacked = jnp.concatenate([A, gsq[None, :]], axis=0)
-    stacked = jax.lax.psum(stacked, axis_name)
-    return stacked[:-1], stacked[-1]
-
-
-def tangent_gram(S: Array, T: Array, G: Array, *, axis_name=None
+def tangent_gram(S: Array, T: Array, G: Array
                  ) -> tuple[Array, Array, Array, Array]:
-    """(T^T G, S^T T, T^T T, S^T S) in one pass over G — the row-regime
+    """(T^T G, S^T T, T^T T, S^T S) in one pass over G — the row-family
     tracking step's second-round sufficient statistics.  Kernel:
     grassmann.tangent_gram; oracle/fallback: ref.tangent_gram_ref.
 
-    ``axis_name`` is the mesh-native entry point: inside ``shard_map``
-    with S, T, G row-sharded, the four outputs are psum'd TOGETHER as
-    one fused (r, n + 3r) payload — every entry is linear in per-row
-    contributions, so the sum is the exact global statistic.  This is
-    the tracking step's only collective beyond the stacked projection
-    psum (the Gram is quadratic in the psum'd A, so it provably cannot
-    fold into that first linear round)."""
+    Inside ``shard_map`` with S, T, G row-sharded, the four outputs are
+    psum'd TOGETHER as the program's fused (r, n + 3r) ``gram_psum``
+    round — every entry is linear in per-row contributions, so the sum
+    is the exact global statistic (the Gram is quadratic in the psum'd
+    A, so it provably cannot fold into the first linear round)."""
     mode = _mode()
     m, r = S.shape
     n = G.shape[1]
     if mode == "ref" or not _tiles_ok((m, grassmann.BM), (n, grassmann.BN)):
-        out = ref.tangent_gram_ref(S, T, G)
-    else:
-        out = grassmann.tangent_gram(S, T, G,
-                                     interpret=(mode == "interpret"))
-    if axis_name is not None:
-        TtG, StT, C, StS = out
-        payload = jnp.concatenate([TtG, StT, C, StS], axis=1)
-        payload = jax.lax.psum(payload, axis_name)
-        TtG = payload[:, :n]
-        StT = payload[:, n:n + r]
-        C = payload[:, n + r:n + 2 * r]
-        StS = payload[:, n + 2 * r:]
-        out = (TtG, StT, C, StS)
-    return out
+        return ref.tangent_gram_ref(S, T, G)
+    return grassmann.tangent_gram(S, T, G, interpret=(mode == "interpret"))
 
 
 def adam_lowrank_norms(Gt: Array, M: Array, V: Array, step: Array, *,

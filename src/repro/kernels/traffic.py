@@ -242,15 +242,36 @@ def tracking_traffic_ratio(m: int, n: int, r: int, *,
 #                    shard-local tangents yields the global one) plus the
 #                    same clip scalar.
 #
-# Collective wire bytes use the ring all-reduce model (2 (g-1)/g * payload
-# per device — matching repro.distributed.hlo_analysis), charged on top of
-# the local HBM bytes: ICI and HBM are different resources, but a single
-# conservative "total" (local + wire) is what the per-shard ratio below
-# compares, and the collectives are O(1) / O(mr) against O(mn/g) local
-# terms, so they vanish at production shapes.  The paper-literal baseline
-# is charged the SAME collectives (its ||Lam|| reduction / tangent Gram
-# need identical cross-shard sums) — generous, since the unfused schedule
-# would realistically also re-gather intermediates.
+# Collective wire bytes use the ring model (matching
+# repro.distributed.hlo_analysis), charged on top of the local HBM bytes:
+# ICI and HBM are different resources, but a single conservative "total"
+# (local + wire) is what the per-shard ratio below compares, and the
+# collectives are O(1) / O(mr) against O(mn/g) local terms, so they
+# vanish at production shapes.  The paper-literal baseline is charged the
+# SAME collectives (its ||Lam|| reduction / tangent Gram need identical
+# cross-shard sums) — generous, since the unfused schedule would
+# realistically also re-gather intermediates.
+#
+# The per-regime collective SET is not defined here: every sharded model
+# below charges exactly the CollectiveRounds of the regime's StepProgram
+# (repro.core.program.regime_rounds — the same single source of truth the
+# runtime executes and tests/test_mesh_fused.py pins compiled HLO
+# against), via :func:`program_collective_bytes`.  The byte model can
+# therefore never drift from what the lowered step actually sends.
+
+
+def program_collective_bytes(regime: str, m: int, n: int, r: int,
+                             shards: int, *, tracking: bool,
+                             recovery: bool = True) -> int:
+    """Per-device ring-model wire bytes of one step's collectives, read
+    off the regime's declared StepProgram rounds."""
+    from repro.core.program import regime_rounds  # lazy: program builds
+    #                                               on this module's models
+
+    return sum(rnd.wire_bytes(shards)
+               for rnd in regime_rounds(regime, m, n, r, shards,
+                                        tracking=tracking,
+                                        recovery=recovery))
 
 
 @dataclass(frozen=True)
@@ -299,8 +320,9 @@ def sharded_fused_step_bytes(m: int, n: int, r: int, shards: int, *,
     columns + the scalar clip all-reduce."""
     local = fused_step_bytes(m, _shard_cols(n, shards), r,
                              grad_bytes=grad_bytes, param_bytes=param_bytes)
-    return ShardedHotPathTraffic("sharded_fused", shards, local,
-                                 allreduce_wire_bytes(F32, shards))
+    coll = program_collective_bytes("column", m, n, r, shards,
+                                    tracking=False)
+    return ShardedHotPathTraffic("sharded_fused", shards, local, coll)
 
 
 def sharded_unfused_step_bytes(m: int, n: int, r: int, shards: int, *,
@@ -312,8 +334,9 @@ def sharded_unfused_step_bytes(m: int, n: int, r: int, shards: int, *,
     local = unfused_step_bytes(m, _shard_cols(n, shards), r,
                                grad_bytes=grad_bytes,
                                param_bytes=param_bytes)
-    return ShardedHotPathTraffic("sharded_unfused", shards, local,
-                                 allreduce_wire_bytes(F32, shards))
+    coll = program_collective_bytes("column", m, n, r, shards,
+                                    tracking=False)
+    return ShardedHotPathTraffic("sharded_unfused", shards, local, coll)
 
 
 def sharded_tracking_fused_step_bytes(m: int, n: int, r: int, shards: int, *,
@@ -325,8 +348,8 @@ def sharded_tracking_fused_step_bytes(m: int, n: int, r: int, shards: int, *,
     local = tracking_fused_step_bytes(m, _shard_cols(n, shards), r,
                                       grad_bytes=grad_bytes,
                                       param_bytes=param_bytes)
-    coll = allreduce_wire_bytes(m * r * F32, shards) \
-        + allreduce_wire_bytes(F32, shards)
+    coll = program_collective_bytes("column", m, n, r, shards,
+                                    tracking=True)
     return ShardedHotPathTraffic("sharded_tracking_fused", shards, local,
                                  coll)
 
@@ -340,8 +363,8 @@ def sharded_tracking_unfused_step_bytes(m: int, n: int, r: int, shards: int,
     local = tracking_unfused_step_bytes(m, _shard_cols(n, shards), r,
                                         grad_bytes=grad_bytes,
                                         param_bytes=param_bytes)
-    coll = allreduce_wire_bytes(m * r * F32, shards) \
-        + allreduce_wire_bytes(F32, shards)
+    coll = program_collective_bytes("column", m, n, r, shards,
+                                    tracking=True)
     return ShardedHotPathTraffic("sharded_tracking_unfused", shards, local,
                                  coll)
 
@@ -405,18 +428,6 @@ def _shard_rows(m: int, shards: int) -> int:
     return m // shards
 
 
-def _row_plain_collective(n: int, r: int, shards: int) -> int:
-    """Ring wire bytes of the stacked (r+1, n) [A; colnorms] psum."""
-    return allreduce_wire_bytes((r + 1) * n * F32, shards)
-
-
-def _row_tracking_collective(n: int, r: int, shards: int) -> int:
-    """Stacked (r+1, n) psum + the fused (r, n + 3r) Gram psum
-    ([T^T G | S^T T | T^T T | S^T S])."""
-    return _row_plain_collective(n, r, shards) \
-        + allreduce_wire_bytes(r * (n + 3 * r) * F32, shards)
-
-
 def sharded_row_fused_step_bytes(m: int, n: int, r: int, shards: int, *,
                                  grad_bytes: int = F32,
                                  param_bytes: int = F32
@@ -426,8 +437,9 @@ def sharded_row_fused_step_bytes(m: int, n: int, r: int, shards: int, *,
     — M/V replicate across the row group) + the stacked (r+1, n) psum."""
     local = fused_step_bytes(_shard_rows(m, shards), n, r,
                              grad_bytes=grad_bytes, param_bytes=param_bytes)
-    return ShardedHotPathTraffic("sharded_row_fused", shards, local,
-                                 _row_plain_collective(n, r, shards))
+    return ShardedHotPathTraffic(
+        "sharded_row_fused", shards, local,
+        program_collective_bytes("row", m, n, r, shards, tracking=False))
 
 
 def sharded_row_unfused_step_bytes(m: int, n: int, r: int, shards: int, *,
@@ -440,8 +452,9 @@ def sharded_row_unfused_step_bytes(m: int, n: int, r: int, shards: int, *,
     local = unfused_step_bytes(_shard_rows(m, shards), n, r,
                                grad_bytes=grad_bytes,
                                param_bytes=param_bytes)
-    return ShardedHotPathTraffic("sharded_row_unfused", shards, local,
-                                 _row_plain_collective(n, r, shards))
+    return ShardedHotPathTraffic(
+        "sharded_row_unfused", shards, local,
+        program_collective_bytes("row", m, n, r, shards, tracking=False))
 
 
 def row_tracking_fused_step_bytes(m_loc: int, n: int, r: int, *,
@@ -489,8 +502,9 @@ def sharded_row_tracking_fused_step_bytes(m: int, n: int, r: int,
     local = row_tracking_fused_step_bytes(
         _shard_rows(m, shards), n, r, grad_bytes=grad_bytes,
         param_bytes=param_bytes)
-    return ShardedHotPathTraffic("sharded_row_tracking_fused", shards, local,
-                                 _row_tracking_collective(n, r, shards))
+    return ShardedHotPathTraffic(
+        "sharded_row_tracking_fused", shards, local,
+        program_collective_bytes("row", m, n, r, shards, tracking=True))
 
 
 def sharded_row_tracking_unfused_step_bytes(m: int, n: int, r: int,
@@ -504,9 +518,176 @@ def sharded_row_tracking_unfused_step_bytes(m: int, n: int, r: int,
     local = tracking_unfused_step_bytes(_shard_rows(m, shards), n, r,
                                         grad_bytes=grad_bytes,
                                         param_bytes=param_bytes)
-    return ShardedHotPathTraffic("sharded_row_tracking_unfused", shards,
-                                 local,
-                                 _row_tracking_collective(n, r, shards))
+    return ShardedHotPathTraffic(
+        "sharded_row_tracking_unfused", shards, local,
+        program_collective_bytes("row", m, n, r, shards, tracking=True))
+
+
+# ---------------------------------------------------------------------------
+# Row-reduce-scatter (row-rs) regime: sharded Adam states on row shards
+# ---------------------------------------------------------------------------
+#
+# The reduce-scatter flavour of the row regime (StepProgram "row-rs"):
+# instead of psumming the stacked (r+1, n) [A; colnorms] panel to every
+# row shard and recomputing the full-width (r, n) Adam pass redundantly
+# (replicated M/V — the row regime's honest memory cost), the panel is
+# reduce-SCATTERED so each shard owns only its (r, n/g) column slice of
+# M/V:
+#
+#   plain step     — the reduce-scatter (half an all-reduce's wire), the
+#                    Adam pass + phi + clip partials on the n/g slice,
+#                    then ONE all-gather of the stacked (2r+2, n/g)
+#                    [G~; G~^O; phi; clip-partials] panel restores full
+#                    width (and the global clip sum) right before
+#                    fused_update writes the local (m/g, n) rows.  Two
+#                    collectives; the sliced 6 r n / g Adam traffic beats
+#                    the extra (r+1, n)-ring gather wire for every g >= 2
+#                    (6r(1-1/g) > (r+1)(g-1)/g termwise), so inside the
+#                    row gate the rs flavour is byte-cheaper everywhere
+#                    n divides — on top of cutting per-device M/V memory
+#                    by the group factor.
+#   tracking step  — the front end keeps the row regime's TWO all-reduce
+#                    rounds unchanged (the tangent needs global A; the
+#                    Gram is quadratic in it), the rank-1 (M, V) rotation
+#                    and the Adam pass then run on the n/g slices of the
+#                    already-global new-basis projection, and one
+#                    (r+2, n) all-gather of [G~^O; phi; partials] feeds
+#                    the epilogue (G~ itself is already global via the
+#                    rank-1 identity — never re-gathered).  Three
+#                    collectives.
+#
+# Local G passes match the row regime (plain 2 reads + 1 write; tracking
+# 4 reads + 1 write); only the (r, n)-state and rotation terms divide by
+# g.  All collective terms are read off the "row-rs" StepProgram rounds.
+
+
+def in_row_rs_regime(m: int, n: int, shards: int, r: int) -> bool:
+    """Admissibility of the reduce-scatter row flavour: the row gate
+    (m divisible, m/g >= 2r) plus n divisible by the group (the scatter
+    slices columns evenly)."""
+    return in_row_regime(m, shards, r) and n % shards == 0
+
+
+def sharded_row_rs_fused_step_bytes(m: int, n: int, r: int, shards: int, *,
+                                    grad_bytes: int = F32,
+                                    param_bytes: int = F32
+                                    ) -> ShardedHotPathTraffic:
+    """Mesh-native fused plain step, row-rs regime: the fused pipeline on
+    the local (m/g, n) row panel with the Adam pass on the (r, n/g)
+    state slice + the program's reduce-scatter/all-gather rounds."""
+    m_loc = _shard_rows(m, shards)
+    n_sl = n // shards
+    mn = (
+        2 * m_loc * n * grad_bytes  # G read by project_colnorms + epilogue
+        + m_loc * n * param_bytes   # update write (final dtype, once)
+    )
+    rn = (
+        r * n * F32               # A_loc write (pre-scatter projection)
+        + 6 * r * n_sl * F32      # adam_lowrank_norms on the (r, n/g) slice
+        + 2 * r * n * F32         # Gt, Gto full-width reads (fused_update)
+    )
+    mr = 2 * m_loc * r * F32      # S read by project_colnorms + epilogue
+    nb = 6 * n_sl * F32 + 2 * n * F32   # slice byproducts + gathered phi r/w
+    local = HotPathTraffic("row_rs_fused", mn, rn, mr, nb)
+    return ShardedHotPathTraffic(
+        "sharded_row_rs_fused", shards, local,
+        program_collective_bytes("row-rs", m, n, r, shards, tracking=False))
+
+
+def sharded_row_rs_unfused_step_bytes(m: int, n: int, r: int, shards: int,
+                                      *, grad_bytes: int = F32,
+                                      param_bytes: int = F32
+                                      ) -> ShardedHotPathTraffic:
+    """Paper-literal plain step distributed over the same row sharding
+    (full-width state passes — the literal schedule cannot slice its
+    moments; charged the same program collectives, generous as ever)."""
+    local = unfused_step_bytes(_shard_rows(m, shards), n, r,
+                               grad_bytes=grad_bytes,
+                               param_bytes=param_bytes)
+    return ShardedHotPathTraffic(
+        "sharded_row_rs_unfused", shards, local,
+        program_collective_bytes("row-rs", m, n, r, shards, tracking=False))
+
+
+def row_rs_tracking_fused_local_bytes(m_loc: int, n: int, r: int,
+                                      shards: int, *,
+                                      grad_bytes: int = F32,
+                                      param_bytes: int = F32
+                                      ) -> HotPathTraffic:
+    """Local bytes of the row-rs fused tracking step on an (m_loc, n)
+    panel: the row regime's 4-read pipeline with the rank-1 rotation and
+    the Adam pass on the (r, n/g) state slices."""
+    n_sl = n // shards
+    mn = (
+        4 * m_loc * n * grad_bytes  # G read by project_colnorms, tangent,
+                                    # tangent_gram and fused_update
+        + m_loc * n * param_bytes   # update write (final dtype, once)
+    )
+    rn = (
+        r * n * F32               # A write (project_colnorms)
+        + 2 * r * n * F32         # A read by tangent + tangent_gram epochs
+        + 2 * r * n * F32         # T^T G write + read (Gt_new assembly)
+        + r * n * F32             # Gt_new write (rank-1 identity, O(rn))
+        + 4 * r * n_sl * F32      # rank-1 rotation on the (r, n/g) slices
+        + 6 * r * n_sl * F32      # adam_lowrank_norms on the slices
+        + 2 * r * n * F32         # Gt, Gto read (fused_update panels)
+    )
+    mr = (
+        3 * m_loc * r * F32       # S read by project_colnorms, tangent,
+                                  # tangent_gram
+        + 2 * m_loc * r * F32     # T write (tangent) + T read (tangent_gram)
+        + 2 * m_loc * r * F32     # T read (u = T v) + geodesic S read
+        + m_loc * r * F32         # S_new write
+        + m_loc * r * F32         # S_new read (fused_update)
+    )
+    nb = 5 * n_sl * F32 + 2 * n * F32   # slice byproducts + gathered phi
+    return HotPathTraffic("row_rs_tracking_fused", mn, rn, mr, nb)
+
+
+def sharded_row_rs_tracking_fused_step_bytes(m: int, n: int, r: int,
+                                             shards: int, *,
+                                             grad_bytes: int = F32,
+                                             param_bytes: int = F32
+                                             ) -> ShardedHotPathTraffic:
+    """Mesh-native fused tracking step, row-rs regime: local 4-read
+    pipeline with sliced state passes + the three program rounds."""
+    local = row_rs_tracking_fused_local_bytes(
+        _shard_rows(m, shards), n, r, shards, grad_bytes=grad_bytes,
+        param_bytes=param_bytes)
+    return ShardedHotPathTraffic(
+        "sharded_row_rs_tracking_fused", shards, local,
+        program_collective_bytes("row-rs", m, n, r, shards, tracking=True))
+
+
+def sharded_row_rs_tracking_unfused_step_bytes(m: int, n: int, r: int,
+                                               shards: int, *,
+                                               grad_bytes: int = F32,
+                                               param_bytes: int = F32
+                                               ) -> ShardedHotPathTraffic:
+    """Paper-literal tracking step over the same row sharding (full-width
+    state; the same three program collectives charged)."""
+    local = tracking_unfused_step_bytes(_shard_rows(m, shards), n, r,
+                                        grad_bytes=grad_bytes,
+                                        param_bytes=param_bytes)
+    return ShardedHotPathTraffic(
+        "sharded_row_rs_tracking_unfused", shards, local,
+        program_collective_bytes("row-rs", m, n, r, shards, tracking=True))
+
+
+_REGIME_MODEL_FNS = {
+    ("column", False): (sharded_fused_step_bytes,
+                        sharded_unfused_step_bytes),
+    ("column", True): (sharded_tracking_fused_step_bytes,
+                       sharded_tracking_unfused_step_bytes),
+    ("row", False): (sharded_row_fused_step_bytes,
+                     sharded_row_unfused_step_bytes),
+    ("row", True): (sharded_row_tracking_fused_step_bytes,
+                    sharded_row_tracking_unfused_step_bytes),
+    ("row-rs", False): (sharded_row_rs_fused_step_bytes,
+                        sharded_row_rs_unfused_step_bytes),
+    ("row-rs", True): (sharded_row_rs_tracking_fused_step_bytes,
+                       sharded_row_rs_tracking_unfused_step_bytes),
+}
 
 
 def sharded_traffic_ratio(m: int, n: int, r: int, shards: int, *,
@@ -515,19 +696,13 @@ def sharded_traffic_ratio(m: int, n: int, r: int, shards: int, *,
                           param_bytes: int = F32) -> float:
     """Per-shard fused / paper-literal total-byte ratio (target <= 0.7:
     the single-chip fusion win must survive distribution).  ``regime``
-    selects the column- (n-sharded) or row- (m-sharded) layout model."""
-    if regime not in ("column", "row"):
-        raise ValueError(f"unknown sharding regime {regime!r}")
-    if regime == "row":
-        fus_fn = (sharded_row_tracking_fused_step_bytes if tracking
-                  else sharded_row_fused_step_bytes)
-        unf_fn = (sharded_row_tracking_unfused_step_bytes if tracking
-                  else sharded_row_unfused_step_bytes)
-    else:
-        fus_fn = (sharded_tracking_fused_step_bytes if tracking
-                  else sharded_fused_step_bytes)
-        unf_fn = (sharded_tracking_unfused_step_bytes if tracking
-                  else sharded_unfused_step_bytes)
+    selects the column- (n-sharded), row- (m-sharded, replicated M/V) or
+    row-rs (m-sharded, reduce-scattered M/V) layout model — the same
+    regime names the StepProgram IR uses."""
+    try:
+        fus_fn, unf_fn = _REGIME_MODEL_FNS[(regime, tracking)]
+    except KeyError:
+        raise ValueError(f"unknown sharding regime {regime!r}") from None
     fus = fus_fn(m, n, r, shards, grad_bytes=grad_bytes,
                  param_bytes=param_bytes)
     unf = unf_fn(m, n, r, shards, grad_bytes=grad_bytes,

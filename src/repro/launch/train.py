@@ -117,12 +117,15 @@ def train(argv=None) -> dict:
     ap.add_argument("--metrics-out", default="")
     ap.add_argument("--use-kernels", action="store_true")
     ap.add_argument("--hotpath-layout", default="auto",
-                    choices=["auto", "column", "row", "off"],
+                    choices=["auto", "column", "row", "row-rs", "off"],
                     help="mesh-native fused-optimizer layout: auto picks "
                          "column or row sharding per leaf by the modeled "
                          "per-device bytes (repro.kernels.traffic); "
-                         "column/row restrict to one regime; off disables "
-                         "the shard_map'd hot path (GSPMD propagation)")
+                         "column/row restrict to one regime (row still "
+                         "auto-picks its Adam-state flavour); row-rs "
+                         "forces the reduce-scatter row variant (M/V "
+                         "sharded into n/g slices); off disables the "
+                         "shard_map'd hot path (GSPMD propagation)")
     args = ap.parse_args(argv)
 
     ctx = (smoke_context() if args.mesh == "smoke"
@@ -141,20 +144,25 @@ def train(argv=None) -> dict:
                           use_kernels=args.use_kernels)
             if args.use_kernels and ctx.mesh.devices.size > 1 \
                     and args.hotpath_layout != "off":
-                # mesh-native fused hot path: shard every low-rank leaf in
-                # its cheapest admissible regime — column (n sharded: one
-                # scalar clip psum per plain step, +1 (m, r) tangent psum
-                # on tracking) or row (m sharded: one stacked (r+1, n)
-                # psum per plain step, +1 fused (r, n+3r) Gram psum on
-                # tracking) — and run the per-matrix step under shard_map
-                # (see repro.core.subtrack)
+                # mesh-native fused hot path: shard every low-rank leaf
+                # in its cheapest admissible regime and run the
+                # per-matrix step through its StepProgram (see
+                # repro.core.program for the regime x collective table);
+                # --hotpath-layout row-rs additionally forces the
+                # reduce-scatter Adam-state flavour in the optimizer
+                # config (otherwise row leaves auto-pick by bytes)
                 regimes = (("column", "row")
                            if args.hotpath_layout == "auto"
                            else (args.hotpath_layout,))
+                row_state = ("reduce-scatter"
+                             if args.hotpath_layout == "row-rs" else "auto")
+                if args.hotpath_layout == "row-rs":
+                    opt_kw.update(row_state=row_state)
                 shapes = jax.eval_shape(bundle.init,
                                         jax.random.PRNGKey(args.seed))
                 hot_specs = sh.hotpath_param_specs(shapes, ctx, rank,
-                                                   regimes=regimes)
+                                                   regimes=regimes,
+                                                   row_state=row_state)
                 opt_kw.update(mesh=ctx.mesh, param_specs=hot_specs)
         elif args.weight_decay:
             opt_kw = dict(weight_decay=args.weight_decay)

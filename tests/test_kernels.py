@@ -385,6 +385,49 @@ def test_sharded_row_traffic_model_below_bound():
     assert one.total == traffic.fused_step_bytes(1024, 2560, 128).total
 
 
+def test_sharded_row_rs_traffic_model_below_bound():
+    """Acceptance (row-rs regime — the reduce-scatter Adam-state
+    flavour): everywhere inside the gate (row gate + n divisible) the
+    per-shard ratio stays <= 0.7 for BOTH step kinds (the sliced
+    6 r n / g Adam pass beats even the replicated-row tracking dilution),
+    AND the modeled per-device bytes sit strictly below replicated-M/V
+    row mode — the selection gate ``program._row_flavor`` relies on.
+    Collective terms are exactly the program's rounds: plain =
+    reduce-scatter((r+1, n)) + all-gather((2r+2, n)); tracking = the two
+    row all-reduces + all-gather((r+2, n))."""
+    from repro.core.program import regime_rounds
+    from repro.kernels import traffic
+    for (m, n, r) in [(1024, 2560, 128), (2048, 5632, 256),
+                      (4096, 11008, 256), (8192, 8192, 512)]:
+        for g in (4, 8, 16):
+            if not traffic.in_row_rs_regime(m, n, g, r):
+                continue
+            for gb, pb in ((4, 4), (2, 2)):
+                for tracking in (False, True):
+                    ratio = traffic.sharded_traffic_ratio(
+                        m, n, r, g, tracking=tracking, regime="row-rs",
+                        grad_bytes=gb, param_bytes=pb)
+                    assert ratio <= 0.7, (m, n, r, g, gb, tracking, ratio)
+                # the selection gate: rs below replicated-M/V row mode
+                rs = traffic.sharded_row_rs_fused_step_bytes(
+                    m, n, r, g, grad_bytes=gb, param_bytes=pb).total
+                rep = traffic.sharded_row_fused_step_bytes(
+                    m, n, r, g, grad_bytes=gb, param_bytes=pb).total
+                assert rs < rep, (m, n, r, g, gb)
+            for tracking in (False, True):
+                got = traffic.sharded_row_rs_fused_step_bytes(m, n, r, g) \
+                    if not tracking else \
+                    traffic.sharded_row_rs_tracking_fused_step_bytes(
+                        m, n, r, g)
+                want = sum(rnd.wire_bytes(g) for rnd in regime_rounds(
+                    "row-rs", m, n, r, g, tracking=tracking))
+                assert got.collective_bytes == want
+    # admissibility = row gate AND n % g == 0
+    assert traffic.in_row_rs_regime(4096, 11008, 16, 128)
+    assert not traffic.in_row_rs_regime(4096, 11009, 16, 128)
+    assert not traffic.in_row_rs_regime(4096, 11008, 16, 129)
+
+
 def test_ops_dispatch_fallback_for_odd_shapes(monkeypatch):
     """Non-tile-aligned shapes silently use the reference path."""
     monkeypatch.setenv("REPRO_FORCE_KERNELS", "1")

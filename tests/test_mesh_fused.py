@@ -2,25 +2,22 @@
 
 Run with ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI
 tier-1 sharded step does); on a single-device interpreter every test here
-skips.  Covers the tentpole contract end to end, in BOTH regimes:
+skips.  Covers the tentpole contract end to end, in EVERY shard_map'd
+regime of the StepProgram IR (column / row / row-rs):
 
-* the column-shard_map'd fused step reproduces the replicated fused step
-  (updates, S, M, V, lam_prev) within the PR 1 per-step budgets over a
-  multi-step loop with tracking steps firing;
-* the compiled column-regime plain step contains EXACTLY one all-reduce
-  (the Eq. 12 clip scalar) and the tracking step at most two (+ the
-  (m, r) tangent psum) — asserted on post-SPMD HLO via
-  repro.distributed.hlo_analysis;
-* the ROW-shard_map'd fused step (m sharded, n replicated) reproduces
-  the replicated step within the same budgets, and its compiled
-  collective structure is pinned EXACTLY: one all-reduce per plain step
-  (the stacked (r+1, n) [A; colnorms] psum — the clip closed form is
-  then free) and exactly two per tracking step (+ the fused (r, n + 3r)
-  tangent-Gram psum; the tangent itself is row-local given global A, so
-  no (m, r)-sized collective exists — the second psum is irreducible
-  because the tangent Gram is quadratic in the first psum's result);
+* each sharded fused step reproduces the replicated fused step (updates,
+  S, M, V, lam_prev) within the PR 1 per-step budgets over a multi-step
+  loop with tracking steps firing;
+* the compiled collective structure is pinned against the regime's
+  **StepProgram rounds** (``repro.core.program``) — the same declaration
+  the traffic byte model charges, so the three can never drift.  Row
+  regimes pin exact counts; the column regime allows XLA to merge its
+  scalar clip psum into the tangent psum (<= the program's count).
+  Row-rs (the reduce-scatter Adam-state variant) pins exactly
+  {reduce-scatter: 1, all-gather: 1} plain / {all-reduce: 2,
+  all-gather: 1} tracking, read off the program;
 * spec-aware bucketing stacks same-layout leaves into one launch without
-  changing results, in either regime.
+  changing results, in every regime.
 """
 
 import functools
@@ -32,8 +29,18 @@ import pytest
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import plan as plan_lib
+from repro.core import program as program_lib
 from repro.core.subtrack import LowRankConfig, lowrank_optimizer
 from repro.distributed.hlo_analysis import summarize_compiled
+
+
+def expected_counts(specs, cfg, mesh, *, tracking):
+    """The HLO collective pin, READ OFF THE PROGRAM — the acceptance
+    contract: tests never hand-write counts the program also declares."""
+    plan = plan_lib.plan_for_shape((M, N), RANK, spec=specs["w"])
+    prog = program_lib.build_program(plan, cfg, mesh, tracking=tracking)
+    return prog.collective_counts()
+
 
 pytestmark = pytest.mark.skipif(
     jax.device_count() < 8,
@@ -153,13 +160,13 @@ class TestShardedAgreement:
 
 
 class TestCollectiveStructure:
-    @pytest.mark.parametrize("do_update,max_allreduce", [(False, 1),
-                                                         (True, 2)])
-    def test_fused_step_collective_counts(self, mesh, do_update,
-                                          max_allreduce):
-        """The compiled sharded step's ONLY collectives are the documented
-        psums: 1 all-reduce for the plain step (clip scalar), <= 2 for
-        the tracking step (+ tangent), and nothing else of any kind."""
+    @pytest.mark.parametrize("do_update", [False, True])
+    def test_fused_step_collective_counts(self, mesh, do_update):
+        """The compiled sharded step's ONLY collectives are the program's
+        declared rounds: 1 all-reduce for the plain step (clip scalar),
+        <= 2 for the tracking step (+ tangent; XLA may merge the scalar
+        into the tangent psum), and nothing else of any kind — the upper
+        bound is READ OFF the StepProgram, not hand-written."""
         key = jax.random.PRNGKey(2)
         params = _params(key)
         _, opt_shd = _optimizers(mesh)
@@ -173,8 +180,11 @@ class TestCollectiveStructure:
             comp = jax.jit(f).lower(g, state, p,
                                     jnp.float32(0.03)).compile()
         summ = summarize_compiled(comp, 8)
+        expect = expected_counts(SPECS, opt_shd.config, mesh,
+                                 tracking=do_update)
+        assert set(expect) == {"all-reduce"}
         n_ar = summ.collective_counts.get("all-reduce", 0)
-        assert 1 <= n_ar <= max_allreduce, summ.collective_counts
+        assert 1 <= n_ar <= expect["all-reduce"], summ.collective_counts
         others = {k: v for k, v in summ.collective_counts.items()
                   if k != "all-reduce"}
         assert not others, others
@@ -256,7 +266,8 @@ class TestRowShardedAgreement:
         match the replicated run."""
         key = jax.random.PRNGKey(10)
         params = _params(key)
-        opt_rep, opt_shd = _optimizers(mesh, specs=ROW_SPECS)
+        opt_rep, opt_shd = _optimizers(mesh, specs=ROW_SPECS,
+                                       row_state="replicated")
         state = opt_rep.init(params)
         state = opt_rep.warm_start(state, _grad_at(key, params, 0))
         shardings = {k: NamedSharding(mesh, s)
@@ -300,7 +311,8 @@ class TestRowShardedAgreement:
         tolerance."""
         key = jax.random.PRNGKey(11)
         params = _params(key)
-        opt_rep, opt_shd = _optimizers(mesh, specs=ROW_SPECS)
+        opt_rep, opt_shd = _optimizers(mesh, specs=ROW_SPECS,
+                                       row_state="replicated")
         shardings = {k: NamedSharding(mesh, s)
                      for k, s in ROW_SPECS.items()}
 
@@ -340,7 +352,7 @@ class TestRowShardedAgreement:
             opt = lowrank_optimizer(
                 LowRankConfig(rank=RANK, update_interval=4, eta=2e-5,
                               use_kernels=True, bucket_leaves=bucket,
-                              weight_decay=0.1),
+                              weight_decay=0.1, row_state="replicated"),
                 mesh=mesh, param_specs=ROW_SPECS)
             p = jax.device_put(params, shardings)
             state = opt.init(p)
@@ -381,7 +393,8 @@ class TestRowCollectiveStructure:
         Nothing else of any collective kind may appear."""
         key = jax.random.PRNGKey(13)
         params = _params(key)
-        _, opt_shd = _optimizers(mesh, specs=ROW_SPECS)
+        _, opt_shd = _optimizers(mesh, specs=ROW_SPECS,
+                                 row_state="replicated")
         state = opt_shd.init(params)
         shardings = {k: NamedSharding(mesh, s)
                      for k, s in ROW_SPECS.items()}
@@ -393,11 +406,174 @@ class TestRowCollectiveStructure:
             comp = jax.jit(f).lower(g, state, p,
                                     jnp.float32(0.03)).compile()
         summ = summarize_compiled(comp, 8)
-        n_ar = summ.collective_counts.get("all-reduce", 0)
-        assert n_ar == n_allreduce, summ.collective_counts
-        others = {k: v for k, v in summ.collective_counts.items()
-                  if k != "all-reduce"}
-        assert not others, others
+        expect = expected_counts(ROW_SPECS, opt_shd.config, mesh,
+                                 tracking=do_update)
+        # cross-check the hand-pinned count against the program's
+        assert expect == {"all-reduce": n_allreduce}
+        assert dict(summ.collective_counts) == expect, \
+            summ.collective_counts
+
+
+class TestRowReduceScatter:
+    """The reduce-scatter row flavour (StepProgram regime "row-rs"): M/V
+    shard into n/g column slices, the plain step's projection psum
+    becomes a reduce-scatter + one epilogue all-gather, and the Adam
+    pass runs sharded — the ROADMAP's reduce-scatter item, landed as a
+    fourth program through the SAME lowering path."""
+
+    def test_row_rs_matches_replicated_over_loop(self, mesh):
+        """Per-step agreement from a shared evolving state over 10 steps
+        (tracking at 4 and 8) within the PR 1 budgets — with weight
+        decay on, so the row-sharded param panel threads through
+        shard_map, and bucketing auto-on (specs present)."""
+        key = jax.random.PRNGKey(20)
+        params = _params(key)
+        opt_rep, opt_shd = _optimizers(mesh, specs=ROW_SPECS,
+                                       row_state="reduce-scatter",
+                                       weight_decay=0.1)
+        state = opt_rep.init(params)
+        state = opt_rep.warm_start(state, _grad_at(key, params, 0))
+        shardings = {k: NamedSharding(mesh, s)
+                     for k, s in ROW_SPECS.items()}
+        upd_rep = jax.jit(opt_rep.update,
+                          static_argnames=("do_subspace_update",))
+        upd_shd = jax.jit(opt_shd.update,
+                          static_argnames=("do_subspace_update",))
+        with mesh:
+            tracked = 0
+            for s in range(10):
+                g = _grad_at(key, params, s)
+                do = s > 0 and s % 4 == 0
+                tracked += do
+                u_r, st_r = upd_rep(g, state, params, 0.03,
+                                    do_subspace_update=do)
+                u_s, st_s = upd_shd(jax.device_put(g, shardings), state,
+                                    jax.device_put(params, shardings),
+                                    0.03, do_subspace_update=do)
+                budget = 1e-3 if do else 1e-5
+                for k in ("w", "layers"):
+                    rel = float(jnp.max(jnp.abs(u_r[k] - u_s[k]))
+                                / (jnp.max(jnp.abs(u_r[k])) + 1e-12))
+                    assert rel < budget, (s, k, rel)
+                    for f in range(3):  # S, M, V
+                        a = np.asarray(st_r.inner[k][f])
+                        b = np.asarray(st_s.inner[k][f])
+                        rel = float(np.max(np.abs(a - b))
+                                    / (np.max(np.abs(a)) + 1e-12))
+                        assert rel < budget, (s, k, f, rel)
+                    np.testing.assert_allclose(
+                        np.asarray(st_r.inner[k].lam_prev),
+                        np.asarray(st_s.inner[k].lam_prev), rtol=1e-4)
+                state = st_r
+            assert tracked == 2
+            assert float(state.inner["w"].lam_prev) > 0
+
+    def test_row_rs_state_actually_sharded(self, mesh):
+        """The regime's point: each device holds only its (r, n/g) M/V
+        slice — assert on the output sharding of the compiled step (the
+        addressable shard of M spans n/g columns, not n)."""
+        key = jax.random.PRNGKey(21)
+        params = _params(key)
+        _, opt_shd = _optimizers(mesh, specs=ROW_SPECS,
+                                 row_state="reduce-scatter")
+        state = opt_shd.init(params)
+        shardings = {k: NamedSharding(mesh, s)
+                     for k, s in ROW_SPECS.items()}
+        with mesh:
+            _, st = jax.jit(opt_shd.update)(
+                jax.device_put(_grad_at(key, params, 1), shardings),
+                state, jax.device_put(params, shardings),
+                jnp.float32(0.03))
+        m_shard = st.inner["w"].M.addressable_shards[0].data
+        assert m_shard.shape == (RANK, N // 8), m_shard.shape
+        s_shard = st.inner["w"].S.addressable_shards[0].data
+        assert s_shard.shape == (M // 8, RANK), s_shard.shape
+
+    @pytest.mark.parametrize("do_update", [False, True])
+    def test_row_rs_collective_counts(self, mesh, do_update):
+        """The compiled row-rs step's collectives are EXACTLY the
+        program's rounds: {reduce-scatter: 1, all-gather: 1} per plain
+        step (the scattered projection + the stacked epilogue gather —
+        half an all-reduce's wire plus the gather, bought back by the
+        g-fold smaller Adam pass) and {all-reduce: 2, all-gather: 1} per
+        tracking step (the tangent needs global A, the Gram is quadratic
+        in it; only the epilogue's [G~^O; phi; partials] panel gathers —
+        the new-basis projection is already global via the rank-1
+        identity).  The expected dict is READ OFF the program."""
+        key = jax.random.PRNGKey(22)
+        params = _params(key)
+        cfg = LowRankConfig(rank=RANK, update_interval=4, eta=2e-5,
+                            use_kernels=True,
+                            row_state="reduce-scatter")
+        opt_shd = lowrank_optimizer(cfg, mesh=mesh, param_specs=ROW_SPECS)
+        state = opt_shd.init(params)
+        shardings = {k: NamedSharding(mesh, s)
+                     for k, s in ROW_SPECS.items()}
+        g = jax.device_put(_grad_at(key, params, 1), shardings)
+        p = jax.device_put(params, shardings)
+        with mesh:
+            f = functools.partial(opt_shd.update,
+                                  do_subspace_update=do_update)
+            comp = jax.jit(f).lower(g, state, p,
+                                    jnp.float32(0.03)).compile()
+        summ = summarize_compiled(comp, 8)
+        expect = expected_counts(ROW_SPECS, cfg, mesh, tracking=do_update)
+        assert expect == ({"all-reduce": 2, "all-gather": 1} if do_update
+                          else {"reduce-scatter": 1, "all-gather": 1})
+        assert dict(summ.collective_counts) == expect, \
+            summ.collective_counts
+
+    @pytest.mark.parametrize("method,recovery", [("none", False),
+                                                 ("none", True),
+                                                 ("grassmann", False)])
+    def test_row_rs_degenerate_configs(self, mesh, method, recovery):
+        """Gram-schedule programs whose refresh skips the geodesic
+        (method="none") or whose epilogue skips the clip (recovery off)
+        still agree with the replicated path: the full-width projection
+        psum of a tracking step must slice down to the state block, and
+        the non-recovery gather carries the bare G~^O panel."""
+        key = jax.random.PRNGKey(23)
+        params = _params(key)
+        opt_rep, opt_shd = _optimizers(mesh, specs=ROW_SPECS,
+                                       row_state="reduce-scatter",
+                                       method=method, recovery=recovery)
+        state = opt_rep.init(params)
+        g = _grad_at(key, params, 1)
+        state = opt_rep.warm_start(state, g)
+        shardings = {k: NamedSharding(mesh, s)
+                     for k, s in ROW_SPECS.items()}
+        with mesh:
+            for do in (False, True):
+                u_r, _ = jax.jit(
+                    opt_rep.update,
+                    static_argnames=("do_subspace_update",))(
+                        g, state, params, 0.03, do_subspace_update=do)
+                u_s, _ = jax.jit(
+                    opt_shd.update,
+                    static_argnames=("do_subspace_update",))(
+                        jax.device_put(g, shardings), state,
+                        jax.device_put(params, shardings), 0.03,
+                        do_subspace_update=do)
+                budget = 1e-3 if do else 1e-5
+                for k in ("w", "layers"):
+                    rel = float(jnp.max(jnp.abs(u_r[k] - u_s[k]))
+                                / (jnp.max(jnp.abs(u_r[k])) + 1e-12))
+                    assert rel < budget, (do, k, rel)
+
+    def test_auto_row_state_picks_rs_when_divisible(self, mesh):
+        """row_state="auto" (the default) picks the byte-cheaper rs
+        flavour whenever n divides the group, and falls back to
+        replicated M/V when it doesn't — read off build_program."""
+        cfg = LowRankConfig(rank=RANK, use_kernels=True)
+        plan = plan_lib.plan_for_shape((M, N), RANK, spec=P("x", None))
+        prog = program_lib.build_program(plan, cfg, mesh, tracking=False)
+        assert prog.regime == "row-rs"
+        # indivisible n: N + 1 columns cannot scatter evenly over 8
+        plan_odd = plan_lib.plan_for_shape((M, N + 1), RANK,
+                                           spec=P("x", None))
+        prog_odd = program_lib.build_program(plan_odd, cfg, mesh,
+                                             tracking=False)
+        assert prog_odd.regime == "row"
 
 
 class TestRowShardedPlans:

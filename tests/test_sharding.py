@@ -192,6 +192,27 @@ class TestHotpathRegimeSelection:
                                        regimes=("row",))
         assert specs["w"] == P("model", None)
 
+    def test_row_state_threads_into_row_ranking(self, ctx):
+        """The layout builder ranks the row family by the STATE FLAVOUR
+        the optimizer will actually run (row_state mirrors
+        LowRankConfig.row_state): with "replicated" the rs byte
+        advantage must not leak into the column-vs-row comparison."""
+        from repro.distributed.sharding import _row_bytes
+        from repro.kernels import traffic
+        m, n, r, g = 2048, 4096, 64, 16
+        rep = traffic.sharded_row_fused_step_bytes(m, n, r, g).total
+        rs = traffic.sharded_row_rs_fused_step_bytes(m, n, r, g).total
+        assert rs < rep
+        assert _row_bytes(m, n, r, g, ("row",), "auto") == rs
+        assert _row_bytes(m, n, r, g, ("row",), "replicated") == rep
+        assert _row_bytes(m, n, r, g, ("row-rs",), "auto") == rs
+        # forced rs on an indivisible n degrades to the replicated
+        # flavour, exactly like program._row_flavor
+        assert _row_bytes(m, n + 1, r, g, ("row",), "reduce-scatter") == \
+            traffic.sharded_row_fused_step_bytes(m, n + 1, r, g).total
+        # restricting to row-rs alone replicates inadmissible leaves
+        assert _row_bytes(m, n + 1, r, g, ("row-rs",), "auto") is None
+
     def test_row_specs_feed_row_shardable_plans(self, ctx):
         from repro.core import plan as plan_lib
         params = {"w": _sds(2048, 4097)}

@@ -7,14 +7,17 @@ silently regressed, modeled ratios drifting past their documented
 targets) would quietly rot.  This checker fails CI fast instead:
 
 * every expected section is present (``hotpath``, ``tracking``,
-  ``sharded``, ``sharded-row``) with a non-empty ``shapes`` map;
+  ``sharded``, ``sharded-row``, ``sharded-row-rs``) with a non-empty
+  ``shapes`` map;
 * the numeric agreement loops recorded their worst relative error and it
   is inside the documented budget (1e-5 plain / 1e-3 with tracking
-  steps);
+  steps) — including the sharded-row-rs rs-vs-replicated loop;
 * modeled traffic ratios respect their targets: hotpath <= 0.5,
   tracking <= 0.7, sharded (column) <= 0.7, sharded-row <= the per-row
   recorded target (0.7 plain / 0.8 tracking near the m/g >= 2r gate
-  boundary, 0.7 from m/g >= 4r);
+  boundary, 0.7 from m/g >= 4r), sharded-row-rs <= 0.7 both step kinds
+  AND below the replicated-M/V flavour's bytes at every cell (the
+  StepProgram auto-selection gate);
 * the flat timing ``rows`` list exists and covers every section.
 
 Run: ``python tools/check_bench.py [PATH]`` (default:
@@ -30,9 +33,13 @@ from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
 
-EXPECTED_SECTIONS = ("hotpath", "tracking", "sharded", "sharded-row")
+EXPECTED_SECTIONS = ("hotpath", "tracking", "sharded", "sharded-row",
+                     "sharded-row-rs")
 AGREEMENT_BUDGETS = {"hotpath": 1e-5, "tracking": 1e-3}
 FLAT_RATIO_TARGETS = {"hotpath": 0.5, "tracking": 0.7}
+# sections whose per-cell dicts carry their own "target" + an agreement
+# loop (or a mesh-skip note) from the fake 8-device mesh
+MESH_SECTIONS = ("sharded-row", "sharded-row-rs")
 
 
 def _iter_ratio_cells(by_shape: dict):
@@ -70,19 +77,21 @@ def check_bench(path: Path) -> list[str]:
         elif rel > budget:
             errors.append(f"section {name!r}: agreement {rel:.2e} "
                           f"exceeds budget {budget}")
-    row = sections.get("sharded-row", {})
-    agree = row.get("agreement_rel")
-    if isinstance(agree, dict):
-        if agree.get("plain", 1.0) > 1e-5:
-            errors.append("sharded-row plain agreement "
-                          f"{agree.get('plain'):.2e} exceeds 1e-5")
-        if agree.get("tracking", 1.0) > 1e-3:
-            errors.append("sharded-row tracking agreement "
-                          f"{agree.get('tracking'):.2e} exceeds 1e-3")
-    elif "mesh" not in row:
-        errors.append("sharded-row: neither an agreement loop result nor "
-                      "a mesh-skip note — regenerate with "
-                      "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    for name in MESH_SECTIONS:
+        row = sections.get(name, {})
+        agree = row.get("agreement_rel")
+        if isinstance(agree, dict):
+            if agree.get("plain", 1.0) > 1e-5:
+                errors.append(f"{name} plain agreement "
+                              f"{agree.get('plain'):.2e} exceeds 1e-5")
+            if agree.get("tracking", 1.0) > 1e-3:
+                errors.append(f"{name} tracking agreement "
+                              f"{agree.get('tracking'):.2e} exceeds 1e-3")
+        elif "mesh" not in row:
+            errors.append(f"{name}: neither an agreement loop result nor "
+                          "a mesh-skip note — regenerate with "
+                          "XLA_FLAGS=--xla_force_host_platform_device_"
+                          "count=8")
 
     # modeled ratios against their targets
     for name, target in FLAT_RATIO_TARGETS.items():
@@ -92,7 +101,7 @@ def check_bench(path: Path) -> list[str]:
                 if ratio > target:
                     errors.append(f"{name}/{shape}/{tag}: ratio "
                                   f"{ratio:.3f} > {target}")
-    for name in ("sharded", "sharded-row"):
+    for name in ("sharded",) + MESH_SECTIONS:
         for shape, by_shape in sections.get(name, {}).get("shapes",
                                                           {}).items():
             for kind_key, tag, cell in _iter_ratio_cells(by_shape):
@@ -100,6 +109,14 @@ def check_bench(path: Path) -> list[str]:
                 if cell["ratio"] > target:
                     errors.append(f"{name}/{shape}/{kind_key}/{tag}: "
                                   f"ratio {cell['ratio']:.3f} > {target}")
+                # the rs auto-selection gate: modeled bytes must beat the
+                # replicated-M/V row flavour wherever rs is admissible
+                if name == "sharded-row-rs" and \
+                        not cell.get("below_replicated_flavor", True):
+                    errors.append(
+                        f"{name}/{shape}/{kind_key}/{tag}: rs bytes not "
+                        "below the replicated-M/V flavour — the "
+                        "auto-selection gate would never pick it")
 
     rows = payload.get("rows", [])
     if not rows:
