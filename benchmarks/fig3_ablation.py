@@ -42,7 +42,7 @@ def run(steps: int = 80) -> dict[str, float]:
             step_fn = jax.jit(make_train_step(bundle, opt),
                               static_argnames=("do_subspace_update",),
                               donate_argnums=(0,))
-            state = jax.jit(make_warm_start(bundle, opt))(
+            state, _ = jax.jit(make_warm_start(bundle, opt))(
                 state, data.global_batch_at(0))
             loss = None
             for s in range(steps):

@@ -171,7 +171,11 @@ def hotpath_table(shapes=((1024, 2736, 256), (2048, 5461, 512),
     the m/g >= 2r gate while the tracking ratio reaches ~0.76 near the
     gate boundary (replicated full-width M/V passes) and drops below 0.7
     from m/g >= 4r."""
-    from repro.kernels.traffic import (fused_step_bytes, in_column_regime,
+    import functools
+
+    from repro.kernels.traffic import (fused_step_bytes,
+                                      gradfused_step_bytes,
+                                      in_column_regime,
                                       in_row_regime,
                                       sharded_fused_step_bytes,
                                       sharded_row_fused_step_bytes,
@@ -194,6 +198,14 @@ def hotpath_table(shapes=((1024, 2736, 256), (2048, 5461, 512),
     ]
     for kind, unf_fn, fus_fn in (
             ("plain", unfused_step_bytes, fused_step_bytes),
+            # grad-fused: the tapped backward replaces the projection
+            # pass (repro.models.common.tapped_matmul), so the "fused"
+            # column is the tap-fed step — 1 G read + 1 update write
+            # with recovery scaling on, the bare write with it off
+            ("grad-fused", unfused_step_bytes,
+             functools.partial(gradfused_step_bytes, recovery=True)),
+            ("grad-fused (no recovery)", unfused_step_bytes,
+             functools.partial(gradfused_step_bytes, recovery=False)),
             ("tracking", tracking_unfused_step_bytes,
              tracking_fused_step_bytes)):
         for (m, n, r) in shapes:

@@ -54,7 +54,7 @@ def run(steps: int = STEPS) -> dict[str, float]:
                               static_argnames=("do_subspace_update",),
                               donate_argnums=(0,))
             if name not in ("adamw", "badam"):
-                state = jax.jit(make_warm_start(bundle, opt))(
+                state, _ = jax.jit(make_warm_start(bundle, opt))(
                     state, data.global_batch_at(0))
             for s in range(steps):
                 do = name not in ("adamw", "badam") and s > 0 and s % K == 0

@@ -40,7 +40,8 @@ def run() -> None:
             params = bundle.init(jax.random.PRNGKey(0))
             state = TrainState(params=params, opt=opt.init(params))
             if name != "adamw":
-                state = jax.jit(make_warm_start(bundle, opt))(state, batch)
+                state, _ = jax.jit(make_warm_start(bundle, opt))(state,
+                                                                  batch)
             step = jax.jit(make_train_step(bundle, opt),
                            static_argnames=("do_subspace_update",))
             t_plain = time_fn(lambda s: step(s, batch, jnp.float32(1e-3),

@@ -33,8 +33,9 @@ with mesh_context(smoke_context()):
     train_step = jax.jit(make_train_step(bundle, optimizer),
                          static_argnames=("do_subspace_update",),
                          donate_argnums=(0,))
-    state = jax.jit(make_warm_start(bundle, optimizer))(
+    state, warm_loss = jax.jit(make_warm_start(bundle, optimizer))(
         state, data.global_batch_at(0))
+    print(f"warm-start loss: {float(warm_loss):.4f}")
 
     for step in range(STEPS):
         state, metrics = train_step(

@@ -212,7 +212,16 @@ def _fused_step(G, st, step, hp, rotated, S, recovery, backend, lr,
         Gt = exec.state_slice(proj)
         gsq_st = exec.state_slice(gsq)
     elif gsq is None:
-        Gt, gsq_st = backend.project_colnorms(S, G)
+        if exec.has("sel_gather"):
+            # Grass regime (arXiv:2406.17660): S is a one-hot row
+            # selection, so A = S^T G is an (r, n) row GATHER of G and
+            # the colnorms a memory-bound reduction — no MXU projection
+            # pass.  The gather is the program's declared local round.
+            G32 = G.astype(jnp.float32)
+            Gt = G32[jnp.argmax(S, axis=0), :]
+            gsq_st = jnp.sum(G32 * G32, axis=0)
+        else:
+            Gt, gsq_st = backend.project_colnorms(S, G)
         if exec.has("proj"):
             stacked = exec.collective(
                 "proj", jnp.concatenate([Gt, gsq_st[None, :]], axis=0))
@@ -335,10 +344,16 @@ def lowrank_adam_step(
         # per tile, so a bf16 gradient streams at 2 bytes/elem instead of
         # materializing an (m, n) fp32 copy first (the traffic model in
         # repro.kernels.traffic charges G reads at the gradient dtype).
-        # Only the gram-schedule tracking epilogue threads a precomputed
-        # projection in (the tangent schedule's fused front end harvests
-        # norms instead — its epilogue re-projects).
-        proj = precomputed_proj if exec.schedule == "gram" else None
+        # A precomputed projection is threaded through in two cases: the
+        # gram-schedule tracking epilogue (its geodesic rounds assembled
+        # the already-global new-basis projection), and the grad-fused
+        # plain step, which hands BOTH the projection and the colnorms
+        # down from the backward-pass tap (the tangent schedule's fused
+        # tracking front end harvests norms alone — its epilogue
+        # re-projects, so precomputed_proj arrives None there).
+        proj = (precomputed_proj
+                if (exec.schedule == "gram"
+                    or precomputed_gsq is not None) else None)
         return _fused_step(G, st, step, hp, rotated, S, recovery, backend,
                            lr, weight_decay, param, out_dtype, exec,
                            gsq=precomputed_gsq, proj=proj)

@@ -29,7 +29,7 @@ This module makes the per-leaf execution scheme a first-class object:
   (``exec.collective("proj", x)``); rounds the program does not declare
   are identities, so one code path serves all four regimes.
 
-The four regimes
+The five regimes
 ----------------
 ========== ============ =============== ======================================
 regime     G/S layout   M/V layout      collectives (plain / tracking)
@@ -39,7 +39,18 @@ column     n sharded    n sharded       clip scalar AR / + (m, r) tangent AR
 row        m sharded    replicated      (r+1, n) proj AR / + (r, n+3r) Gram AR
 row-rs     m sharded    n/g slice       (r+1, n) proj RS + epilogue AG /
                                         proj AR + Gram AR + epilogue AG
+grass      whole leaf   whole leaf      local ``sel_gather`` round only: S is
+                                        a one-hot row selection (Grass,
+                                        arXiv:2406.17660), A = S^T G a gather
 ========== ============ =============== ======================================
+
+Grad-fused plain steps (PR 6) additionally declare a local ``grad_tap``
+round in the replicated / column / grass regimes: the (r+1, n)
+[A; colnorms] panel is produced by the model's backward-pass epilogue
+(``kernels.ops.grad_tap`` via ``models.common.tapped_matmul``) and the
+optimizer consumes it instead of re-reading the full-width gradient.
+Local rounds are zero-wire and compile to no HLO collective — the pins
+and the ring model see straight through them.
 
 ``row-rs`` is the reduce-scatter flavour of the row regime (the ROADMAP
 item this PR lands): instead of psumming the stacked (r+1, n)
@@ -68,12 +79,19 @@ from repro.core import plan as plan_lib
 
 F32 = 4
 
-REGIMES = ("replicated", "column", "row", "row-rs")
+REGIMES = ("replicated", "column", "row", "row-rs", "grass")
 
 # collective kinds (HLO opcode names — hlo_analysis counts these)
 ALL_REDUCE = "all-reduce"
 REDUCE_SCATTER = "reduce-scatter"
 ALL_GATHER = "all-gather"
+# Local (non-collective) round kind: a declared data-flow edge of the
+# step — the backward-pass tap panel a grad-fused step consumes, or the
+# Grass row gather — with zero wire bytes and no HLO collective op.  It
+# exists in the IR so the traffic model, the executor gates
+# (``Exec.has``) and the tools see one declaration, same as the real
+# collectives.
+GRAD_FUSED = "grad-fused"
 
 
 @dataclass(frozen=True)
@@ -101,7 +119,7 @@ class CollectiveRound:
         repro.distributed.hlo_analysis: AR = 2(g-1)/g * result, RS =
         (g-1)/g * result * g with result = payload/g, AG = (g-1)/g *
         gathered result)."""
-        if group <= 1:
+        if self.kind == GRAD_FUSED or group <= 1:
             return 0
         ring = (group - 1) / group
         if self.kind == ALL_REDUCE:
@@ -112,7 +130,8 @@ class CollectiveRound:
 
 
 def regime_rounds(regime: str, m: int, n: int, r: int, group: int, *,
-                  tracking: bool, recovery: bool = True
+                  tracking: bool, recovery: bool = True,
+                  tapped: bool = False
                   ) -> tuple[CollectiveRound, ...]:
     """The collective rounds of one optimizer step — the single source of
     truth consumed by the runtime executor, the traffic byte model and
@@ -135,12 +154,26 @@ def regime_rounds(regime: str, m: int, n: int, r: int, group: int, *,
     * ``epilogue_gather`` — row-rs only: all-gather of the stacked
                             per-column epilogue panel ([G~; ] G~^O; phi;
                             clip partials) back to full width before
-                            ``fused_update``.
+                            ``fused_update``;
+    * ``grad_tap``        — grad-fused plain steps (``tapped=True``):
+                            the (r+1, n) [A; colnorms] panel emitted by
+                            the backward-pass epilogue that replaces the
+                            optimizer's own projection read of G.  Local
+                            kind, zero wire bytes;
+    * ``sel_gather``      — Grass regime: S is a one-hot row selection,
+                            so A = S^T G is an (r, n) row gather of G
+                            (no MXU projection).  Local kind.
     """
+    tap = ((CollectiveRound("grad_tap", GRAD_FUSED, r + 1, n),)
+           if tapped and not tracking else ())
+    if regime == "grass":
+        # the tap subsumes the gather (it IS the gathered rows + norms)
+        return tap if tap else (
+            CollectiveRound("sel_gather", GRAD_FUSED, r, n),)
     if group <= 1 or regime == "replicated":
-        return ()
+        return tap
     if regime == "column":
-        rounds = []
+        rounds = list(tap)
         if tracking:
             rounds.append(CollectiveRound("tangent_psum", ALL_REDUCE, m, r))
         if recovery:
@@ -208,9 +241,14 @@ class StepProgram:
 
     def collective_counts(self) -> dict[str, int]:
         """{HLO opcode: count} — what tests pin compiled programs
-        against (see tests/test_mesh_fused.py / tests/test_program.py)."""
+        against (see tests/test_mesh_fused.py / tests/test_program.py).
+        Local rounds (kind ``grad-fused``) lower to no collective op, so
+        they are excluded: a grad-fused program compiles to the same HLO
+        collective counts as its untapped sibling."""
         counts: dict[str, int] = {}
         for rnd in self.rounds:
+            if rnd.kind not in (ALL_REDUCE, REDUCE_SCATTER, ALL_GATHER):
+                continue
             counts[rnd.kind] = counts.get(rnd.kind, 0) + 1
         return counts
 
@@ -240,11 +278,11 @@ class StepProgram:
 
 
 _GRAD_LAYOUT = {"replicated": "replicated", "column": "column",
-                "row": "row", "row-rs": "row"}
+                "row": "row", "row-rs": "row", "grass": "replicated"}
 _STATE_LAYOUT = {"replicated": "inherit", "column": "column",
-                 "row": "replicated", "row-rs": "slice"}
+                 "row": "replicated", "row-rs": "slice", "grass": "inherit"}
 _SCHEDULE = {"replicated": "tangent", "column": "tangent",
-             "row": "gram", "row-rs": "gram"}
+             "row": "gram", "row-rs": "gram", "grass": "tangent"}
 
 
 def pick_row_flavor(m: int, n: int, r: int, group: int,
@@ -278,7 +316,7 @@ def _row_flavor(cfg, m: int, n: int, r: int, group: int) -> str:
 
 
 def build_program(plan: plan_lib.ParamPlan, cfg, mesh, *,
-                  tracking: bool) -> StepProgram:
+                  tracking: bool, tapped: bool = False) -> StepProgram:
     """Classify one leaf (or bucket representative) into its StepProgram.
 
     This is the regime dispatch that used to live in
@@ -291,10 +329,24 @@ def build_program(plan: plan_lib.ParamPlan, cfg, mesh, *,
     is not shard-local).  Everything else lowers to the replicated
     program: no shard_map, plain GSPMD propagation, zero declared
     rounds.
+
+    ``tapped`` marks a plain step whose (r+1, n) [A; colnorms] panel
+    arrives precomputed from the backward pass (the grad-fused path).
+    Only the regimes whose projection the model-side tap can legally
+    replace accept it — replicated, column (the tap is column-separable,
+    see ``kernels.ops.grad_tap``) and grass; the row family contracts A
+    over sharded rows the tap never sees, so ``tapped`` is ignored there
+    and the caller falls back to the untapped program.
     """
     m, n, r = plan.m, plan.n, plan.rank
+    method = getattr(cfg, "method", "grassmann")
     regime, axes = "replicated", ()
-    if (mesh is not None and getattr(cfg, "use_kernels", False)
+    if plan.mode == "lowrank" and method == "grass":
+        # Grass never shard_maps: the top-r row selection contracts over
+        # all columns (like the SVD refresh), so the leaf stays on plain
+        # GSPMD propagation with the gather declared as a local round.
+        regime = "grass"
+    elif (mesh is not None and getattr(cfg, "use_kernels", False)
             and plan.mode == "lowrank"
             and not (tracking and cfg.method not in ("grassmann", "none"))):
         col = plan_lib.spec_column_axes(plan)
@@ -308,16 +360,18 @@ def build_program(plan: plan_lib.ParamPlan, cfg, mesh, *,
     if regime == "row":
         regime = _row_flavor(cfg, m, n, r, shards)
     recovery = bool(getattr(cfg, "recovery", True))
+    tapped = tapped and not tracking and regime in ("replicated", "column",
+                                                   "grass")
     # Rounds reflect the EFFECTIVE geometry: a tracking step whose
     # refresh method moves no basis (method="none" — the frozen-subspace
     # ablation) fires no geodesic collectives, so it declares (and the
     # byte model charges, and the HLO pins expect) the plain rounds.
-    tracks = tracking and getattr(cfg, "method", "grassmann") == "grassmann"
+    tracks = tracking and method in ("grassmann", "grass")
     return StepProgram(
         regime=regime, axes=tuple(axes), shards=shards, m=m, n=n, rank=r,
         tracking=tracking, tracks=tracks, recovery=recovery,
         rounds=regime_rounds(regime, m, n, r, shards, tracking=tracks,
-                             recovery=recovery),
+                             recovery=recovery, tapped=tapped),
         grad_layout=_GRAD_LAYOUT[regime],
         state_layout=_STATE_LAYOUT[regime],
         schedule=_SCHEDULE[regime])
@@ -378,7 +432,7 @@ class Exec:
         """Execute round ``name`` on ``x`` — identity when the program
         does not declare it (or the program is unsharded)."""
         rnd = self.program.round(name)
-        if rnd is None or self.axis is None:
+        if rnd is None or rnd.kind == GRAD_FUSED or self.axis is None:
             return x
         import jax
 
@@ -423,7 +477,12 @@ NULL_EXEC = Exec(NULL_PROGRAM)
 
 
 def executor(program: StepProgram) -> Exec:
-    return NULL_EXEC if not program.axes else Exec(program)
+    # Unsharded programs usually share the null executor, but a program
+    # that declares rounds even at group 1 (grass gather, grad-fused
+    # taps) needs its own Exec so ``has()`` answers from ITS rounds.
+    if not program.axes and not program.rounds:
+        return NULL_EXEC
+    return Exec(program)
 
 
 # ---------------------------------------------------------------------------
@@ -432,9 +491,9 @@ def executor(program: StepProgram) -> Exec:
 
 
 def lower(program: StepProgram, fn: Callable, *, mesh, batch_dims: int,
-          with_param: bool) -> Callable:
-    """Turn the per-bucket stacked step ``fn(g, st[, p]) -> (delta, st')``
-    into the program's runner.
+          with_param: bool, with_tap: bool = False) -> Callable:
+    """Turn the per-bucket stacked step ``fn(g, st[, p][, tap]) ->
+    (delta, st')`` into the program's runner.
 
     Replicated programs return ``fn`` unchanged (plain jit path, GSPMD
     propagation).  Sharded programs wrap ``fn`` in ``shard_map`` with
@@ -443,7 +502,10 @@ def lower(program: StepProgram, fn: Callable, *, mesh, batch_dims: int,
     shards with the gradient rows, M/V follow ``state_layout`` ("column"
     and "slice" both shard the global (r, n) state arrays along n —
     the slice layout simply pairs that with a row-sharded gradient),
-    and ``lam_prev`` replicates.
+    and ``lam_prev`` replicates.  ``with_tap`` appends the grad-fused
+    (r+1, n) [A; colnorms] panel as the trailing argument; it shards
+    along n with the gradient columns (the tap is column-separable), so
+    inside the column regime each shard consumes exactly its slice.
     """
     if not program.axes:
         return fn
@@ -466,6 +528,8 @@ def lower(program: StepProgram, fn: Callable, *, mesh, batch_dims: int,
           "slice": P(*lead, None, ax)}[program.state_layout]
     stspec = MatrixOptState(S=s_spec, M=mv, V=mv, lam_prev=P(*lead))
     in_specs = (gspec, stspec) + ((gspec,) if with_param else ())
+    if with_tap:
+        in_specs = in_specs + (P(*lead, None, ax),)
     sharded = shard_map(fn, mesh=mesh, in_specs=in_specs,
                         out_specs=(gspec, stspec), check_rep=False)
     return sharded

@@ -19,6 +19,11 @@ Subspace refresh methods (config ``method``):
     "svd"        — GaLore / Fira periodic SVD re-initialization
     "random"     — GoLore-style random orthonormal refresh
     "osd"        — Online-Subspace-Descent-style Oja update + QR
+    "grass"      — Grass-style structured-sparse basis (arXiv:2406.17660):
+                   S selects the top-r gradient rows by row energy, so
+                   every projection S^T G is an (r, n) gather — the
+                   "grass" StepProgram regime with its local
+                   ``sel_gather`` round
     "none"       — freeze the warm-started subspace (ablation; also the
                    setting of convergence Theorem 3.2)
 
@@ -132,11 +137,21 @@ def _get_backend(cfg: LowRankConfig):
 
 def _plain_matrix_step(cfg: LowRankConfig, hp: AdamHP, G: Array,
                        st: MatrixOptState, step: Array, lr: Array,
-                       param: Optional[Array], out_dtype, exec=None):
+                       param: Optional[Array], out_dtype, exec=None,
+                       tap=None):
+    """``tap``, when given, is the grad-fused (r+1, n) [A; colnorms]
+    panel emitted by the backward pass (models.common.tapped_matmul):
+    rows [0:r] are the projection S^T G, row r the per-column ||G||^2 —
+    handed down as the precomputed pair so the step never re-reads the
+    full-width gradient for them."""
+    pp = pg = None
+    if tap is not None:
+        pp, pg = tap[:-1], tap[-1]
     out = lowrank_adam_step(G, st, step, hp, recovery=cfg.recovery,
                             backend=_get_backend(cfg), lr=lr,
                             weight_decay=cfg.weight_decay, param=param,
-                            out_dtype=out_dtype, exec=exec)
+                            out_dtype=out_dtype, exec=exec,
+                            precomputed_proj=pp, precomputed_gsq=pg)
     return out.delta, out.state
 
 
@@ -176,6 +191,15 @@ def _refresh_subspace(cfg: LowRankConfig, G: Array, st: MatrixOptState,
         return sub.refresh_svd(G, rank), None, None, None
     if cfg.method == "random":
         return sub.refresh_random(G, rank, step=step), None, None, None
+    if cfg.method == "grass":
+        # Grass (arXiv:2406.17660): S <- the top-r coordinate rows by
+        # gradient row energy — a structured-sparse one-hot selection
+        # (trivially orthonormal), so every subsequent projection is the
+        # program's ``sel_gather`` round instead of an MXU pass.
+        G32 = G.astype(jnp.float32)
+        _, idx = jax.lax.top_k(jnp.sum(G32 * G32, axis=1), rank)
+        return jax.nn.one_hot(idx, G.shape[0], dtype=jnp.float32).T, \
+            None, None, None
     if cfg.method == "osd":
         # Oja-style online PCA: S <- orth(S + lr * (I - SS^T) G G^T S)
         G32 = G.astype(jnp.float32)
@@ -246,8 +270,17 @@ def _tracking_matrix_step(cfg: LowRankConfig, hp: AdamHP, G: Array,
 
 
 def _warm_matrix_state(cfg: LowRankConfig, G: Array, st: MatrixOptState):
-    S0 = sub.init_subspace(G.astype(jnp.float32), st.S.shape[-1], cfg.init)
-    return st._replace(S=S0)
+    G32 = G.astype(jnp.float32)
+    rank = st.S.shape[-1]
+    if cfg.method == "grass":
+        # a one-hot selection basis from step 0: the grass program's
+        # gather assumes S is ALWAYS a row selection (argmax recovers
+        # the selected indices), so the dense SVD warm start would break
+        # the invariant
+        _, idx = jax.lax.top_k(jnp.sum(G32 * G32, axis=1), rank)
+        return st._replace(
+            S=jax.nn.one_hot(idx, G32.shape[0], dtype=jnp.float32).T)
+    return st._replace(S=sub.init_subspace(G32, rank, cfg.init))
 
 
 # ---------------------------------------------------------------------------
@@ -327,7 +360,7 @@ def lowrank_optimizer(cfg: LowRankConfig, *, mesh=None,
         return state._replace(inner=inner)
 
     def update(grads, state: OptState, params, lr,
-               do_subspace_update: bool = False):
+               do_subspace_update: bool = False, taps=None):
         """Returns (updates, new_state); updates are added to params.
 
         Low-rank leaves emit the *final-dtype* update directly from the
@@ -335,6 +368,17 @@ def lowrank_optimizer(cfg: LowRankConfig, *, mesh=None,
         in — no pytree-level (m, n) pass), and leaves with identical
         canonical (m, n, rank) and parameter dtype are stacked into one
         vmapped launch per step (``cfg.bucket_leaves``).
+
+        ``taps`` (optional) is a pytree mirroring ``grads`` whose leaves
+        are either None or the grad-fused (..., r+1, n) [A; colnorms]
+        panel the backward pass emitted for that leaf (canonical
+        orientation, stack dims matching the gradient's).  Tapped leaves
+        run solo with the ``grad-fused`` program: the plain step consumes
+        the precomputed projection + colnorms and only the recovery
+        residual pass touches full-width G.  Leaves whose program cannot
+        legally consume a tap (row regimes, tracking steps) silently
+        fall back to the untapped path — the tap is dropped, never
+        misused.
         """
         plans = plan_lib.make_plans(grads, cfg.rank, specs=param_specs)
         step = state.step
@@ -350,29 +394,31 @@ def lowrank_optimizer(cfg: LowRankConfig, *, mesh=None,
         bucket = (cfg.bucket_leaves if cfg.bucket_leaves is not None
                   else jax.device_count() == 1 or sharded_hotpath)
 
-        def leaf_program(plan):
+        def leaf_program(plan, tapped=False):
             """The leaf's StepProgram — every regime decision (column vs
-            row vs row-rs vs replicated, shardable refresh methods,
-            reorth routing) lives in ``program.build_program``; this
-            layer only lowers and runs what the program declares."""
+            row vs row-rs vs replicated vs grass, shardable refresh
+            methods, reorth routing, grad-fused tap consumption) lives in
+            ``program.build_program``; this layer only lowers and runs
+            what the program declares."""
             return program_lib.build_program(
                 plan, cfg, mesh if sharded_hotpath else None,
-                tracking=do_subspace_update)
+                tracking=do_subspace_update, tapped=tapped)
 
         def matrix_fn(out_dtype, exec):
             """Per-(m, n)-matrix step closure; ``p`` is threaded only when
-            weight decay needs it (it is DCE'd otherwise)."""
+            weight decay needs it (it is DCE'd otherwise), ``tap`` only
+            on grad-fused plain steps."""
             if do_subspace_update:
-                def base(G, s, p=None):
+                def base(G, s, p=None, tap=None):
                     return _tracking_matrix_step(cfg, hp, G, s, step, n_upd,
                                                  lr32, p, out_dtype, exec)
             else:
-                def base(G, s, p=None):
+                def base(G, s, p=None, tap=None):
                     return _plain_matrix_step(cfg, hp, G, s, step, lr32, p,
-                                              out_dtype, exec)
+                                              out_dtype, exec, tap)
             return base
 
-        def run_stacked(g2, st, p2, batch_dims, out_dtype, prog):
+        def run_stacked(g2, st, p2, batch_dims, out_dtype, prog, tap=None):
             """Run the matrix step over a (possibly stacked) canonical
             gradient; returns (delta_stacked, new_state_stacked).
 
@@ -386,26 +432,41 @@ def lowrank_optimizer(cfg: LowRankConfig, *, mesh=None,
             total_elems = int(np.prod(g2.shape)) // prog.shards
             exec = program_lib.executor(prog)
             base = matrix_fn(out_dtype, exec)
-            if cfg.weight_decay:
+            wd = bool(cfg.weight_decay)
+            if wd and tap is not None:
+                fn = plan_lib.map_rank(lambda G, s, p, t: base(G, s, p, t),
+                                       batch_dims, total_elems)
+                args = (g2, st, p2, tap)
+            elif wd:
                 fn = plan_lib.map_rank(lambda G, s, p: base(G, s, p),
                                        batch_dims, total_elems)
                 args = (g2, st, p2)
+            elif tap is not None:
+                fn = plan_lib.map_rank(lambda G, s, t: base(G, s, None, t),
+                                       batch_dims, total_elems)
+                args = (g2, st, tap)
             else:
                 fn = plan_lib.map_rank(lambda G, s: base(G, s),
                                        batch_dims, total_elems)
                 args = (g2, st)
             runner = program_lib.lower(prog, fn, mesh=mesh,
                                        batch_dims=batch_dims,
-                                       with_param=bool(cfg.weight_decay))
+                                       with_param=wd,
+                                       with_tap=tap is not None)
             return runner(*args)
 
-        def leaf_single(plan, g, st, p):
+        def leaf_single(plan, g, st, p, tap=None):
             """Unbucketed path: one launch for one leaf (original layout —
-            no extra reshapes, so sharded stacks keep their layout)."""
+            no extra reshapes, so sharded stacks keep their layout).
+            The tap is consumed only when the leaf's program declares the
+            ``grad_tap`` round (safe fallback otherwise)."""
+            prog = leaf_program(plan, tapped=tap is not None)
+            if prog.round("grad_tap") is None:
+                tap = None
             g2 = plan_lib.canonical_grad(g, plan)
             p2 = plan_lib.canonical_grad(p, plan) if cfg.weight_decay else None
             delta, new_st = run_stacked(g2, st, p2, plan.batch_dims, p.dtype,
-                                        leaf_program(plan))
+                                        prog, tap=tap)
             return plan_lib.uncanonical_update(delta, plan), new_st
 
         is_plan = lambda x: isinstance(x, plan_lib.ParamPlan)  # noqa: E731
@@ -414,6 +475,8 @@ def lowrank_optimizer(cfg: LowRankConfig, *, mesh=None,
         grad_leaves = treedef.flatten_up_to(grads)
         state_leaves = treedef.flatten_up_to(state.inner)
         param_leaves = treedef.flatten_up_to(params)
+        tap_leaves = (treedef.flatten_up_to(taps) if taps is not None
+                      else [None] * len(plan_leaves))
 
         updates_out: list = [None] * len(plan_leaves)
         states_out: list = [None] * len(plan_leaves)
@@ -436,14 +499,22 @@ def lowrank_optimizer(cfg: LowRankConfig, *, mesh=None,
                     # concatenating along a sharded stack axis would
                     # communicate — such leaves always run solo
                     key = key + ("solo", i)
+                elif tap_leaves[i] is not None and not do_subspace_update:
+                    # grad-fused leaves run solo: their program differs
+                    # from untapped same-shape siblings' (the grad_tap
+                    # round), and stacking would force every member of
+                    # the bucket onto one path
+                    key = key + ("tap", i)
                 buckets.setdefault(key, []).append(i)
 
         for key, idxs in buckets.items():
             if not bucket or len(idxs) == 1:
                 for i in idxs:
+                    tap = (tap_leaves[i]
+                           if not do_subspace_update else None)
                     updates_out[i], states_out[i] = leaf_single(
                         plan_leaves[i], grad_leaves[i], state_leaves[i],
-                        param_leaves[i])
+                        param_leaves[i], tap=tap)
                 continue
 
             # stack every member's matrices along one leading axis

@@ -94,6 +94,13 @@ BN = 256
 # taller matrices.
 MAX_FUSED_TANGENT_M = 2048
 
+# grad_tap keeps full-b (token-extent) x/dy panels resident per grid cell:
+# one (b, bm) + one (b, bn) fp32 panel is ~2 MB per 1024 tokens at the
+# default tiles, so cap the fused launch at b <= 2048 and let the dispatch
+# layer fall back to the two-launch dW-then-project_colnorms composite for
+# bigger microbatches.
+MAX_GRAD_TAP_B = 2048
+
 
 def _project_kernel(s_ref, g_ref, out_ref):
     """grid = (n/bn, m/bm); accumulate over the m (minor) grid axis."""
@@ -375,6 +382,69 @@ def project_tangent_colnorms(S: Array, G: Array, *, bn: int = BN,
         interpret=interpret,
     )(S, G)
     return A, sq.reshape(n), T
+
+
+def _grad_tap_kernel(x_ref, dy_ref, s_ref, dw_ref, a_ref, sq_ref):
+    """grid = (n/bn, m/bm); accumulate A and the column norms over the m
+    (minor) grid axis; each dW block is complete per visit because the
+    full b (token) extent of x/dy stays resident in VMEM."""
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        a_ref[...] = jnp.zeros_like(a_ref)
+        sq_ref[...] = jnp.zeros_like(sq_ref)
+
+    x = x_ref[...].astype(jnp.float32)              # (b, bm)
+    dy = dy_ref[...].astype(jnp.float32)            # (b, bn)
+    dw = jnp.dot(x.T, dy, preferred_element_type=jnp.float32)   # (bm, bn)
+    dw_ref[...] = dw
+    s = s_ref[...].astype(jnp.float32)              # (bm, r)
+    a_ref[...] += jnp.dot(s.T, dw, preferred_element_type=jnp.float32)
+    sq_ref[...] += jnp.sum(dw * dw, axis=0, keepdims=True)
+
+
+def grad_tap(x: Array, dy: Array, s: Array, *, bm: int = BM, bn: int = BN,
+             interpret: bool = False) -> tuple[Array, Array, Array]:
+    """Grad-fused backward epilogue: the weight cotangent dW = x^T dy plus
+    the optimizer's plain-step projection statistics A = S^T dW and the
+    per-column ||dW_:,j||^2, all from ONE launch — the backward matmul's
+    operands are streamed once and the (m, n) weight gradient is written
+    once, so the optimizer's plain step never has to re-read it to form A
+    (the custom-vjp wrapper in repro.models.common routes the statistics
+    out as the tap seed's cotangent).
+
+    x: (b, m) activations; dy: (b, n) output cotangent (any float dtype,
+    cast per tile); s: (m, r) basis -> ((m, n), (r, n), (n,)) all fp32.
+    Tiles: (bm, bn) dW blocks against full-b x/dy panels (callers must
+    respect ``MAX_GRAD_TAP_B``; the ops-layer dispatch does), with A and
+    the norms accumulated over the m grid axis exactly like
+    :func:`project_colnorms`.  Column-separable in n (dW, A and the norms
+    are all per-column), honouring the package's mesh-native contract.
+    Oracle: :func:`repro.kernels.ref.grad_tap_ref`.
+    """
+    b, m = x.shape
+    _, n = dy.shape
+    r = s.shape[1]
+    bm, bn = min(bm, m), min(bn, n)
+    dW, A, sq = pl.pallas_call(
+        _grad_tap_kernel,
+        grid=(n // bn, m // bm),
+        in_specs=[
+            pl.BlockSpec((b, bm), lambda j, i: (0, i)),
+            pl.BlockSpec((b, bn), lambda j, i: (0, j)),
+            pl.BlockSpec((bm, r), lambda j, i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda j, i: (i, j)),
+            pl.BlockSpec((r, bn), lambda j, i: (0, j)),
+            pl.BlockSpec((1, bn), lambda j, i: (0, j)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((m, n), jnp.float32),
+                   jax.ShapeDtypeStruct((r, n), jnp.float32),
+                   jax.ShapeDtypeStruct((1, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dy, s)
+    return dW, A, sq.reshape(n)
 
 
 def _tangent_gram_kernel(s_ref, t_ref, g_ref, tg_ref, st_ref, tt_ref,

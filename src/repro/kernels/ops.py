@@ -48,6 +48,7 @@ from __future__ import annotations
 import os
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels import grassmann, ref
 
@@ -160,6 +161,37 @@ def project_tangent_colnorms(S: Array, G: Array
     A, gsq = grassmann.project_colnorms(S, G, interpret=interp)
     T = grassmann.tangent(G, A, S, interpret=interp)
     return A, gsq, T
+
+
+def grad_tap(x: Array, dy: Array, s: Array
+             ) -> tuple[Array, Array, Array]:
+    """Grad-fused backward epilogue (dW = x^T dy, A = S^T dW, per-column
+    ||dW||^2) — one launch when the full-b panels fit VMEM
+    (b <= grassmann.MAX_GRAD_TAP_B), else the dW matmul followed by the
+    single-read :func:`project_colnorms` composite.  Kernel:
+    grassmann.grad_tap; oracle/fallback: ref.grad_tap_ref.
+
+    Column-separable in n: inside ``shard_map`` with dy (hence dW)
+    column-sharded and S replicated, the local launch's A/norms are
+    exactly the global statistics' column slice — no collective needed
+    beyond what the leaf's StepProgram already declares.
+    """
+    mode = _mode()
+    b, m = x.shape
+    n = dy.shape[1]
+    if mode == "ref":
+        return ref.grad_tap_ref(x, dy, s)
+    if not _tiles_ok((m, grassmann.BM), (n, grassmann.BN)) \
+            or b > grassmann.MAX_GRAD_TAP_B:
+        dw = jnp.dot(x.astype(jnp.float32).T, dy.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+        if not _tiles_ok((m, grassmann.BM), (n, grassmann.BN)):
+            A, gsq = ref.project_colnorms_ref(s, dw)
+        else:
+            A, gsq = grassmann.project_colnorms(
+                s, dw, interpret=(mode == "interpret"))
+        return dw, A, gsq
+    return grassmann.grad_tap(x, dy, s, interpret=(mode == "interpret"))
 
 
 def tangent_gram(S: Array, T: Array, G: Array

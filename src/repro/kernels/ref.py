@@ -117,6 +117,24 @@ def fused_update_ref(G: Array | None, S: Array, Gt: Array | None,
     return upd.astype(out_dtype or jnp.float32)
 
 
+def grad_tap_ref(x: Array, dy: Array, s: Array
+                 ) -> tuple[Array, Array, Array]:
+    """Backward-matmul epilogue tap: the weight gradient plus the
+    projection statistics the optimizer's plain step needs, from the same
+    logical pass over the backward operands.
+
+        dW  = x^T dy                      (the weight cotangent)
+        A   = S^T dW                      (Eq. 2-3 projection)
+        gsq = per-column ||dW_:,j||^2     (feeds phi / Eq. 12 and the
+                                           global grad norm)
+
+    x: (b, m) activations; dy: (b, n) output cotangent; s: (m, r) basis.
+    -> ((m, n), (r, n), (n,)) all fp32.
+    """
+    dW = x.astype(jnp.float32).T @ dy.astype(jnp.float32)
+    return dW, s.astype(jnp.float32).T @ dW, jnp.sum(dW * dW, axis=0)
+
+
 def adam_lowrank_ref(Gt: Array, M: Array, V: Array, step: Array,
                      beta1: float, beta2: float, eps: float,
                      bias_correction: bool = True

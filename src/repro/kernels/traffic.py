@@ -132,6 +132,77 @@ def fused_step_bytes(m: int, n: int, r: int, *, grad_bytes: int = F32,
     return HotPathTraffic("fused", mn, rn, mr, nb)
 
 
+def _tap_panel_bytes(m: int, n: int, r: int) -> int:
+    """One pass (write or read) over the stacked [A; ||G_:,j||^2] tap
+    panel, charged off the StepProgram's declared ``grad_tap`` round —
+    the byte model reads the payload shape from the same IR the runtime
+    lowers, so it can never drift from what the tapped backward emits."""
+    from repro.core.program import regime_rounds  # lazy: program builds
+    #                                               on this module's models
+
+    for rnd in regime_rounds("replicated", m, n, r, 1, tracking=False,
+                             tapped=True):
+        if rnd.name == "grad_tap":
+            return rnd.rows * rnd.cols * rnd.dtype_bytes
+    raise ValueError("replicated tapped program declares no grad_tap round")
+
+
+def gradfused_step_bytes(m: int, n: int, r: int, *, grad_bytes: int = F32,
+                         param_bytes: int = F32,
+                         recovery: bool = True) -> HotPathTraffic:
+    """Grad-fused plain step: the backward's tap epilogue emits the
+    stacked (r+1, n) [A = S^T G; per-column ||G||^2] panel while forming
+    dW, so the optimizer never runs a projection pass over the full-width
+    gradient.  Charged here is everything EXTRA beyond the vanilla
+    backward (which computes and writes dW either way): the tap panel
+    write + the S read inside the backward epilogue, then the optimizer's
+    consumption — adam_lowrank_norms straight off the tapped A (its Gt
+    read IS the tap read), and the fused_update epilogue.
+
+    ``recovery=True`` (Fira recovery scaling on): the epilogue still
+    needs one read of G for the residual Lam = phi * (G - S Gt) — 1 read
+    + 1 write on the (m, n) stream vs the current fused path's 2 + 1.
+
+    ``recovery=False``: the update is -lr * S Gt^O — NO pass over the
+    full-width gradient at all; the only (m, n) traffic left is the
+    update write, and fused_update drops its Gt panel read too."""
+    tap = _tap_panel_bytes(m, n, r)
+    mn = (
+        (m * n * grad_bytes if recovery else 0)  # G read by the epilogue
+        #                                          (residual pass only)
+        + m * n * param_bytes     # update write (final dtype, once)
+    )
+    rn = (
+        tap                       # tap panel write (backward epilogue)
+        + 6 * r * n * F32         # adam_lowrank_norms: 3 reads + 3 writes
+        #                           (the Gt read comes off the tap panel)
+        + (2 if recovery else 1) * r * n * F32  # fused_update reads Gto,
+        #                           plus Gt only for the residual
+    )
+    mr = (
+        m * r * F32               # S read by the backward tap epilogue
+        + m * r * F32             # S read by fused_update
+    )
+    nb = (6 if recovery else 2) * n * F32  # gsq (tapped) read + gtsq/gtosq
+    #                                        + phi write/read; recovery off
+    #                                        keeps only the tapped gsq row
+    return HotPathTraffic("gradfused", mn, rn, mr, nb)
+
+
+def gradfused_traffic_ratio(m: int, n: int, r: int, *,
+                            grad_bytes: int = F32, param_bytes: int = F32,
+                            recovery: bool = True) -> float:
+    """grad-fused / unfused total-byte ratio, same paper-literal
+    denominator as :func:`traffic_ratio` so the two are comparable.
+    Strictly below the fused ratio everywhere (it saves one full G read);
+    target <= 0.30 with recovery scaling off (zero mn reads remain)."""
+    gf = gradfused_step_bytes(m, n, r, grad_bytes=grad_bytes,
+                              param_bytes=param_bytes, recovery=recovery)
+    unfused = unfused_step_bytes(m, n, r, grad_bytes=grad_bytes,
+                                 param_bytes=param_bytes)
+    return gf.total / unfused.total
+
+
 def traffic_ratio(m: int, n: int, r: int, *, grad_bytes: int = F32,
                   param_bytes: int = F32) -> float:
     """fused / unfused total-byte ratio (< 1 is a win; target <= 0.5)."""

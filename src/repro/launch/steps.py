@@ -20,6 +20,7 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.lowrank_adam import MatrixOptState
 from repro.core.subtrack import GradientTransform, OptState
 from repro.models.api import ModelBundle
 
@@ -34,17 +35,74 @@ def global_norm(tree) -> jax.Array:
                         for x in jax.tree.leaves(tree)))
 
 
-def clip_by_global_norm(grads, max_norm: float):
-    norm = global_norm(grads)
+def clip_by_global_norm(grads, max_norm: float, taps=None):
+    """Global-norm clip.  ``taps`` (optional, a pytree mirroring ``grads``
+    with None at untapped leaves) lets grad-fused leaves contribute their
+    backward-pass per-column ||G||^2 row — ``sum(tap[-1]) == ||G||_F^2``
+    exactly — instead of a fresh full-width tree reduction; untapped
+    leaves fall back to the plain square-and-sum."""
+    if taps is None:
+        norm = global_norm(grads)
+    else:
+        gdef = jax.tree.structure(grads)
+        sq = jnp.zeros((), jnp.float32)
+        for g, t in zip(jax.tree.leaves(grads), gdef.flatten_up_to(taps)):
+            if t is None:
+                sq = sq + jnp.sum(jnp.square(g.astype(jnp.float32)))
+            else:
+                sq = sq + jnp.sum(t[..., -1, :])
+        norm = jnp.sqrt(sq)
     scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
     return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
                                    ).astype(g.dtype), grads), norm
 
 
+# ---------------------------------------------------------------------------
+# Grad-fused tap collection
+# ---------------------------------------------------------------------------
+#
+# The taggable matmul sites of the decoder family (repro.models.transformer):
+# per-layer attention / MLP projections plus the untied lm_head.  MLA
+# attention and MoE blocks have no taggable dense path — their sites are
+# simply absent, and the model falls back to vanilla matmuls there.
+
+
+def _tap_paths(cfg) -> list[tuple[str, ...]]:
+    paths: list[tuple[str, ...]] = []
+    if getattr(cfg, "attn_type", None) != "mla":
+        paths += [("layers", "attn", k) for k in ("wq", "wk", "wv", "wo")]
+    if getattr(cfg, "moe", None) is None:
+        paths += [("layers", "mlp", k) for k in ("w_gate", "w_up", "w_down")]
+    paths.append(("lm_head",))
+    return paths
+
+
+def _site_get(tree, path):
+    for k in path:
+        if not isinstance(tree, dict) or k not in tree:
+            return None
+        tree = tree[k]
+    return tree
+
+
+def _site_set(tree, path, val):
+    for k in path[:-1]:
+        tree = tree.setdefault(k, {})
+    tree[path[-1]] = val
+
+
+def _none_like(tree):
+    """Same nested-dict skeleton, every leaf None — the all-untapped taps
+    pytree the optimizer's flatten_up_to pairs with the gradients."""
+    if isinstance(tree, dict):
+        return {k: _none_like(v) for k, v in tree.items()}
+    return None
+
+
 def make_train_step(bundle: ModelBundle, optimizer: GradientTransform,
                     *, clip_norm: float = 1.0, accum: int = 1,
                     remat: str = "full", grad_shardings=None,
-                    accum_dtype=jnp.float32):
+                    accum_dtype=jnp.float32, grad_fused: bool = False):
     """Returns train_step(state, batch, lr, *, do_subspace_update) ->
     (state, metrics).  Donate ``state`` when jitting.
 
@@ -55,9 +113,25 @@ def make_train_step(bundle: ModelBundle, optimizer: GradientTransform,
     microbatch: 4x less gradient wire traffic (§Perf iteration 1).
     The fp32 accumulator carries the same sharding, so accumulation and
     the (sharded-state) optimizer add no further collectives.
+
+    ``grad_fused`` opts the k-1-of-k plain steps into the grad-fused
+    backward: the taggable matmuls run through
+    ``models.common.tapped_matmul``, whose custom vjp emits each leaf's
+    (r+1, n) [A = S^T G; per-column ||G||^2] panel WHILE forming the
+    weight cotangent, and the optimizer consumes the panel instead of
+    re-projecting the full-width gradient (the tapped colnorms also
+    serve the global-norm clip).  Safe fallbacks, all silent: gradient
+    accumulation (per-microbatch taps are not additive — sum_i ||G_i||^2
+    != ||sum_i G_i||^2), model families without ``loss_taps``, tracking
+    steps, untaggable leaves (embeddings, MoE banks, MLA attention), and
+    leaves whose StepProgram rejects the tap (row-sharded regimes) all
+    take the vanilla path.
     """
 
     loss_fn = functools.partial(bundle.loss, remat=remat)
+    use_taps = (grad_fused and accum == 1
+                and bundle.loss_taps is not None)
+    tap_paths = _tap_paths(bundle.cfg) if use_taps else []
 
     def _pin(grads):
         if grad_shardings is None:
@@ -92,13 +166,60 @@ def make_train_step(bundle: ModelBundle, optimizer: GradientTransform,
         metrics = jax.tree.map(lambda m: m[-1], metrics)
         return loss, metrics, grads
 
+    def tapped_grads(state: TrainState, batch):
+        """One backward over (params, seeds): the seeds' cotangents ARE
+        the per-leaf [A; colnorms] tap panels (see tapped_matmul)."""
+        sites = []
+        for path in tap_paths:
+            p = _site_get(state.params, path)
+            st = _site_get(state.opt.inner, path)
+            if p is None or not isinstance(st, MatrixOptState):
+                continue  # absent leaf (tied lm_head) or dense plan
+            sites.append((path, st.S, st.M.shape[-1]))
+        if not sites:
+            loss, metrics, grads = grads_of(state.params, batch)
+            return loss, metrics, grads, None
+
+        seeds: dict = {}
+        for path, S, n in sites:
+            r = S.shape[-1]
+            _site_set(seeds, path,
+                      jnp.zeros(S.shape[:-2] + (r + 1, n), jnp.float32))
+
+        def loss_with_taps(params, sd):
+            taps_in: dict = {}
+            for path, S, n in sites:
+                _site_set(taps_in, path, (S, _site_get(sd, path)))
+            return bundle.loss_taps(params, batch, taps_in, remat=remat)
+
+        (loss, metrics), (grads, tap_grads) = jax.value_and_grad(
+            loss_with_taps, argnums=(0, 1), has_aux=True)(
+                state.params, seeds)
+        taps = _none_like(state.params)
+        for path, S, n in sites:
+            _site_set(taps, path, _site_get(tap_grads, path))
+        return loss, metrics, _pin(grads), taps
+
     def train_step(state: TrainState, batch, lr,
                    *, do_subspace_update: bool = False):
-        loss, metrics, grads = accum_grads(state.params, batch)
-        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        taps = None
+        if use_taps and not do_subspace_update:
+            loss, metrics, grads, taps = tapped_grads(state, batch)
+        else:
+            loss, metrics, grads = accum_grads(state.params, batch)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm, taps=taps)
+        if taps is not None:
+            # the clip rescales G by s, so A scales by s and the squared
+            # column norms by s^2
+            s = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-12))
+            taps = jax.tree.map(
+                lambda t: jnp.concatenate(
+                    [t[..., :-1, :] * s, t[..., -1:, :] * (s * s)],
+                    axis=-2), taps)
+        opt_kw = {} if taps is None else {"taps": taps}
         updates, opt = optimizer.update(
             grads, state.opt, state.params, lr,
-            do_subspace_update=do_subspace_update)
+            do_subspace_update=do_subspace_update, **opt_kw)
         params = jax.tree.map(lambda p, u: p + u.astype(p.dtype),
                               state.params, updates)
         metrics = dict(metrics, loss=loss, grad_norm=gnorm, lr=lr)
@@ -109,13 +230,17 @@ def make_train_step(bundle: ModelBundle, optimizer: GradientTransform,
 
 def make_warm_start(bundle: ModelBundle, optimizer: GradientTransform,
                     remat: str = "full"):
-    """warm_start(state, batch) — installs S_0 from the first gradient."""
+    """warm_start(state, batch) -> (state, loss) — installs S_0 from the
+    first gradient and surfaces the warm-start loss (value_and_grad; the
+    old bare ``jax.grad`` discarded it, hiding divergent inits at
+    step 0)."""
     loss_fn = functools.partial(bundle.loss, remat=remat)
 
     def warm(state: TrainState, batch):
-        grads = jax.grad(lambda p: loss_fn(p, batch)[0])(state.params)
+        (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state.params, batch)
         return TrainState(params=state.params,
-                          opt=optimizer.warm_start(state.opt, grads))
+                          opt=optimizer.warm_start(state.opt, grads)), loss
 
     return warm
 

@@ -116,6 +116,14 @@ def train(argv=None) -> dict:
     ap.add_argument("--eta", type=float, default=10.0)
     ap.add_argument("--metrics-out", default="")
     ap.add_argument("--use-kernels", action="store_true")
+    ap.add_argument("--grad-fused", action="store_true",
+                    help="emit each taggable leaf's [A = S^T G; colnorms] "
+                         "panel from the backward pass (custom-vjp matmul "
+                         "tap) and let the optimizer's plain steps consume "
+                         "it instead of re-reading the full-width gradient; "
+                         "silently falls back for untaggable leaves "
+                         "(embeddings, MoE/MLA blocks), model families "
+                         "without taps, accum > 1, and tracking steps")
     ap.add_argument("--hotpath-layout", default="auto",
                     choices=["auto", "column", "row", "row-rs", "off"],
                     help="mesh-native fused-optimizer layout: auto picks "
@@ -193,9 +201,25 @@ def train(argv=None) -> dict:
             params = jax.device_put(params, hot_shardings)
         state = TrainState(params=params, opt=optimizer.init(params))
 
+        grad_fused = bool(args.grad_fused)
+        if grad_fused and args.optimizer in ("adamw", "badam"):
+            grad_fused = False  # dense baselines have no projection to tap
+        if grad_fused and (bundle.loss_taps is None or args.accum > 1):
+            print("[train] --grad-fused requested but "
+                  + ("this model family exposes no taggable matmuls"
+                     if bundle.loss_taps is None
+                     else "gradient accumulation is on (taps are not "
+                          "additive across microbatches)")
+                  + " — falling back to the plain backward", flush=True)
+            grad_fused = False
+        if grad_fused:
+            print("[train] grad-fused backward: taggable leaves emit "
+                  "[A; colnorms] from the weight-cotangent epilogue; "
+                  "plain optimizer steps skip their projection read of G",
+                  flush=True)
         train_step = make_train_step(
             bundle, optimizer, accum=args.accum, remat=args.remat,
-            grad_shardings=hot_shardings)
+            grad_shardings=hot_shardings, grad_fused=grad_fused)
         jit_step = jax.jit(train_step, static_argnames=("do_subspace_update",),
                            donate_argnums=(0,))
         warm = jax.jit(make_warm_start(bundle, optimizer, remat=args.remat))
@@ -218,9 +242,9 @@ def train(argv=None) -> dict:
 
         if start_step == 0 and args.optimizer not in ("adamw", "badam"):
             batch0 = batch_for_model(cfg, None, data, 0)
-            state = warm(state, batch0)
-            print("[train] warm-started subspaces from step-0 gradients",
-                  flush=True)
+            state, warm_loss = warm(state, batch0)
+            print(f"[train] warm-started subspaces from step-0 gradients "
+                  f"(loss {float(warm_loss):.4f})", flush=True)
 
         # Pipelined host loop: dispatch step t, prefetch batch t+1 while
         # the device computes, and only then drain step t-1's metrics —

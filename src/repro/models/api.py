@@ -52,6 +52,10 @@ class ModelBundle:
     decode_step: Callable[..., Any]            # (params, cache, token) -> (logits, cache)
     init_cache: Callable[..., Any]             # (params?, batch, max_len) -> cache
     input_specs: Callable[..., Any]            # (shape) -> batch pytree of SDS
+    # (params, batch, taps, remat) -> (loss, metrics), with ``taps`` the
+    # grad-fused (S, seed) pytree of repro.models.transformer.decoder_loss.
+    # None for families without taggable matmuls — --grad-fused falls back.
+    loss_taps: Callable[..., Any] | None = None
 
 
 def _sds(shape, dtype):
@@ -61,6 +65,9 @@ def _sds(shape, dtype):
 def _decoder_bundle(cfg: ModelConfig) -> ModelBundle:
     def loss(params, batch, remat="full"):
         return transformer.decoder_loss(params, batch, cfg, remat)
+
+    def loss_taps(params, batch, taps, remat="full"):
+        return transformer.decoder_loss(params, batch, cfg, remat, taps)
 
     def prefill(params, batch, max_len):
         extras = {k: v for k, v in batch.items() if k != "tokens"}
@@ -95,7 +102,8 @@ def _decoder_bundle(cfg: ModelConfig) -> ModelBundle:
     return ModelBundle(cfg=cfg,
                        init=lambda key: transformer.init_decoder(key, cfg),
                        loss=loss, prefill=prefill, decode_step=decode_step,
-                       init_cache=init_cache, input_specs=input_specs)
+                       init_cache=init_cache, input_specs=input_specs,
+                       loss_taps=loss_taps)
 
 
 def _zamba_bundle(cfg: ModelConfig) -> ModelBundle:

@@ -49,6 +49,76 @@ def key_iter(key):
 
 
 # ---------------------------------------------------------------------------
+# Grad-fused matmul tap
+# ---------------------------------------------------------------------------
+#
+# ``tapped_matmul(x, w, s, seed)`` computes exactly ``x @ w`` forward, but
+# its custom backward runs the grad_tap epilogue (repro.kernels.ops) that
+# emits A = S^T dW and the per-column ||dW||^2 *while* forming the weight
+# cotangent — and smuggles them out of the backward pass as the cotangent
+# of ``seed``, a zero (r+1, n) fp32 array whose gradient is mathematically
+# zero.  ``jax.value_and_grad(loss, argnums=(params, seeds))`` therefore
+# returns the taps alongside the gradients from a single backward, and the
+# optimizer's plain step consumes them without ever re-reading the
+# full-width gradient.  With no tap (the plain ``x @ w`` call sites) the
+# model is bit-exactly unchanged.
+
+
+def tap_seed(rank: int, n: int) -> Array:
+    """The zero (rank+1, n) fp32 seed whose backward cotangent carries the
+    tap: rows [0:rank] are A = S^T G, row rank is the per-column ||G||^2
+    (canonical orientation — n is the leaf's canonical trailing dim)."""
+    return jnp.zeros((rank + 1, n), jnp.float32)
+
+
+@jax.custom_vjp
+def tapped_matmul(x: Array, w: Array, s: Array, seed: Array) -> Array:
+    """``x @ w`` whose backward also emits the SubTrack projection tap.
+
+    x: (..., a); w: (a, b); s: the leaf's (m, r) basis in CANONICAL
+    orientation (m = min-side per repro.core.plan — ``s.shape[0]`` picks
+    whether dW or dW^T is projected); seed: ``tap_seed(r, n)``.
+    """
+    return x @ w
+
+
+def _tapped_matmul_fwd(x, w, s, seed):
+    return x @ w, (x, w, s)
+
+
+def _tapped_matmul_bwd(res, dy):
+    from repro.kernels import ops  # deferred: kernels -> models is acyclic
+
+    x, w, s = res
+    dx = dy @ w.T
+    x2 = x.reshape(-1, x.shape[-1])
+    dy2 = dy.reshape(-1, dy.shape[-1])
+    if s.shape[0] == w.shape[0]:
+        # canonical orientation: G = dW (m, n) = (a, b)
+        dw, A, gsq = ops.grad_tap(x2, dy2, s)
+    else:
+        # transposed plan: G = dW^T (b, a) — swap the operands so the
+        # epilogue streams the canonical orientation directly
+        dwT, A, gsq = ops.grad_tap(dy2, x2, s)
+        dw = dwT.T
+    tap = jnp.concatenate([A, gsq[None, :]], axis=0)
+    return (dx, dw.astype(w.dtype), jnp.zeros_like(s),
+            tap.astype(jnp.float32))
+
+
+tapped_matmul.defvjp(_tapped_matmul_fwd, _tapped_matmul_bwd)
+
+
+def maybe_tapped_matmul(x: Array, w: Array, tap) -> Array:
+    """``x @ w``, grad-fused when ``tap`` is an (s, seed) pair, vanilla
+    (bit-exact) when ``tap`` is None."""
+    if tap is None:
+        return x @ w
+    s, seed = tap
+    return tapped_matmul(x, w, s, seed)
+
+
+# ---------------------------------------------------------------------------
 # Norms / activations
 # ---------------------------------------------------------------------------
 

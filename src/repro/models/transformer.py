@@ -33,6 +33,7 @@ from repro.models.common import (
     dense_init,
     embed_init,
     key_iter,
+    maybe_tapped_matmul,
     rms_norm,
     shift_labels,
     softcap,
@@ -159,12 +160,13 @@ def _rope_q_k(cfg: ModelConfig, q, k, positions, extras):
 
 
 def gqa_block(x, p, cfg: ModelConfig, positions, window, extras,
-              ctx: MeshContext):
+              ctx: MeshContext, taps=None):
     B, S, d = x.shape
     hd = cfg.hd
-    q = x @ p["wq"]
-    k = x @ p["wk"]
-    v = x @ p["wv"]
+    taps = taps or {}
+    q = maybe_tapped_matmul(x, p["wq"], taps.get("wq"))
+    k = maybe_tapped_matmul(x, p["wk"], taps.get("wk"))
+    v = maybe_tapped_matmul(x, p["wv"], taps.get("wv"))
     if cfg.qkv_bias:
         q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
     q = q.reshape(B, S, cfg.n_heads, hd)
@@ -177,7 +179,7 @@ def gqa_block(x, p, cfg: ModelConfig, positions, window, extras,
         q, k, v, causal=True, window=window, softcap=cfg.attn_softcap,
         q_block=cfg.q_block, kv_block=cfg.kv_block)
     out = out.reshape(B, S, cfg.n_heads * hd)
-    return out @ p["wo"], (k, v)
+    return maybe_tapped_matmul(out, p["wo"], taps.get("wo")), (k, v)
 
 
 def mla_block(x, p, cfg: ModelConfig, positions, extras, ctx: MeshContext):
@@ -199,14 +201,17 @@ def mla_block(x, p, cfg: ModelConfig, positions, extras, ctx: MeshContext):
 
 
 def mlp_block(x, p, cfg: ModelConfig, ctx: MeshContext,
-              serving: bool = False):
+              serving: bool = False, taps=None):
     """Dense SwiGLU (or GeGLU for softcap/gemma2 configs) or MoE."""
     if cfg.moe is not None:
         return moe_lib.moe_layer(x, p, cfg.moe, ctx, serving=serving)
+    taps = taps or {}
     act = jax.nn.gelu if cfg.attn_softcap else jax.nn.silu
-    h = act(x @ p["w_gate"]) * (x @ p["w_up"])
+    h = (act(maybe_tapped_matmul(x, p["w_gate"], taps.get("w_gate")))
+         * maybe_tapped_matmul(x, p["w_up"], taps.get("w_up")))
     h = shard(h, ctx.batch_axes, None, ctx.model_axis)
-    return h @ p["w_down"], jnp.zeros((), jnp.float32)
+    return (maybe_tapped_matmul(h, p["w_down"], taps.get("w_down")),
+            jnp.zeros((), jnp.float32))
 
 
 # ---------------------------------------------------------------------------
@@ -231,17 +236,28 @@ def _embed(params, tokens, cfg: ModelConfig, extras) -> Array:
     return x
 
 
-def _logits(params, x, cfg: ModelConfig) -> Array:
+def _logits(params, x, cfg: ModelConfig, tap=None) -> Array:
     head = params.get("lm_head")
     if head is None:
-        head = params["embed"].T
-    logits = x @ head
+        # tied embeddings: the head is embed.T, not a taggable leaf
+        logits = x @ params["embed"].T
+    else:
+        logits = maybe_tapped_matmul(x, head, tap)
     return softcap(logits, cfg.final_softcap)
 
 
 def decoder_forward(params, tokens, cfg: ModelConfig, extras=None,
-                    remat: str = "full") -> tuple[Array, Array]:
-    """Full-sequence forward; returns (logits (B,S,Vp), aux_loss ())."""
+                    remat: str = "full", taps=None) -> tuple[Array, Array]:
+    """Full-sequence forward; returns (logits (B,S,Vp), aux_loss ()).
+
+    ``taps`` (optional) is a nested dict mirroring the taggable subset of
+    ``params`` — ``{"layers": {"attn": {"wq": (S, seed), ...}, "mlp":
+    {...}}, "lm_head": (S, seed)}`` with layer entries stacked on the
+    scan axis — routing those matmuls through
+    :func:`repro.models.common.tapped_matmul` so their backward emits the
+    SubTrack projection statistics as the seeds' cotangents.  ``None``
+    (the default) leaves the forward/backward bit-exactly unchanged.
+    """
     extras = extras or {}
     ctx = get_mesh_context()
     B, S = tokens.shape
@@ -249,21 +265,23 @@ def decoder_forward(params, tokens, cfg: ModelConfig, extras=None,
     seq_ax = ctx.model_axis if cfg.seq_shard_residual else None
     x = _embed(params, tokens, cfg, extras)
     x = shard(x, ctx.batch_axes, seq_ax, None)
+    layer_taps = (taps or {}).get("layers", {})
 
     def block(carry, layer):
         x, aux = carry
-        p, is_local = layer
+        p, is_local, lt = layer
         h = rms_norm(x, p["ln1"], cfg.norm_eps)
         if cfg.attn_type == "mla":
             a, _ = mla_block(h, p["attn"], cfg, positions, extras, ctx)
         else:
             a, _ = gqa_block(h, p["attn"], cfg, positions,
-                             _layer_window(cfg, is_local), extras, ctx)
+                             _layer_window(cfg, is_local), extras, ctx,
+                             taps=lt.get("attn"))
         if "ln1_post" in p:
             a = rms_norm(a, p["ln1_post"], cfg.norm_eps)
         x = x + a
         h = rms_norm(x, p["ln2"], cfg.norm_eps)
-        f, aux_l = mlp_block(h, p["mlp"], cfg, ctx)
+        f, aux_l = mlp_block(h, p["mlp"], cfg, ctx, taps=lt.get("mlp"))
         if "ln2_post" in p:
             f = rms_norm(f, p["ln2_post"], cfg.norm_eps)
         x = x + f
@@ -276,19 +294,20 @@ def decoder_forward(params, tokens, cfg: ModelConfig, extras=None,
         recompute from re-running forward collectives (§Perf it6 —
         Megatron-selective-remat analogue)."""
         x, aux = carry
-        p, is_local = layer
+        p, is_local, lt = layer
         h = rms_norm(x, p["ln1"], cfg.norm_eps)
         if cfg.attn_type == "mla":
             a, _ = mla_block(h, p["attn"], cfg, positions, extras, ctx)
         else:
             a, _ = gqa_block(h, p["attn"], cfg, positions,
-                             _layer_window(cfg, is_local), extras, ctx)
+                             _layer_window(cfg, is_local), extras, ctx,
+                             taps=lt.get("attn"))
         if "ln1_post" in p:
             a = rms_norm(a, p["ln1_post"], cfg.norm_eps)
         a = jax.ad_checkpoint.checkpoint_name(a, "block_attn_out")
         x = x + a
         h = rms_norm(x, p["ln2"], cfg.norm_eps)
-        f, aux_l = mlp_block(h, p["mlp"], cfg, ctx)
+        f, aux_l = mlp_block(h, p["mlp"], cfg, ctx, taps=lt.get("mlp"))
         if "ln2_post" in p:
             f = rms_norm(f, p["ln2_post"], cfg.norm_eps)
         f = jax.ad_checkpoint.checkpoint_name(f, "block_mlp_out")
@@ -310,15 +329,16 @@ def decoder_forward(params, tokens, cfg: ModelConfig, extras=None,
 
     (x, aux), _ = jax.lax.scan(
         block, (x, jnp.zeros((), jnp.float32)),
-        (params["layers"], _local_flags(cfg)))
+        (params["layers"], _local_flags(cfg), layer_taps))
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    return _logits(params, x, cfg), aux
+    return _logits(params, x, cfg, (taps or {}).get("lm_head")), aux
 
 
-def decoder_loss(params, batch, cfg: ModelConfig, remat: str = "full"):
+def decoder_loss(params, batch, cfg: ModelConfig, remat: str = "full",
+                 taps=None):
     tokens = batch["tokens"]
     extras = {k: v for k, v in batch.items() if k != "tokens"}
-    logits, aux = decoder_forward(params, tokens, cfg, extras, remat)
+    logits, aux = decoder_forward(params, tokens, cfg, extras, remat, taps)
     labels, mask = shift_labels(tokens)
     loss = cross_entropy(logits, labels, mask, cfg.vocab_size)
     return loss + aux, {"ce_loss": loss, "aux_loss": aux}

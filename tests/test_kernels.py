@@ -201,6 +201,44 @@ class TestFusedHotPath:
         assert abs(got - want) < 1e-4 * max(want, 1e-9)
 
 
+@pytest.mark.parametrize("m,n,r", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+class TestGradTap:
+    """The grad-fused backward epilogue: dW = x^T dy plus A = S^T dW and
+    per-column ||dW||^2 from one launch (vs the ref oracle, and vs the
+    project_colnorms composition on the emitted dW)."""
+
+    B = 128
+
+    def _tap_inputs(self, m, n, r, dtype, seed=11):
+        key = jax.random.PRNGKey(seed)
+        k1, k2, k3 = jax.random.split(key, 3)
+        x = jax.random.normal(k1, (self.B, m), dtype)
+        dy = jax.random.normal(k2, (self.B, n), dtype)
+        S = jnp.linalg.qr(jax.random.normal(k3, (m, r), jnp.float32))[0]
+        return x, dy, S
+
+    def test_grad_tap_vs_ref(self, m, n, r, dtype):
+        x, dy, S = self._tap_inputs(m, n, r, dtype)
+        dW, A, sq = grassmann.grad_tap(x, dy, S, interpret=True)
+        dW_w, A_w, sq_w = ref.grad_tap_ref(x, dy, S)
+        tol = 1e-5 if dtype == jnp.float32 else 2e-2
+        assert dW.dtype == A.dtype == sq.dtype == jnp.float32
+        assert _rel(dW, dW_w) < tol
+        assert _rel(A, A_w) < tol
+        assert _rel(sq, sq_w) < tol
+
+    def test_tap_statistics_match_projection_of_emitted_dw(self, m, n, r,
+                                                           dtype):
+        """The tap's A/norms must be the statistics OF the dW it emits —
+        the optimizer consumes them in place of re-projecting it."""
+        x, dy, S = self._tap_inputs(m, n, r, dtype)
+        dW, A, sq = grassmann.grad_tap(x, dy, S, interpret=True)
+        A2, sq2 = ref.project_colnorms_ref(S, dW)
+        assert _rel(A, A2) < 1e-5
+        assert _rel(sq, sq2) < 1e-5
+
+
 @pytest.mark.parametrize("r,n", [(128, 512), (256, 1024), (512, 2048)])
 @pytest.mark.parametrize("step", [0, 7, 1000])
 def test_adam_lowrank_norms(r, n, step):

@@ -20,6 +20,7 @@ regime of the StepProgram IR (column / row / row-rs):
   changing results, in every regime.
 """
 
+import dataclasses
 import functools
 
 import jax
@@ -574,6 +575,224 @@ class TestRowReduceScatter:
         prog_odd = program_lib.build_program(plan_odd, cfg, mesh,
                                              tracking=False)
         assert prog_odd.regime == "row"
+
+
+# ---------------------------------------------------------------------------
+# Grad-fused backward (the tapped custom-vjp path)
+# ---------------------------------------------------------------------------
+
+
+def _gf_setup():
+    """Tiny fp32 decoder + subtrack optimizer + warm-started state.
+    fp32 keeps the tap-vs-reproject comparison inside the 1e-5 plain
+    budget (under bf16 the tap is the MORE accurate side: it projects
+    the fp32 products before the gradient is rounded to bf16)."""
+    from repro.configs.registry import get_config
+    from repro.core.api import get_optimizer
+    from repro.data.pipeline import DataConfig, SyntheticLMDataset
+    from repro.launch.steps import TrainState, make_warm_start
+    from repro.models.api import build_model
+
+    cfg = dataclasses.replace(get_config("llama-100m", smoke=True),
+                              dtype="float32")
+    bundle = build_model(cfg)
+    data = SyntheticLMDataset(DataConfig(vocab_size=cfg.vocab_size,
+                                         seq_len=32, global_batch=4,
+                                         seed=0))
+    opt = get_optimizer("subtrack", rank=8, update_interval=4,
+                        use_kernels=True)
+    params = bundle.init(jax.random.PRNGKey(0))
+    state = TrainState(params=params, opt=opt.init(params))
+    state, _ = jax.jit(make_warm_start(bundle, opt))(
+        state, data.global_batch_at(0))
+    return bundle, data, opt, state
+
+
+@pytest.fixture(scope="module")
+def gf():
+    return _gf_setup()
+
+
+class TestGradFused:
+    """The tentpole contract: the tapped backward changes WHAT the
+    optimizer reads, never what the model computes — tap-off is
+    bit-exact, tap-on gradients match vanilla, the emitted panels are
+    the projection statistics, and a 10-step grad-fused train loop
+    tracks the plain-fused one within the PR 1 budgets."""
+
+    def test_tap_off_bit_exact(self, gf):
+        """loss_taps with every site untapped IS the vanilla backward —
+        gradients bitwise identical (the custom vjp only reroutes dW
+        through ops.grad_tap when a (S, seed) pair is present)."""
+        bundle, data, opt, state = gf
+        batch = data.global_batch_at(1)
+        _, g_plain = jax.value_and_grad(bundle.loss, has_aux=True)(
+            state.params, batch)
+        _, g_tapless = jax.value_and_grad(
+            lambda p, b: bundle.loss_taps(p, b, None), has_aux=True)(
+            state.params, batch)
+        for a, b in zip(jax.tree.leaves(g_plain),
+                        jax.tree.leaves(g_tapless)):
+            assert bool(jnp.all(a == b))
+
+    def test_tapped_backward_grads_and_panels(self, gf):
+        """Tap-on: parameter gradients still match the vanilla backward,
+        and each seed cotangent is exactly [S^T G; per-column ||G||^2]
+        of the gradient the same backward produced."""
+        from repro.launch.steps import _site_get, _tap_paths
+
+        bundle, data, opt, state = gf
+        batch = data.global_batch_at(1)
+        _, g_plain = jax.value_and_grad(bundle.loss, has_aux=True)(
+            state.params, batch)
+
+        sites = []
+        for path in _tap_paths(bundle.cfg):
+            st = _site_get(state.opt.inner, path)
+            if _site_get(state.params, path) is None \
+                    or not hasattr(st, "S"):
+                continue
+            sites.append((path, st.S, st.M.shape[-1]))
+        assert len(sites) >= 3  # attn + mlp + lm_head families present
+
+        def loss_with_taps(params, seeds):
+            taps_in: dict = {}
+            for i, (path, S, n) in enumerate(sites):
+                cur = taps_in
+                for k2 in path[:-1]:
+                    cur = cur.setdefault(k2, {})
+                cur[path[-1]] = (S, seeds[i])
+            return bundle.loss_taps(params, batch, taps_in)
+
+        seeds = [jnp.zeros(S.shape[:-2] + (S.shape[-1] + 1, n),
+                           jnp.float32) for _, S, n in sites]
+        _, (grads, tap_grads) = jax.value_and_grad(
+            loss_with_taps, argnums=(0, 1), has_aux=True)(
+            state.params, seeds)
+
+        for a, b in zip(jax.tree.leaves(g_plain), jax.tree.leaves(grads)):
+            rel = float(jnp.max(jnp.abs(a - b))
+                        / (jnp.max(jnp.abs(a)) + 1e-12))
+            assert rel < 1e-6, rel
+
+        for (path, S, n), tap in zip(sites, tap_grads):
+            G = _site_get(grads, path).astype(jnp.float32)
+            # canonical orientation: S spans the G dim matching S's rows
+            if S.shape[-2] != G.shape[-2]:
+                G = jnp.swapaxes(G, -1, -2)
+            A_want = jnp.einsum("...mr,...mn->...rn", S, G)
+            gsq_want = jnp.sum(G * G, axis=-2)
+            scale = float(jnp.max(jnp.abs(A_want))) + 1e-12
+            assert float(jnp.max(jnp.abs(tap[..., :-1, :] - A_want))) \
+                < 1e-5 * scale, path
+            assert float(jnp.max(jnp.abs(tap[..., -1, :] - gsq_want))) \
+                < 1e-5 * (float(jnp.max(gsq_want)) + 1e-12), path
+
+    def test_train_step_agreement_loop(self, gf):
+        """10 steps, subspace updates at 4 and 8: the grad-fused step
+        (taps feed the clip AND the optimizer) vs the plain fused step,
+        per-step from a shared evolving state — PR 1 budgets (1e-5
+        plain / 1e-3 after the SVD-sensitive tracking refresh)."""
+        from repro.launch.steps import make_train_step
+
+        bundle, data, opt, state = gf
+        # large clip_norm: scale == 1.0 exactly, so the comparison
+        # isolates the tap (clip interaction is covered below)
+        step_plain = jax.jit(make_train_step(bundle, opt, clip_norm=1e9),
+                             static_argnames=("do_subspace_update",))
+        step_gf = jax.jit(make_train_step(bundle, opt, clip_norm=1e9,
+                                          grad_fused=True),
+                          static_argnames=("do_subspace_update",))
+        tracked = False
+        for s in range(10):
+            do = s > 0 and s % 4 == 0
+            batch = data.global_batch_at(s)
+            sa, ma = step_plain(state, batch, jnp.float32(1e-3),
+                                do_subspace_update=do)
+            sb, mb = step_gf(state, batch, jnp.float32(1e-3),
+                             do_subspace_update=do)
+            budget = 1e-3 if tracked else 1e-5
+            tracked = tracked or do
+            assert abs(float(ma["grad_norm"]) - float(mb["grad_norm"])) \
+                < budget * (float(ma["grad_norm"]) + 1e-12)
+            for a, b in zip(jax.tree.leaves(sa.params),
+                            jax.tree.leaves(sb.params)):
+                rel = float(jnp.max(jnp.abs(a - b))
+                            / (jnp.max(jnp.abs(a)) + 1e-12))
+                assert rel < budget, (s, rel)
+            state = sa
+
+    def test_clip_active_agreement(self, gf):
+        """With the global-norm clip actually firing, the tapped colnorm
+        reduction and the tap rescale (A * s, gsq * s^2) keep the two
+        paths within the plain budget for one step."""
+        from repro.launch.steps import make_train_step
+
+        bundle, data, opt, state = gf
+        batch = data.global_batch_at(2)
+        sa, ma = jax.jit(make_train_step(bundle, opt, clip_norm=0.5))(
+            state, batch, jnp.float32(1e-3))
+        sb, mb = jax.jit(make_train_step(bundle, opt, clip_norm=0.5,
+                                         grad_fused=True))(
+            state, batch, jnp.float32(1e-3))
+        assert float(ma["grad_norm"]) > 0.5  # the clip really fired
+        rel_n = abs(float(ma["grad_norm"]) - float(mb["grad_norm"])) \
+            / float(ma["grad_norm"])
+        assert rel_n < 1e-5, rel_n
+        for a, b in zip(jax.tree.leaves(sa.params),
+                        jax.tree.leaves(sb.params)):
+            rel = float(jnp.max(jnp.abs(a - b))
+                        / (jnp.max(jnp.abs(a)) + 1e-12))
+            assert rel < 1e-5, rel
+
+    def test_accum_falls_back_identically(self, gf):
+        """Gradient accumulation disables the tap (per-microbatch
+        colnorms are not additive): grad_fused=True with accum=2 must be
+        the SAME function as grad_fused=False — outputs bitwise equal."""
+        from repro.launch.steps import make_train_step
+
+        bundle, data, opt, state = gf
+        batch = data.global_batch_at(3)
+        sa, ma = jax.jit(make_train_step(bundle, opt, accum=2))(
+            state, batch, jnp.float32(1e-3))
+        sb, mb = jax.jit(make_train_step(bundle, opt, accum=2,
+                                         grad_fused=True))(
+            state, batch, jnp.float32(1e-3))
+        assert float(ma["loss"]) == float(mb["loss"])
+        for a, b in zip(jax.tree.leaves(sa.params),
+                        jax.tree.leaves(sb.params)):
+            assert bool(jnp.all(a == b))
+
+    def test_taps_through_column_shard_map(self, mesh):
+        """The tap rides the column regime's shard_map program: feeding
+        the exact [A; colnorms] panel through opt.update(taps=) on an
+        8-way column-sharded leaf reproduces the replicated untapped
+        step within the plain budget (the lowering splits the tap over
+        n; untapped leaves in the same tree fall back silently)."""
+        key = jax.random.PRNGKey(30)
+        params = _params(key)
+        opt_rep, opt_shd = _optimizers(mesh)
+        state = opt_rep.init(params)
+        state = opt_rep.warm_start(state, _grad_at(key, params, 0))
+        shardings = {k: NamedSharding(mesh, s) for k, s in SPECS.items()}
+        g = _grad_at(key, params, 1)
+        S = state.inner["w"].S
+        tap_w = jnp.concatenate(
+            [S.T @ g["w"], jnp.sum(g["w"] * g["w"], axis=0)[None]], axis=0)
+        taps = {"w": tap_w, "layers": None, "b": None}
+        with mesh:
+            u_r, _ = jax.jit(opt_rep.update)(g, state, params,
+                                             jnp.float32(0.03))
+            u_s, _ = jax.jit(opt_shd.update)(
+                jax.device_put(g, shardings), state,
+                jax.device_put(params, shardings), jnp.float32(0.03),
+                taps=jax.device_put(
+                    taps, {"w": NamedSharding(mesh, P(None, "x")),
+                           "layers": None, "b": None}))
+        for k in ("w", "layers"):
+            rel = float(jnp.max(jnp.abs(u_r[k] - u_s[k]))
+                        / (jnp.max(jnp.abs(u_r[k])) + 1e-12))
+            assert rel < 1e-5, (k, rel)
 
 
 class TestRowShardedPlans:

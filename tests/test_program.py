@@ -16,9 +16,9 @@ from jax.sharding import AbstractMesh, PartitionSpec as P
 
 from repro.core import plan as plan_lib
 from repro.core import program as program_lib
-from repro.core.program import (ALL_GATHER, ALL_REDUCE, REDUCE_SCATTER,
-                                CollectiveRound, build_program,
-                                regime_rounds)
+from repro.core.program import (ALL_GATHER, ALL_REDUCE, GRAD_FUSED,
+                                REDUCE_SCATTER, CollectiveRound,
+                                build_program, regime_rounds)
 from repro.core.subtrack import LowRankConfig
 from repro.kernels import traffic
 
@@ -197,6 +197,105 @@ class TestBuildProgram:
         prog = build_program(COL, CFG, None, tracking=True)
         assert prog.rounds == () and prog.shards == 1
         assert prog.collective_wire_bytes() == 0
+
+
+class TestGradFusedRounds:
+    """The grad-fused tap is a LOCAL round: it rides in the IR (one
+    declaration for the runtime, the byte model and the tools) but
+    lowers to no HLO collective, so every golden count — and with it
+    the test_mesh_fused HLO weld — is untouched by ``tapped=True``."""
+
+    def test_regime_rounds_tap(self):
+        assert regime_rounds("replicated", M, N, RANK, 1, tracking=False,
+                             tapped=True) == (
+            CollectiveRound("grad_tap", GRAD_FUSED, RANK + 1, N),)
+        # tracking steps never tap (the refresh needs full-width G)
+        assert regime_rounds("replicated", M, N, RANK, 1, tracking=True,
+                             tapped=True) == ()
+        # the tap prepends to the column regime's rounds, wire-free
+        col = regime_rounds("column", M, N, RANK, G, tracking=False,
+                            tapped=True)
+        assert col[0].name == "grad_tap" and col[0].wire_bytes(G) == 0
+        assert col[1:] == regime_rounds("column", M, N, RANK, G,
+                                        tracking=False)
+
+    def test_tapped_replicated_program(self):
+        prog = build_program(COL, CFG, None, tracking=False, tapped=True)
+        assert prog.regime == "replicated"
+        rnd = prog.round("grad_tap")
+        assert rnd == CollectiveRound("grad_tap", GRAD_FUSED, RANK + 1, N)
+        assert prog.collective_counts() == \
+            GOLDEN_COUNTS[("replicated", False)]
+        assert prog.collective_wire_bytes() == 0
+        # the tapped program carries a round, so it gets a real executor
+        # (for Exec.has gates) — but collective() on a local round is
+        # still the identity
+        ex = program_lib.executor(prog)
+        assert ex.has("grad_tap")
+        x = jnp.ones((3, 4))
+        assert ex.collective("grad_tap", x) is x
+
+    def test_tapped_column_program_keeps_golden_counts(self):
+        prog = build_program(COL, CFG, MESH, tracking=False, tapped=True)
+        assert prog.regime == "column"
+        assert prog.round("grad_tap") is not None
+        assert prog.collective_counts() == GOLDEN_COUNTS[("column", False)]
+
+    def test_tap_dropped_where_unsupported(self):
+        # tracking steps and the row regimes (the stacked psum IS the
+        # projection — a pre-projected tap cannot ride it) drop the tap
+        assert build_program(COL, CFG, MESH, tracking=True,
+                             tapped=True).round("grad_tap") is None
+        for plan in (ROW, ROW_ODD_N):
+            prog = build_program(plan, CFG, MESH, tracking=False,
+                                 tapped=True)
+            assert prog.regime in ("row", "row-rs")
+            assert prog.round("grad_tap") is None
+
+
+GRASS_CFG = LowRankConfig(rank=RANK, use_kernels=True, method="grass")
+
+
+class TestGrassProgram:
+    """Grass (arXiv:2406.17660) as the fifth regime: S is a one-hot row
+    selection, so the projection is a gather — declared as the local
+    ``sel_gather`` round, never shard_map'd."""
+
+    def test_grass_regime_and_rounds(self):
+        specless = plan_lib.plan_for_shape((M, N), RANK)
+        prog = build_program(specless, GRASS_CFG, None, tracking=False)
+        assert prog.regime == "grass"
+        assert prog.round("sel_gather") == \
+            CollectiveRound("sel_gather", GRAD_FUSED, RANK, N)
+        assert prog.collective_counts() == {}
+        assert prog.collective_wire_bytes() == 0
+
+    def test_grass_never_shard_maps(self):
+        # even a column-shardable leaf on a live mesh stays grass with
+        # no shard_map axes (the top-r selection contracts over all
+        # columns, like the SVD refresh)
+        for tracking in (False, True):
+            prog = build_program(COL, GRASS_CFG, MESH, tracking=tracking)
+            assert prog.regime == "grass"
+            assert prog.axes == () and prog.shards == 1
+
+    def test_grass_tap_subsumes_gather(self):
+        # the tap panel IS the gathered rows + norms: a tapped grass
+        # program carries grad_tap and drops sel_gather
+        specless = plan_lib.plan_for_shape((M, N), RANK)
+        prog = build_program(specless, GRASS_CFG, None, tracking=False,
+                             tapped=True)
+        assert prog.round("grad_tap") is not None
+        assert prog.round("sel_gather") is None
+        # tracking keeps the gather (refresh re-selects from full G)
+        tr = build_program(specless, GRASS_CFG, None, tracking=True,
+                           tapped=True)
+        assert tr.round("sel_gather") is not None
+        assert tr.round("grad_tap") is None
+
+    def test_grass_tracks(self):
+        prog = build_program(COL, GRASS_CFG, MESH, tracking=True)
+        assert prog.tracks  # grass refreshes move the selection
 
 
 class TestExec:

@@ -30,7 +30,7 @@ def trained():
         step_fn = jax.jit(make_train_step(bundle, opt),
                           static_argnames=("do_subspace_update",),
                           donate_argnums=(0,))
-        state = jax.jit(make_warm_start(bundle, opt))(
+        state, _ = jax.jit(make_warm_start(bundle, opt))(
             state, data.global_batch_at(0))
         losses = []
         for s in range(25):

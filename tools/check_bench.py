@@ -6,18 +6,23 @@ artifact (sections missing after a bench gains one, agreement loops that
 silently regressed, modeled ratios drifting past their documented
 targets) would quietly rot.  This checker fails CI fast instead:
 
-* every expected section is present (``hotpath``, ``tracking``,
-  ``sharded``, ``sharded-row``, ``sharded-row-rs``) with a non-empty
-  ``shapes`` map;
+* every expected section is present (``hotpath``, ``grad-fused``,
+  ``tracking``, ``sharded``, ``sharded-row``, ``sharded-row-rs``) with a
+  non-empty ``shapes`` map;
 * the numeric agreement loops recorded their worst relative error and it
-  is inside the documented budget (1e-5 plain / 1e-3 with tracking
-  steps) — including the sharded-row-rs rs-vs-replicated loop;
+  is inside the documented budget (1e-5 plain — including the grad-fused
+  tap-fed loop — / 1e-3 with tracking steps), plus the sharded-row-rs
+  rs-vs-replicated loop;
 * modeled traffic ratios respect their targets: hotpath <= 0.5,
   tracking <= 0.7, sharded (column) <= 0.7, sharded-row <= the per-row
   recorded target (0.7 plain / 0.8 tracking near the m/g >= 2r gate
   boundary, 0.7 from m/g >= 4r), sharded-row-rs <= 0.7 both step kinds
   AND below the replicated-M/V flavour's bytes at every cell (the
-  StepProgram auto-selection gate);
+  StepProgram auto-selection gate), grad-fused <= the per-cell recorded
+  target (0.30 with recovery scaling off; the fused ratio itself with it
+  on) AND strictly below the fused ratio at every cell (the
+  ``below_fused`` booleans — the tap must beat the current fused path
+  everywhere or the grad-fused round buys nothing);
 * the flat timing ``rows`` list exists and covers every section.
 
 Run: ``python tools/check_bench.py [PATH]`` (default:
@@ -33,9 +38,9 @@ from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
 
-EXPECTED_SECTIONS = ("hotpath", "tracking", "sharded", "sharded-row",
-                     "sharded-row-rs")
-AGREEMENT_BUDGETS = {"hotpath": 1e-5, "tracking": 1e-3}
+EXPECTED_SECTIONS = ("hotpath", "grad-fused", "tracking", "sharded",
+                     "sharded-row", "sharded-row-rs")
+AGREEMENT_BUDGETS = {"hotpath": 1e-5, "grad-fused": 1e-5, "tracking": 1e-3}
 FLAT_RATIO_TARGETS = {"hotpath": 0.5, "tracking": 0.7}
 # sections whose per-cell dicts carry their own "target" + an agreement
 # loop (or a mesh-skip note) from the fake 8-device mesh
@@ -101,7 +106,7 @@ def check_bench(path: Path) -> list[str]:
                 if ratio > target:
                     errors.append(f"{name}/{shape}/{tag}: ratio "
                                   f"{ratio:.3f} > {target}")
-    for name in ("sharded",) + MESH_SECTIONS:
+    for name in ("sharded", "grad-fused") + MESH_SECTIONS:
         for shape, by_shape in sections.get(name, {}).get("shapes",
                                                           {}).items():
             for kind_key, tag, cell in _iter_ratio_cells(by_shape):
@@ -117,6 +122,17 @@ def check_bench(path: Path) -> list[str]:
                         f"{name}/{shape}/{kind_key}/{tag}: rs bytes not "
                         "below the replicated-M/V flavour — the "
                         "auto-selection gate would never pick it")
+                # the grad-fused gate: the tapped step must model
+                # STRICTLY below the current fused path at every cell,
+                # or emitting the tap buys nothing
+                if name == "grad-fused" and not cell.get("below_fused",
+                                                         False):
+                    # default False: a cell MISSING the flag (stale
+                    # artifact from before the gate) must fail too
+                    errors.append(
+                        f"{name}/{shape}/{kind_key}/{tag}: grad-fused "
+                        f"ratio {cell['ratio']:.3f} not below the fused "
+                        f"ratio {cell.get('fused_ratio')}")
 
     rows = payload.get("rows", [])
     if not rows:

@@ -60,25 +60,39 @@ def parse_spec(text: str | None, ndim: int) -> P:
 
 
 def modeled_bytes(prog: program_lib.StepProgram, *,
-                  grad_bytes: int, param_bytes: int) -> list[str]:
+                  grad_bytes: int, param_bytes: int,
+                  recovery: bool = True) -> list[str]:
     """Fused vs paper-literal per-device byte lines for the program.
 
     Keyed on the program's EFFECTIVE geometry (``prog.tracks``), not the
     step kind: a tracking step whose refresh moves no basis (method
     "none") declares — and must be modeled as — the plain schedule, so
-    the bytes printed here always match the rounds printed above them."""
+    the bytes printed here always match the rounds printed above them.
+    A program carrying the ``grad_tap`` round is modeled tap-fed
+    (repro.kernels.traffic.gradfused_step_bytes — no projection pass)."""
     kw = dict(grad_bytes=grad_bytes, param_bytes=param_bytes)
     m, n, r = prog.m, prog.n, prog.rank
     tracks = prog.tracks
-    if prog.regime == "replicated":
+    if prog.regime in ("replicated", "grass"):
+        if not tracks and prog.round("grad_tap") is not None:
+            gf = traffic.gradfused_step_bytes(m, n, r, recovery=recovery,
+                                              **kw)
+            unf = traffic.unfused_step_bytes(m, n, r, **kw)
+            fus = traffic.fused_step_bytes(m, n, r, **kw)
+            return [f"  modeled local bytes : grad-fused {gf.total:,} vs "
+                    f"paper-literal {unf.total:,} "
+                    f"(ratio {gf.total / unf.total:.3f}; fused-without-tap "
+                    f"would be {fus.total / unf.total:.3f} — the tap "
+                    "replaces the projection pass)"]
         fus = (traffic.tracking_fused_step_bytes(m, n, r, **kw) if tracks
                else traffic.fused_step_bytes(m, n, r, **kw))
         unf = (traffic.tracking_unfused_step_bytes(m, n, r, **kw)
                if tracks else traffic.unfused_step_bytes(m, n, r, **kw))
+        note = ("grass — selection gather, no wire term"
+                if prog.regime == "grass" else "replicated — no wire term")
         return [f"  modeled local bytes : fused {fus.total:,} vs "
                 f"paper-literal {unf.total:,} "
-                f"(ratio {fus.total / unf.total:.3f}; replicated — "
-                "no wire term)"]
+                f"(ratio {fus.total / unf.total:.3f}; {note})"]
     fus_fn, unf_fn = traffic._REGIME_MODEL_FNS[(prog.regime, tracks)]
     fus = fus_fn(m, n, r, prog.shards, **kw)
     unf = unf_fn(m, n, r, prog.shards, **kw)
@@ -111,6 +125,10 @@ def main(argv=None) -> int:
                     choices=["auto", "replicated", "reduce-scatter"])
     ap.add_argument("--reorth-interval", type=int, default=0)
     ap.add_argument("--no-recovery", action="store_true")
+    ap.add_argument("--grad-fused", action="store_true",
+                    help="build the tapped program: plain steps carry the "
+                         "grad_tap round (backward-pass [A; colnorms] "
+                         "panel) where the regime admits it")
     ap.add_argument("--grad-bytes", type=int, default=4,
                     help="gradient dtype width (2 for bf16)")
     ap.add_argument("--param-bytes", type=int, default=4)
@@ -138,11 +156,13 @@ def main(argv=None) -> int:
     for tracking, title in ((False, "plain step (k-1 of k)"),
                             (True, "tracking step (1 of k)")):
         prog = program_lib.build_program(plan, cfg, mesh,
-                                         tracking=tracking)
+                                         tracking=tracking,
+                                         tapped=args.grad_fused)
         print(f"\n== {title} ==")
         print(prog.describe())
         for line in modeled_bytes(prog, grad_bytes=args.grad_bytes,
-                                  param_bytes=args.param_bytes):
+                                  param_bytes=args.param_bytes,
+                                  recovery=not args.no_recovery):
             print(line)
         if prog.regime == "replicated" and mesh is not None:
             print("  (replicated: leaf/config not admissible for any "
