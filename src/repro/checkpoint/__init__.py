@@ -1,5 +1,11 @@
 """Fault-tolerant checkpointing."""
 
-from repro.checkpoint.manager import CheckpointManager, load_pytree, save_pytree
+from repro.checkpoint.manager import (CheckpointManager, load_manifest,
+                                      load_pytree, save_pytree)
+from repro.checkpoint.transpose import (TransposeError, elastic_loader,
+                                        state_program_records,
+                                        transpose_matrix_state)
 
-__all__ = ["CheckpointManager", "load_pytree", "save_pytree"]
+__all__ = ["CheckpointManager", "load_manifest", "load_pytree",
+           "save_pytree", "TransposeError", "elastic_loader",
+           "state_program_records", "transpose_matrix_state"]

@@ -49,6 +49,27 @@ def _flatten_with_paths(tree: Any):
     return leaves, treedef
 
 
+def _np_dtype(name: str) -> np.dtype:
+    """Resolve a manifest dtype string.  Plain numpy rejects the extended
+    ml_dtypes names (``np.dtype("bfloat16")`` raises TypeError), so bf16 /
+    fp8 leaves fall through to the ml_dtypes registry jax ships with."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def load_manifest(path: str | os.PathLike) -> dict:
+    """The checkpoint's msgpack manifest (tree structure, per-leaf shapes/
+    dtypes/offsets/crcs, and the saver's ``extra`` metadata — where the
+    elastic layer embeds the per-leaf StepProgram descriptors)."""
+    path = Path(path)
+    return msgpack.unpackb((path / "manifest.msgpack").read_bytes(),
+                           raw=False)
+
+
 def save_pytree(path: str | os.PathLike, tree: Any,
                 extra_meta: dict | None = None) -> None:
     """Synchronous atomic checkpoint write of one pytree."""
@@ -96,12 +117,20 @@ def save_pytree(path: str | os.PathLike, tree: Any,
 
 
 def load_pytree(path: str | os.PathLike, like: Any,
-                shardings: Any | None = None) -> Any:
+                shardings: Any | None = None, *,
+                strict_shapes: bool = True, host: bool = False) -> Any:
     """Restore into the structure of ``like``; optionally device_put with
-    target shardings (elastic re-shard)."""
+    target shardings (elastic re-shard).
+
+    ``strict_shapes=False`` skips the per-leaf shape check against
+    ``like`` (the treedef / leaf-count check still applies) — the elastic
+    restore path loads a checkpoint whose low-rank state shapes legally
+    differ (rank changes) and reconciles them in the transpose pass.
+    ``host=True`` returns the raw host numpy arrays without any device
+    placement, for callers that post-process before placing.
+    """
     path = Path(path)
-    manifest = msgpack.unpackb((path / "manifest.msgpack").read_bytes(),
-                               raw=False)
+    manifest = load_manifest(path)
     leaves_like, treedef = _flatten_with_paths(like)
     if manifest["n_leaves"] != len(leaves_like):
         raise ValueError(
@@ -111,18 +140,30 @@ def load_pytree(path: str | os.PathLike, like: Any,
     out = []
     data = (path / "data.bin").read_bytes()
     for meta, ref in zip(manifest["leaves"], leaves_like):
+        if meta["compressed"] and dctx is None:
+            raise IOError(
+                f"{path} was written zstd-compressed but zstandard is not "
+                "installed in this environment — cannot decompress")
         blob = data[meta["offset"]:meta["offset"] + meta["nbytes"]]
+        if len(blob) < meta["nbytes"]:
+            raise IOError(f"truncated data.bin in {path}: leaf {len(out)} "
+                          f"needs {meta['nbytes']} B, got {len(blob)}")
         buf = (dctx.decompress(blob, max_output_size=meta["raw_nbytes"])
                if meta["compressed"] else blob)
         if zlib.crc32(buf) != meta["crc32"]:
             raise IOError(f"checksum mismatch in {path} leaf "
                           f"{len(out)} — corrupt checkpoint")
-        arr = np.frombuffer(buf, dtype=meta["dtype"]).reshape(meta["shape"])
-        expect = jnp.shape(ref)
-        if tuple(arr.shape) != tuple(expect):
-            raise ValueError(f"leaf shape {arr.shape} != expected {expect}")
+        arr = np.frombuffer(buf, dtype=_np_dtype(meta["dtype"])
+                            ).reshape(meta["shape"])
+        if strict_shapes:
+            expect = jnp.shape(ref)
+            if tuple(arr.shape) != tuple(expect):
+                raise ValueError(
+                    f"leaf shape {arr.shape} != expected {expect}")
         out.append(arr)
     tree = jax.tree_util.tree_unflatten(treedef, out)
+    if host:
+        return tree
     if shardings is not None:
         tree = jax.tree.map(lambda a, s: jax.device_put(a, s), tree,
                             shardings)
@@ -185,7 +226,8 @@ class CheckpointManager:
         out = []
         for child in self.root.iterdir() if self.root.exists() else []:
             m = self.STEP_RE.match(child.name)
-            if m and (child / "manifest.msgpack").exists():
+            if m and (child / "manifest.msgpack").exists() \
+                    and (child / "data.bin").exists():
                 out.append(int(m.group(1)))
         return sorted(out)
 
@@ -194,14 +236,39 @@ class CheckpointManager:
         return s[-1] if s else None
 
     def restore(self, like: Any, step: int | None = None,
-                shardings: Any | None = None) -> tuple[Any, int] | None:
-        """Returns (tree, step) or None if no checkpoint exists."""
-        if step is None:
-            step = self.latest_step()
-        if step is None:
-            return None
-        tree = load_pytree(self.root / f"step_{step:010d}", like, shardings)
-        return tree, step
+                shardings: Any | None = None,
+                loader=None) -> tuple[Any, int] | None:
+        """Returns (tree, step) or None if no checkpoint exists.
+
+        Without an explicit ``step``, candidates are tried newest-first
+        and a damaged or incompatible checkpoint (crash-truncated data,
+        crc mismatch, or — under an elastic ``loader`` — a layout the
+        transpose pass cannot reach the target programs from) is skipped
+        with a warning, falling back to the newest *restorable* step.  An
+        explicitly requested ``step`` is tried alone and re-raises.
+
+        ``loader(path, like, shardings)`` overrides the per-step load;
+        the elastic restore (``repro.checkpoint.transpose.elastic_loader``)
+        hooks in here.
+        """
+        load = loader if loader is not None else load_pytree
+        if step is not None:
+            return load(self.root / f"step_{step:010d}", like,
+                        shardings), step
+        last_err: Exception | None = None
+        for s in reversed(self.steps()):
+            path = self.root / f"step_{s:010d}"
+            try:
+                return load(path, like, shardings), s
+            except Exception as e:
+                last_err = e
+                print(f"[ckpt] step {s} not restorable "
+                      f"({type(e).__name__}: {e}) — falling back to the "
+                      "previous checkpoint", flush=True)
+        if last_err is not None:
+            print("[ckpt] no restorable checkpoint found "
+                  f"(last error: {last_err}) — starting fresh", flush=True)
+        return None
 
     def _gc(self) -> None:
         steps = self.steps()

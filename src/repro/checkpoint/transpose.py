@@ -1,0 +1,297 @@
+"""Layout-transposing checkpoint restore: any StepProgram -> any StepProgram.
+
+The manager stores every leaf as a *logical* (global) array — under every
+regime the low-rank Adam state is globally ``S (m, r)``, ``M/V (r, n)``
+(sharding lives at the NamedSharding level, and the save-time
+``np.asarray`` gathers), so a checkpoint written under one StepProgram is
+mechanically portable to any other.  This module makes that portability a
+first-class pass:
+
+* on **save**, :func:`state_program_records` walks the state pytree and
+  emits one serializable :class:`~repro.core.program.StateDescriptor`
+  record per optimizer-state node into the manifest's ``extra_meta``
+  (key ``"state_programs"``) — the source programs;
+* on **restore**, :func:`elastic_loader` rebuilds the descriptors for the
+  *current* mesh/config (the targets), lowers every (source, target) pair
+  through :func:`transpose_matrix_state`, and re-shards to the target
+  program's declared layout.
+
+The lowering per pair:
+
+==============================  =========================================
+pair                            work
+==============================  =========================================
+same method, same rank          identity — bit-exact round trip.  Layout,
+                                regime and group-size changes (row-rs <->
+                                replicated <-> column, any g) are free:
+                                the logical arrays never change, only the
+                                target NamedShardings do
+rank r_s -> r_t < r_s           truncate: keep the leading r_t basis
+                                columns and their moment rows (exact on
+                                the kept block; both the SVD warm start
+                                and the grass top-k order columns by
+                                energy, so the tail is the right cut)
+rank r_s -> r_t > r_s           pad: complete the basis with the top
+                                singular vectors of ``I - S S^T`` (grass:
+                                one-hot columns of unselected rows);
+                                zero-pad the new moment rows (Adam state
+                                of a direction never visited is zero)
+method * -> "grass"             rebuild S as the one-hot top-r_t row
+                                selection by basis row energy and rotate
+                                the moments with Q = S_new^T S_old
+                                (paper Eq. 8-9, the same formula
+                                ``lowrank_adam.rotate_moments_dense``
+                                applies on refresh)
+method "grass" -> dense basis   identity (a one-hot selection IS an
+                                orthonormal basis; the next refresh
+                                re-tracks it)
+==============================  =========================================
+
+Non-transposable pairs — canonical ``(m, n)`` changed, stack dims
+changed, dense/low-rank mode flipped (a rank change crossing plan.py's
+``small <= rank`` dense gate) — raise ``TransposeError``;
+``CheckpointManager.restore`` then falls back to the next restorable step.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.checkpoint import manager
+from repro.core.lowrank_adam import DenseOptState, MatrixOptState
+from repro.core.program import StateDescriptor
+
+META_KEY = "state_programs"
+
+
+class TransposeError(ValueError):
+    """A (source program -> target program) pair with no lowering."""
+
+
+def _is_state_node(x) -> bool:
+    return isinstance(x, (MatrixOptState, DenseOptState))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        for attr in ("key", "idx", "name"):
+            if hasattr(p, attr):
+                parts.append(str(getattr(p, attr)))
+                break
+    return "/".join(parts)
+
+
+def _state_nodes(tree) -> list[tuple[str, object]]:
+    """(path, node) for every optimizer-state node of ``tree``, in
+    flatten order — the order that pairs them with the descriptor leaves
+    of ``state_leaf_descriptors`` (``opt.inner`` mirrors the params
+    structure, so both enumerate the leaves identically)."""
+    import jax
+
+    flat = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=_is_state_node)[0]
+    return [(_path_str(p), x) for p, x in flat if _is_state_node(x)]
+
+
+def descriptor_leaves(param_descs) -> list[StateDescriptor]:
+    import jax
+
+    return [d for d in jax.tree_util.tree_leaves(
+        param_descs, is_leaf=lambda x: isinstance(x, StateDescriptor))
+        if isinstance(d, StateDescriptor)]
+
+
+def state_program_records(state_tree, param_descs) -> dict:
+    """``extra_meta`` fragment recording each state node's source program:
+    ``{"state_programs": [{"path": ..., **descriptor}, ...]}`` in node
+    flatten order.  Feed to ``CheckpointManager.save(extra_meta=...)``."""
+    nodes = _state_nodes(state_tree)
+    descs = descriptor_leaves(param_descs)
+    if len(nodes) != len(descs):
+        raise ValueError(
+            f"{len(nodes)} optimizer-state nodes but {len(descs)} "
+            "descriptors — descriptor tree does not mirror the params")
+    return {META_KEY: [dict(path=path, **d.to_dict())
+                       for (path, _), d in zip(nodes, descs)]}
+
+
+def admissible(src: StateDescriptor, tgt: StateDescriptor) -> str | None:
+    """None when (src -> tgt) lowers, else the human-readable reason."""
+    if src.kind != tgt.kind:
+        return (f"dense/low-rank mode changed ({src.kind} -> {tgt.kind}; "
+                "a rank change crossed the dense gate)")
+    if src.kind != "lowrank":
+        return None
+    if (src.m, src.n) != (tgt.m, tgt.n):
+        return (f"canonical (m, n) changed: ({src.m}, {src.n}) -> "
+                f"({tgt.m}, {tgt.n})")
+    if src.batch_dims != tgt.batch_dims:
+        return f"stack dims changed: {src.batch_dims} -> {tgt.batch_dims}"
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Per-leaf lowering
+# ---------------------------------------------------------------------------
+
+
+def _rotate_moments_np(Q, M, V):
+    """Host-side paper Eq. 8-9 moment rotation with explicit
+    Q = S_new^T S_old (the same formula as
+    ``lowrank_adam.rotate_moments_dense``, numpy, no bias factor — a
+    restore re-expresses the stored raw moments, it does not step)."""
+    QM = Q @ M
+    V_rot = np.abs((Q * Q) @ (V - M * M) + QM * QM)
+    return QM, V_rot
+
+
+def _grass_select(S, r_t: int):
+    """One-hot top-``r_t`` row selection from the basis row energy
+    (descending, mirroring the grass refresh's ``top_k`` order)."""
+    m = S.shape[-2]
+    energy = np.sum(S * S, axis=-1)                       # (..., m)
+    idx = np.argsort(-energy, axis=-1, kind="stable")[..., :r_t]
+    return np.swapaxes(np.eye(m, dtype=S.dtype)[idx], -1, -2)  # (..., m, r_t)
+
+
+def _complete_basis(S, extra: int):
+    """``extra`` orthonormal columns spanning the complement of S: the
+    top singular vectors of the projector ``I - S S^T``.  One-off
+    host-side SVD of (m, m) per stacked matrix at restore time."""
+    m = S.shape[-2]
+    resid = np.eye(m, dtype=S.dtype) - S @ np.swapaxes(S, -1, -2)
+    U = np.linalg.svd(resid)[0]
+    return U[..., :extra]
+
+
+def _pad_grass(S, extra: int):
+    """Append one-hot columns for the lowest-index unselected rows —
+    keeps the grass invariant (S stays a row selection)."""
+    m = S.shape[-2]
+    lead = S.shape[:-2]
+    sel = np.argmax(S, axis=-2)                           # (..., r_s)
+    out = np.zeros(lead + (m, extra), S.dtype)
+    for li in np.ndindex(*lead) if lead else [()]:
+        taken = set(int(i) for i in np.ravel(sel[li]))
+        free = [i for i in range(m) if i not in taken][:extra]
+        for j, i in enumerate(free):
+            out[li + (i, j)] = 1.0
+    return out
+
+
+def transpose_matrix_state(st: MatrixOptState, src: StateDescriptor,
+                           tgt: StateDescriptor) -> MatrixOptState:
+    """Lower one MatrixOptState from its source program onto the target.
+
+    Identity (bit-exact, the arrays pass through untouched) whenever the
+    basis does not move — i.e. for every layout/regime/group-size change
+    and for grass -> dense-basis method changes.  Rank and *-> grass
+    lowering per the module table.
+    """
+    reason = admissible(src, tgt)
+    if reason is not None:
+        raise TransposeError(reason)
+    S = np.asarray(st.S)
+    M = np.asarray(st.M)
+    V = np.asarray(st.V)
+    lead = S.shape[:src.batch_dims]
+    if S.shape != lead + (src.m, src.rank):
+        raise TransposeError(
+            f"stored S shape {S.shape} does not match its recorded "
+            f"program (m={src.m}, r={src.rank}, lead={lead})")
+    r_s, r_t = src.rank, tgt.rank
+    to_grass = tgt.method == "grass" and src.method != "grass"
+    if not to_grass and r_t == r_s:
+        return st                                    # identity — bit-exact
+    if to_grass:
+        S_new = _grass_select(S, r_t)
+        Q = np.swapaxes(S_new, -1, -2) @ S           # (..., r_t, r_s)
+        M_new, V_new = _rotate_moments_np(Q, M, V)
+    elif r_t < r_s:
+        S_new = S[..., :, :r_t]
+        M_new, V_new = M[..., :r_t, :], V[..., :r_t, :]
+    else:
+        pad = (_pad_grass(S, r_t - r_s) if tgt.method == "grass"
+               else _complete_basis(S, r_t - r_s))
+        S_new = np.concatenate([S, pad], axis=-1)
+        zrows = np.zeros(M.shape[:-2] + (r_t - r_s, M.shape[-1]), M.dtype)
+        M_new = np.concatenate([M, zrows], axis=-2)
+        V_new = np.concatenate([V, zrows], axis=-2)
+    return MatrixOptState(S=S_new, M=M_new, V=V_new, lam_prev=st.lam_prev)
+
+
+def transpose_state(loaded, records: list[dict], param_descs):
+    """Map every optimizer-state node of ``loaded`` (host arrays) from
+    its recorded source program onto the target descriptors."""
+    import jax
+
+    flat, treedef = jax.tree_util.tree_flatten(loaded,
+                                               is_leaf=_is_state_node)
+    descs = descriptor_leaves(param_descs)
+    n_nodes = sum(1 for x in flat if _is_state_node(x))
+    if not (n_nodes == len(descs) == len(records)):
+        raise TransposeError(
+            f"state-node count mismatch: checkpoint records "
+            f"{len(records)}, target descriptors {len(descs)}, "
+            f"tree holds {n_nodes}")
+    i = 0
+    out = []
+    for leaf in flat:
+        if not _is_state_node(leaf):
+            out.append(leaf)
+            continue
+        src = StateDescriptor.from_dict(records[i])
+        tgt = descs[i]
+        i += 1
+        if isinstance(leaf, MatrixOptState):
+            if src.kind != "lowrank" or tgt.kind != "lowrank":
+                raise TransposeError(
+                    f"node {records[i - 1].get('path')}: "
+                    + (admissible(src, tgt) or "descriptor kind mismatch"))
+            leaf = transpose_matrix_state(leaf, src, tgt)
+        elif admissible(src, tgt) is not None:
+            raise TransposeError(
+                f"node {records[i - 1].get('path')}: "
+                f"{admissible(src, tgt)}")
+        out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# The restore-side loader
+# ---------------------------------------------------------------------------
+
+
+def elastic_loader(param_descs):
+    """``loader(path, like, shardings)`` for ``CheckpointManager.restore``:
+    load host-side, transpose every state node from its recorded source
+    program onto ``param_descs`` (the targets, built for the *current*
+    mesh — ``program.state_leaf_descriptors``), verify the result matches
+    ``like`` leaf-for-leaf, then place (device_put with ``shardings``
+    when given — the target programs' declared layouts — else a plain
+    transfer).  Checkpoints written without descriptor records (pre-
+    elastic) take the strict identical-shape path unchanged.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    def load(path, like, shardings):
+        records = manager.load_manifest(path)["extra"].get(META_KEY)
+        if records is None:
+            return manager.load_pytree(path, like, shardings)
+        host = manager.load_pytree(path, like, strict_shapes=False,
+                                   host=True)
+        tree = transpose_state(host, records, param_descs)
+        for got, want in zip(jax.tree_util.tree_leaves(tree),
+                             jax.tree_util.tree_leaves(like)):
+            if tuple(np.shape(got)) != tuple(jnp.shape(want)):
+                raise TransposeError(
+                    f"transposed leaf shape {np.shape(got)} != target "
+                    f"{jnp.shape(want)}")
+        if shardings is not None:
+            return jax.tree.map(lambda a, s: jax.device_put(a, s),
+                                tree, shardings)
+        return jax.tree.map(jnp.asarray, tree)
+
+    return load

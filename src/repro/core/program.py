@@ -378,6 +378,100 @@ def build_program(plan: plan_lib.ParamPlan, cfg, mesh, *,
 
 
 # ---------------------------------------------------------------------------
+# Checkpoint-facing descriptors: the serializable face of a StepProgram
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class StateDescriptor:
+    """Serializable per-leaf record of HOW one optimizer-state leaf was
+    (or will be) laid out: the StepProgram fields a checkpoint must carry
+    so a restore under a *different* program can transpose the state
+    (``repro.checkpoint.transpose``).
+
+    ``kind`` is "lowrank" (a MatrixOptState leaf) or "dense" (plain Adam
+    state).  For low-rank leaves, ``m, n, rank`` are the canonical
+    (post-transpose) dims, ``method`` the refresh family ("grassmann"-like
+    dense bases vs "grass" one-hot row selections — the two need a basis
+    conversion, everything else is layout-only), and the layout fields
+    mirror :class:`StepProgram`.  Not a pytree node: a descriptor is a
+    LEAF of the descriptor pytree ``state_leaf_descriptors`` returns.
+    """
+
+    kind: str                     # "lowrank" | "dense"
+    regime: str = "replicated"
+    axes: tuple = ()
+    shards: int = 1
+    grad_layout: str = "replicated"
+    state_layout: str = "inherit"
+    schedule: str = "tangent"
+    m: int = 0
+    n: int = 0
+    rank: int = 0
+    batch_dims: int = 0
+    method: str = "grassmann"
+
+    def to_dict(self) -> dict:
+        return {
+            "kind": self.kind, "regime": self.regime,
+            "axes": [str(a) for a in self.axes], "shards": int(self.shards),
+            "grad_layout": self.grad_layout,
+            "state_layout": self.state_layout, "schedule": self.schedule,
+            "m": int(self.m), "n": int(self.n), "rank": int(self.rank),
+            "batch_dims": int(self.batch_dims), "method": self.method,
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "StateDescriptor":
+        return cls(kind=d["kind"], regime=d.get("regime", "replicated"),
+                   axes=tuple(d.get("axes", ())),
+                   shards=int(d.get("shards", 1)),
+                   grad_layout=d.get("grad_layout", "replicated"),
+                   state_layout=d.get("state_layout", "inherit"),
+                   schedule=d.get("schedule", "tangent"),
+                   m=int(d.get("m", 0)), n=int(d.get("n", 0)),
+                   rank=int(d.get("rank", 0)),
+                   batch_dims=int(d.get("batch_dims", 0)),
+                   method=d.get("method", "grassmann"))
+
+
+def descriptor_for(plan: plan_lib.ParamPlan, cfg, mesh) -> StateDescriptor:
+    """One leaf's StateDescriptor — built off the same ``build_program``
+    classification the plain-step hot path runs under, so the recorded
+    layout IS the executed one."""
+    if plan.mode != "lowrank":
+        return StateDescriptor(kind="dense")
+    prog = build_program(plan, cfg, mesh, tracking=False)
+    return StateDescriptor(
+        kind="lowrank", regime=prog.regime, axes=prog.axes,
+        shards=prog.shards, grad_layout=prog.grad_layout,
+        state_layout=prog.state_layout, schedule=prog.schedule,
+        m=prog.m, n=prog.n, rank=prog.rank, batch_dims=plan.batch_dims,
+        method=getattr(cfg, "method", "grassmann"))
+
+
+def state_leaf_descriptors(params, cfg, mesh=None, param_specs=None):
+    """Pytree mirroring ``params`` of per-leaf :class:`StateDescriptor`.
+
+    This is the accessor the checkpoint layer consumes: on save the
+    descriptors are embedded in the manifest's ``extra_meta`` (source
+    programs); on restore they are rebuilt for the *current* mesh/config
+    and become the transpose targets.  ``cfg`` is any optimizer config —
+    one without a ``rank`` (the dense baselines) yields all-dense
+    descriptors, so every optimizer checkpoints through the same path.
+    """
+    import jax
+
+    rank = getattr(cfg, "rank", 0)
+    if not rank:
+        return jax.tree.map(lambda _: StateDescriptor(kind="dense"), params)
+    plans = plan_lib.make_plans(params, rank, specs=param_specs)
+    return jax.tree.map(
+        lambda plan: descriptor_for(plan, cfg, mesh), plans,
+        is_leaf=lambda x: isinstance(x, plan_lib.ParamPlan))
+
+
+# ---------------------------------------------------------------------------
 # Runtime execution: named-round collectives inside the lowered step
 # ---------------------------------------------------------------------------
 

@@ -204,6 +204,48 @@ def opt_state_specs(params_shape: Any, ctx: MeshContext, optimizer) -> Any:
 
 
 # ---------------------------------------------------------------------------
+# StepProgram-descriptor state specs (elastic checkpoint restore)
+# ---------------------------------------------------------------------------
+
+
+def descriptor_state_specs(desc) -> MatrixOptState | None:
+    """Pytree-level PartitionSpecs of one low-rank leaf's MatrixOptState
+    under its StepProgram :class:`~repro.core.program.StateDescriptor` —
+    the same layout mapping ``program.lower`` derives its shard_map state
+    specs from: S follows the gradient rows, M/V follow the declared
+    state layout ("column" and "slice" both shard the global (r, n)
+    arrays along n), lam_prev replicates over the lead dims.  None for
+    dense descriptors (the caller replicates)."""
+    if getattr(desc, "kind", "dense") != "lowrank":
+        return None
+    lead = (None,) * desc.batch_dims
+    axes = tuple(desc.axes)
+    ax = None if not axes else (axes if len(axes) > 1 else axes[0])
+    if ax is None:
+        return MatrixOptState(S=P(*lead, None, None),
+                              M=P(*lead, None, None),
+                              V=P(*lead, None, None), lam_prev=P(*lead))
+    s_spec = (P(*lead, ax, None) if desc.grad_layout == "row"
+              else P(*lead, None, None))
+    mv = {"column": P(*lead, None, ax),
+          "replicated": P(*lead, None, None),
+          "inherit": P(*lead, None, None),
+          "slice": P(*lead, None, ax)}[desc.state_layout]
+    return MatrixOptState(S=s_spec, M=mv, V=mv, lam_prev=P(*lead))
+
+
+def descriptor_state_shardings(desc, node, mesh) -> Any:
+    """NamedShardings for one optimizer-state node (MatrixOptState or
+    DenseOptState) under its descriptor — low-rank nodes follow
+    :func:`descriptor_state_specs`, everything else replicates."""
+    specs = descriptor_state_specs(desc)
+    if specs is not None and isinstance(node, MatrixOptState):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                            is_leaf=lambda x: isinstance(x, P))
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), node)
+
+
+# ---------------------------------------------------------------------------
 # Batch / cache specs
 # ---------------------------------------------------------------------------
 

@@ -20,6 +20,7 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import program as program_lib
 from repro.core.lowrank_adam import MatrixOptState
 from repro.core.subtrack import GradientTransform, OptState
 from repro.models.api import ModelBundle
@@ -28,6 +29,41 @@ from repro.models.api import ModelBundle
 class TrainState(NamedTuple):
     params: Any
     opt: OptState
+
+
+def checkpoint_descriptors(params, optimizer, mesh=None, param_specs=None):
+    """Per-param-leaf StateDescriptor pytree for ``optimizer``'s state —
+    the record :func:`repro.checkpoint.transpose.state_program_records`
+    embeds on save and the target the elastic restore transposes onto.
+    Works for every optimizer (rank-less baseline configs yield all-dense
+    descriptors)."""
+    return program_lib.state_leaf_descriptors(
+        params, optimizer.config, mesh=mesh, param_specs=param_specs)
+
+
+def train_state_shardings(like: TrainState, descs, mesh,
+                          param_shardings=None):
+    """Target placement tree for an elastic restore of a TrainState:
+    params follow the hot-path layout (``param_shardings``; replicated
+    when absent), each MatrixOptState follows its descriptor's declared
+    state layout (``sharding.descriptor_state_specs``), everything else
+    replicates.  None when there is no mesh to place onto."""
+    if mesh is None:
+        return None
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.distributed import sharding as sh
+
+    rep = NamedSharding(mesh, P())
+    params_sh = (param_shardings if param_shardings is not None
+                 else jax.tree.map(lambda _: rep, like.params))
+    inner_sh = jax.tree.map(
+        lambda d, node: sh.descriptor_state_shardings(d, node, mesh),
+        descs, like.opt.inner,
+        is_leaf=lambda x: isinstance(x, program_lib.StateDescriptor))
+    return TrainState(
+        params=params_sh,
+        opt=OptState(step=rep, n_updates=rep, inner=inner_sh))
 
 
 def global_norm(tree) -> jax.Array:

@@ -53,8 +53,10 @@ from repro.data.pipeline import DataConfig, SyntheticLMDataset, batch_for_model
 from repro.distributed import sharding as sh
 from repro.distributed.context import mesh_context
 from repro.launch.mesh import make_context, smoke_context
-from repro.launch.steps import (TrainState, default_rank, make_train_step,
-                                make_warm_start)
+from repro.checkpoint import transpose as ckpt_transpose
+from repro.launch.steps import (TrainState, checkpoint_descriptors,
+                                default_rank, make_train_step,
+                                make_warm_start, train_state_shardings)
 from repro.models.api import build_model
 from repro.optim.schedules import cosine_with_warmup
 
@@ -109,6 +111,16 @@ def train(argv=None) -> dict:
                                                         "multipod"])
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--resume", default="elastic",
+                    choices=["elastic", "strict", "off"],
+                    help="checkpoint resume mode: elastic (default) "
+                         "rebuilds the StepProgram descriptors for the "
+                         "CURRENT mesh/config and restores through the "
+                         "layout-transposing pass (repro.checkpoint."
+                         "transpose) — a checkpoint written under any "
+                         "regime/group size/rank restores here; strict "
+                         "requires identical state shapes; off starts "
+                         "fresh (checkpoints are still written)")
     ap.add_argument("--fail-at-step", type=int, default=-1,
                     help="failure injection: raise at this step")
     ap.add_argument("--log-every", type=int, default=10)
@@ -227,13 +239,33 @@ def train(argv=None) -> dict:
         ckpt = CheckpointManager(args.checkpoint_dir) \
             if args.checkpoint_dir else None
         start_step = 0
+        ckpt_extra: dict = {}
         if ckpt is not None:
-            restored = ckpt.restore(state)
-            if restored is not None:
-                state, start_step = restored
-                start_step += 1
-                print(f"[train] resumed from checkpoint step {start_step - 1}",
-                      flush=True)
+            # the per-leaf StepProgram descriptors of THIS run's layouts:
+            # embedded in every save (the source programs a later restore
+            # transposes from) and, on restore, the transpose targets
+            descs = checkpoint_descriptors(
+                state.params, optimizer,
+                mesh=ctx.mesh if hot_specs is not None else None,
+                param_specs=hot_specs)
+            ckpt_extra = ckpt_transpose.state_program_records(state, descs)
+            if args.resume != "off":
+                if args.resume == "elastic":
+                    restored = ckpt.restore(
+                        state,
+                        shardings=train_state_shardings(
+                            state, descs,
+                            ctx.mesh if hot_shardings is not None else None,
+                            hot_shardings),
+                        loader=ckpt_transpose.elastic_loader(descs))
+                else:
+                    restored = ckpt.restore(state)
+                if restored is not None:
+                    state, start_step = restored
+                    start_step += 1
+                    print(f"[train] resumed from checkpoint step "
+                          f"{start_step - 1} ({args.resume} restore)",
+                          flush=True)
 
         k = getattr(optimizer.config, "update_interval", 0)
         watchdog = StragglerWatchdog()
@@ -299,11 +331,12 @@ def train(argv=None) -> dict:
                 # pipeline already serializes here)
                 drain(*inflight)
                 inflight = None
-                ckpt.save(step, state)
+                ckpt.save(step, state, extra_meta=ckpt_extra)
         if inflight is not None:
             drain(*inflight)
         if ckpt:
-            ckpt.save(args.steps - 1, state, blocking=True)
+            ckpt.save(args.steps - 1, state, blocking=True,
+                      extra_meta=ckpt_extra)
 
         wall = time.time() - t_start
         summary = {

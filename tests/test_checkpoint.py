@@ -1,6 +1,10 @@
 """Checkpointing: exact roundtrip, async, GC, atomicity, corruption
-detection, structure-mismatch errors."""
+detection, structure-mismatch errors; crash-consistency fallback,
+property-based dtype/treedef round trips, async-save stress, and the
+transpose pass's unit-level contracts (the cross-regime pair matrix
+lives in tests/test_checkpoint_elastic.py on the fake 8-device mesh)."""
 
+import collections
 import json
 import threading
 import time
@@ -10,7 +14,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
+import repro.checkpoint.manager as manager_mod
+from repro.checkpoint import (CheckpointManager, TransposeError,
+                              elastic_loader, load_manifest, load_pytree,
+                              save_pytree, state_program_records,
+                              transpose_matrix_state)
+from repro.core.lowrank_adam import MatrixOptState
+from repro.core.program import StateDescriptor
 
 
 def _tree(seed=0):
@@ -86,3 +96,331 @@ class TestManager:
         mgr.save(2, _tree(2))   # must wait for save 1
         mgr.wait()
         assert set(mgr.steps()) == {1, 2}
+
+
+# ---------------------------------------------------------------------------
+# Crash-consistency fallback (fault injection)
+# ---------------------------------------------------------------------------
+
+
+def _flip_byte(path, at=10):
+    data = path.read_bytes()
+    path.write_bytes(data[:at] + bytes([data[at] ^ 0xFF]) + data[at + 1:])
+
+
+class TestFaultFallback:
+    """restore() must skip a damaged newest checkpoint and fall back to
+    the previous complete one — never raise on the first candidate."""
+
+    def _mgr(self, tmp_path):
+        mgr = CheckpointManager(tmp_path, keep=5)
+        mgr.save(3, _tree(3), blocking=True)
+        mgr.save(7, _tree(7), blocking=True)
+        return mgr
+
+    def _assert_falls_back(self, mgr):
+        got = mgr.restore(_tree())
+        assert got is not None
+        back, step = got
+        assert step == 3
+        np.testing.assert_array_equal(np.asarray(back["params"]["w"]),
+                                      np.asarray(_tree(3)["params"]["w"]))
+
+    def test_orphaned_tmp_dir_is_skipped(self, tmp_path):
+        """Crash mid-save: the .tmp dir (even with partial files inside)
+        is invisible; the newest complete step restores."""
+        mgr = self._mgr(tmp_path)
+        crashed = tmp_path / "step_0000000009.tmp"
+        crashed.mkdir()
+        (crashed / "data.bin").write_bytes(b"\x00" * 100)  # partial write
+        got = mgr.restore(_tree())
+        assert got is not None and got[1] == 7
+
+    def test_truncated_data_falls_back(self, tmp_path):
+        mgr = self._mgr(tmp_path)
+        raw = tmp_path / "step_0000000007" / "data.bin"
+        raw.write_bytes(raw.read_bytes()[:-7])
+        self._assert_falls_back(mgr)
+
+    def test_crc_flip_falls_back(self, tmp_path):
+        mgr = self._mgr(tmp_path)
+        _flip_byte(tmp_path / "step_0000000007" / "data.bin")
+        self._assert_falls_back(mgr)
+
+    def test_missing_data_file_falls_back(self, tmp_path):
+        """manifest present but data.bin gone (torn replace): the step
+        is not even a candidate."""
+        mgr = self._mgr(tmp_path)
+        (tmp_path / "step_0000000007" / "data.bin").unlink()
+        assert mgr.steps() == [3]
+        self._assert_falls_back(mgr)
+
+    def test_all_damaged_returns_none(self, tmp_path):
+        mgr = self._mgr(tmp_path)
+        for s in (3, 7):
+            _flip_byte(tmp_path / f"step_{s:010d}" / "data.bin")
+        assert mgr.restore(_tree()) is None
+
+    def test_explicit_step_still_raises(self, tmp_path):
+        """An explicitly requested step is tried alone — damage there is
+        an error, not a silent fallback to a different step."""
+        mgr = self._mgr(tmp_path)
+        _flip_byte(tmp_path / "step_0000000007" / "data.bin")
+        with pytest.raises(Exception):
+            mgr.restore(_tree(), step=7)
+
+
+# ---------------------------------------------------------------------------
+# Property-based save/load round trips
+# ---------------------------------------------------------------------------
+
+
+Point = collections.namedtuple("Point", ["x", "y"])
+
+DTYPES = ("float32", "float16", "bfloat16", "int32", "int8", "uint8",
+          "bool")
+SHAPES = ((), (3,), (2, 5), (0, 3), (4, 0, 2))
+
+
+def _arr(dtype, shape, seed):
+    rng = np.random.default_rng(seed)
+    if dtype == "bool":
+        return rng.random(shape) > 0.5
+    base = rng.standard_normal(shape) * 10
+    if dtype in ("int32", "int8", "uint8"):
+        return np.abs(base).astype(dtype)
+    return jnp.asarray(base).astype(dtype)   # bf16/f16 via jax/ml_dtypes
+
+
+class TestRoundtripProperties:
+    """Deterministic sweep (runs even without hypothesis installed) +
+    a hypothesis-driven variant, per the repo convention."""
+
+    @pytest.mark.parametrize("dtype", DTYPES)
+    @pytest.mark.parametrize("shape", SHAPES,
+                             ids=[str(s) for s in SHAPES])
+    def test_dtype_shape_grid(self, tmp_path, dtype, shape):
+        """Every dtype (including the ml_dtypes-backed bf16 numpy can't
+        name) and zero-size/scalar shapes round-trip bit-exactly."""
+        tree = {"a": _arr(dtype, shape, 0)}
+        save_pytree(tmp_path / "ck", tree)
+        back = load_pytree(tmp_path / "ck", tree)
+        a, b = np.asarray(tree["a"]), np.asarray(back["a"])
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(a, b)
+
+    def test_nested_treedefs_and_extra_meta(self, tmp_path):
+        """dict/list/namedtuple nesting and extra_meta fidelity through
+        the msgpack manifest."""
+        tree = {"p": Point(x=jnp.arange(4.0), y=[jnp.zeros((2, 2)),
+                                                 {"z": jnp.int32(7)}]),
+                "empty": jnp.zeros((0,), jnp.bfloat16)}
+        extra = {"step": 12, "nested": {"tags": ["a", "b"], "f": 0.5},
+                 "flags": [1, 2, 3]}
+        save_pytree(tmp_path / "ck", tree, extra_meta=extra)
+        back = load_pytree(tmp_path / "ck", tree)
+        assert isinstance(back["p"], Point)
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            assert np.asarray(a).dtype == np.asarray(b).dtype
+        manifest = load_manifest(tmp_path / "ck")
+        assert manifest["extra"] == extra
+        # and structure.json mirrors it for humans
+        assert json.loads(
+            (tmp_path / "ck" / "structure.json").read_text()
+        )["extra"] == extra
+
+    def test_zstd_absent_paths(self, tmp_path):
+        """Without zstandard the writer falls back to raw buffers (the
+        manifest records it) — and a checkpoint CLAIMING compression
+        fails with a clear error instead of an AttributeError crash."""
+        tree = _tree()
+        save_pytree(tmp_path / "ck", tree)
+        manifest = load_manifest(tmp_path / "ck")
+        assert all(m["compressed"] == manager_mod._HAS_ZSTD
+                   for m in manifest["leaves"])
+        if manager_mod._HAS_ZSTD:
+            pytest.skip("zstandard installed — absent-path not reachable")
+        import msgpack
+        for m in manifest["leaves"]:
+            m["compressed"] = True
+        (tmp_path / "ck" / "manifest.msgpack").write_bytes(
+            msgpack.packb(manifest, use_bin_type=True))
+        with pytest.raises(IOError, match="zstandard"):
+            load_pytree(tmp_path / "ck", tree)
+
+    def test_hypothesis_roundtrip(self, tmp_path):
+        pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
+
+        @settings(max_examples=60, deadline=None)
+        @given(dtype=st.sampled_from(DTYPES),
+               shape=st.lists(st.integers(0, 5), max_size=3),
+               seed=st.integers(0, 2**16))
+        def check(dtype, shape, seed):
+            tree = (_arr(dtype, tuple(shape), seed), {"k": jnp.float32(1)})
+            root = tmp_path / f"h{abs(hash((dtype, tuple(shape), seed)))}"
+            save_pytree(root, tree)
+            back = load_pytree(root, tree)
+            a, b = np.asarray(tree[0]), np.asarray(back[0])
+            assert a.dtype == b.dtype
+            np.testing.assert_array_equal(a, b)
+
+        check()
+
+
+# ---------------------------------------------------------------------------
+# Async-save stress: interleavings with a worker mid-write
+# ---------------------------------------------------------------------------
+
+
+class TestAsyncStress:
+    def test_interleave_while_worker_mid_write(self, tmp_path,
+                                               monkeypatch):
+        """With the worker held mid-write: steps()/restore()/_gc() see
+        only complete checkpoints, and a second save blocks until the
+        first lands (the one-outstanding-save backpressure contract)."""
+        real = manager_mod.save_pytree
+        gate, entered = threading.Event(), threading.Event()
+
+        def held(path, tree, extra_meta=None):
+            entered.set()
+            assert gate.wait(30), "test deadlock: gate never released"
+            real(path, tree, extra_meta)
+
+        mgr = CheckpointManager(tmp_path, keep=5)
+        mgr.save(1, _tree(1), blocking=True)
+        monkeypatch.setattr(manager_mod, "save_pytree", held)
+        mgr.save(2, _tree(2))                   # async, held mid-write
+        assert entered.wait(30)
+        assert mgr.steps() == [1]               # in-flight invisible
+        got = mgr.restore(_tree())
+        assert got is not None and got[1] == 1  # restore ignores it too
+        mgr._gc()                               # GC from the training
+        assert mgr.steps() == [1]               # thread: no interference
+        threading.Timer(0.3, gate.set).start()
+        t0 = time.time()
+        mgr.save(3, _tree(3))                   # must block on save 2
+        assert time.time() - t0 >= 0.25
+        mgr.wait()
+        assert mgr.steps() == [1, 2, 3]
+
+    def test_wait_reraises_exactly_once(self, tmp_path, monkeypatch):
+        mgr = CheckpointManager(tmp_path, keep=5)
+
+        def boom(path, tree, extra_meta=None):
+            raise RuntimeError("disk full")
+
+        monkeypatch.setattr(manager_mod, "save_pytree", boom)
+        mgr.save(1, _tree())
+        with pytest.raises(RuntimeError, match="disk full"):
+            mgr.wait()
+        mgr.wait()                              # second wait: clean
+        assert mgr._last_error is None
+        # an async failure surfaces on whichever call waits FIRST — here
+        # the next save()'s internal backpressure wait
+        mgr.save(2, _tree())
+        monkeypatch.setattr(manager_mod, "save_pytree", save_pytree)
+        with pytest.raises(RuntimeError, match="disk full"):
+            mgr.save(3, _tree())
+        mgr.wait()                              # and only surfaces once
+        assert mgr._last_error is None
+
+
+# ---------------------------------------------------------------------------
+# Transpose pass: unit contracts (mesh-free)
+# ---------------------------------------------------------------------------
+
+
+def _desc(rank=16, method="grassmann", m=32, n=64, batch_dims=0, **kw):
+    return StateDescriptor(kind="lowrank", m=m, n=n, rank=rank,
+                           method=method, batch_dims=batch_dims, **kw)
+
+
+def _mstate(m=32, n=64, r=16, lead=(), seed=0):
+    key = jax.random.PRNGKey(seed)
+    S = jnp.linalg.qr(jax.random.normal(key, lead + (m, m)))[0][..., :r]
+    return MatrixOptState(
+        S=S,
+        M=jax.random.normal(jax.random.fold_in(key, 1), lead + (r, n)),
+        V=jax.random.uniform(jax.random.fold_in(key, 2), lead + (r, n)),
+        lam_prev=jnp.ones(lead, jnp.float32))
+
+
+class TestTransposeUnit:
+    def test_layout_change_is_identity(self):
+        """Regime/layout/group-size differences never touch the arrays:
+        same method + rank returns the state bit-identically."""
+        st = _mstate()
+        src = _desc(regime="row-rs", shards=8, axes=("x",),
+                    grad_layout="row", state_layout="slice")
+        tgt = _desc(regime="column", shards=4, axes=("x",),
+                    grad_layout="column", state_layout="column")
+        out = transpose_matrix_state(st, src, tgt)
+        assert out.S is st.S and out.M is st.M and out.V is st.V
+
+    def test_rank_truncate_and_pad(self):
+        for lead in ((), (3,)):
+            st = _mstate(lead=lead)
+            bd = len(lead)
+            down = transpose_matrix_state(st, _desc(16, batch_dims=bd),
+                                          _desc(8, batch_dims=bd))
+            np.testing.assert_array_equal(np.asarray(down.S),
+                                          np.asarray(st.S)[..., :, :8])
+            np.testing.assert_array_equal(np.asarray(down.M),
+                                          np.asarray(st.M)[..., :8, :])
+            up = transpose_matrix_state(st, _desc(16, batch_dims=bd),
+                                        _desc(24, batch_dims=bd))
+            S = np.asarray(up.S)
+            np.testing.assert_array_equal(S[..., :, :16],
+                                          np.asarray(st.S))
+            gram = np.swapaxes(S, -1, -2) @ S
+            np.testing.assert_allclose(
+                gram, np.broadcast_to(np.eye(24), gram.shape), atol=1e-5)
+            assert (np.asarray(up.M)[..., 16:, :] == 0).all()
+            assert (np.asarray(up.V)[..., 16:, :] == 0).all()
+
+    def test_grass_pad_stays_row_selection(self):
+        st = _mstate()
+        one_hot = jnp.eye(32, 16)        # rows 0..15 selected
+        st = st._replace(S=one_hot)
+        up = transpose_matrix_state(st, _desc(16, method="grass"),
+                                    _desc(20, method="grass"))
+        S = np.asarray(up.S)
+        assert set(np.unique(S)) <= {0.0, 1.0}
+        assert (S.sum(axis=0) == 1).all()
+        assert (S.sum(axis=1) <= 1).all()   # no row selected twice
+
+    def test_inadmissible_pairs_raise(self):
+        st = _mstate()
+        with pytest.raises(TransposeError, match=r"\(m, n\) changed"):
+            transpose_matrix_state(st, _desc(16), _desc(16, n=128))
+        with pytest.raises(TransposeError, match="stack dims"):
+            transpose_matrix_state(st, _desc(16), _desc(16, batch_dims=1))
+        with pytest.raises(TransposeError, match="mode changed"):
+            transpose_matrix_state(
+                st, _desc(16), StateDescriptor(kind="dense"))
+        with pytest.raises(TransposeError, match="does not match"):
+            transpose_matrix_state(_mstate(m=16, n=64),
+                                   _desc(16), _desc(8))
+
+    def test_legacy_checkpoint_without_records_loads_strict(self,
+                                                            tmp_path):
+        """Pre-elastic checkpoints (no state_programs in the manifest)
+        restore through the plain identical-shape path."""
+        st = {"opt": _mstate(), "step": jnp.int32(3)}
+        save_pytree(tmp_path / "ck", st)     # no descriptor records
+        loader = elastic_loader({"opt": _desc(16), "step":
+                                 StateDescriptor(kind="dense")})
+        back = loader(tmp_path / "ck", st, None)
+        np.testing.assert_array_equal(np.asarray(back["opt"].S),
+                                      np.asarray(st["opt"].S))
+
+    def test_record_count_mismatch_raises(self, tmp_path):
+        st = {"opt": _mstate()}
+        descs = {"opt": _desc(16)}
+        save_pytree(tmp_path / "ck", st,
+                    extra_meta=state_program_records(st, descs))
+        with pytest.raises(Exception, match="count mismatch"):
+            elastic_loader({"opt": _desc(16), "opt2": _desc(16)})(
+                tmp_path / "ck", st, None)

@@ -1,0 +1,321 @@
+"""Elastic cross-regime checkpoint restore on a fake 8-device CPU mesh.
+
+Run with ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI
+elastic-checkpoint step does); on a single-device interpreter every test
+here skips.  The acceptance contract of the transpose pass
+(``repro.checkpoint.transpose``), proven pairwise:
+
+* **bit-exact matrix**: for every admissible (source program, target
+  program) pair across replicated / column / row / row-rs / grass and
+  group sizes {1, 2, 4, 8} (g=1 IS the replicated/grass member of each
+  family — a group of one declares no collectives), a TrainState saved
+  under the source restores under the target with bit-exact logical
+  params and optimizer M/V/S/lam state.  Includes an odd-n leaf whose
+  ``n % g`` admissibility differs across group sizes (row-rs on g=2
+  degrades to replicated-M/V row on g=8), and a stacked (3, m, n) leaf;
+* **target placement**: the restored state lands in the target program's
+  declared layout (row-rs M/V arrive as (r, n/g) column slices);
+* **trajectory**: for representative pairs, 10 post-restore steps under
+  the target program track the uninterrupted source-program run within
+  the accumulated PR 1 per-step budgets (1e-5 plain / 1e-3 tracking —
+  the same budgets tests/test_mesh_fused.py pins per step from shared
+  state).  These loops carry the ``elastic_loop`` marker so CI's
+  interpret-mode job can select them;
+* **cross-method**: a dense-basis checkpoint restores onto a grass
+  target as a valid one-hot row selection with Eq. 8-9-rotated moments.
+"""
+
+import contextlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import CheckpointManager
+from repro.checkpoint import transpose as xp
+from repro.core.lowrank_adam import rotate_moments_dense
+from repro.core.subtrack import AdamHP, LowRankConfig, lowrank_optimizer
+from repro.launch.steps import (TrainState, checkpoint_descriptors,
+                                train_state_shardings)
+
+pytestmark = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+M, N, RANK = 64, 256, 16
+N_ODD = 250          # n % 8 != 0: row-rs admissibility flips with g
+
+# tag -> (group size, spec family, config overrides).  The spec family
+# picks each leaf's canonical sharded dim; wodd replicates under column
+# specs (250 doesn't divide the tested groups) and row-shards its m=64
+# under row specs, where the row-rs flavour then degrades by n % g.
+PROGRAMS = {
+    "replicated": (1, None, {}),
+    "grass":      (1, None, {"method": "grass"}),
+    "column-g2":  (2, "col", {}),
+    "column-g4":  (4, "col", {}),
+    "column-g8":  (8, "col", {}),
+    "row-g2":     (2, "row", {"row_state": "replicated"}),
+    "row-g8":     (8, "row", {"row_state": "replicated"}),
+    "rowrs-g2":   (2, "row", {"row_state": "reduce-scatter"}),
+    "rowrs-g4":   (4, "row", {"row_state": "reduce-scatter"}),
+    "rowrs-g8":   (8, "row", {"row_state": "reduce-scatter"}),
+}
+
+# every (src, tgt) pair is admissible except dense-basis -> grass, which
+# changes the basis (covered separately, not bit-exact)
+PAIRS = [(s, t) for s in PROGRAMS for t in PROGRAMS
+         if not (t == "grass" and s != "grass")]
+
+# representative same-method pairs for the 10-step trajectory loops
+LOOP_PAIRS = [("replicated", "column-g8"), ("column-g8", "rowrs-g8"),
+              ("rowrs-g8", "replicated"), ("row-g2", "rowrs-g4"),
+              ("rowrs-g8", "column-g2"), ("grass", "grass")]
+
+SAVE_STEP = 5
+POST_STEPS = 10
+
+
+def _params(key):
+    return {"w": 0.1 * jax.random.normal(key, (M, N)),
+            "layers": 0.1 * jax.random.normal(jax.random.fold_in(key, 5),
+                                              (3, M, N)),
+            "wodd": 0.1 * jax.random.normal(jax.random.fold_in(key, 7),
+                                            (M, N_ODD)),
+            "b": jnp.zeros((N,))}
+
+
+def _specs(family):
+    if family == "col":
+        return {"w": P(None, "x"), "layers": P(None, None, "x"),
+                "wodd": P(), "b": P()}
+    if family == "row":
+        return {"w": P("x", None), "layers": P(None, "x", None),
+                "wodd": P("x", None), "b": P()}
+    return None
+
+
+def _grad_at(key, params, s):
+    return {k: (1.0 + 0.3 * s) * jax.random.normal(
+        jax.random.fold_in(jax.random.fold_in(key, 100 + s), i), v.shape)
+        for i, (k, v) in enumerate(sorted(params.items()))}
+
+
+class Prog:
+    """One built program: optimizer, (sub)mesh, placement, descriptors."""
+
+    def __init__(self, tag):
+        g, family, overrides = PROGRAMS[tag]
+        self.tag = tag
+        kw = dict(rank=RANK, update_interval=4, eta=2e-5, use_kernels=True,
+                  adam=AdamHP())
+        kw.update(overrides)
+        self.cfg = LowRankConfig(**kw)
+        self.mesh = (Mesh(np.array(jax.devices()[:g]).reshape(g), ("x",))
+                     if g > 1 else None)
+        self.specs = _specs(family)
+        self.opt = lowrank_optimizer(self.cfg, mesh=self.mesh,
+                                     param_specs=self.specs)
+        self.param_shardings = (
+            {k: NamedSharding(self.mesh, s) for k, s in self.specs.items()}
+            if self.mesh is not None else None)
+        self.ctx = self.mesh if self.mesh is not None \
+            else contextlib.nullcontext()
+
+    def descriptors(self, params):
+        return checkpoint_descriptors(params, self.opt, mesh=self.mesh,
+                                      param_specs=self.specs)
+
+    def place(self, tree):
+        if self.param_shardings is None:
+            return tree
+        return jax.device_put(tree, self.param_shardings)
+
+    def evolve(self, state: TrainState, key, steps, record=False):
+        """Run ``steps`` optimizer steps (params held fixed, synthetic
+        grads, tracking every 4th) — returns (state, [host updates])."""
+        upd = jax.jit(self.opt.update,
+                      static_argnames=("do_subspace_update",))
+        params_d = self.place(state.params)
+        opt_state = state.opt
+        hist = []
+        with self.ctx:
+            for s in steps:
+                g = self.place(_grad_at(key, state.params, s))
+                do = s > 0 and s % 4 == 0
+                u, opt_state = upd(g, opt_state, params_d, 0.03,
+                                   do_subspace_update=do)
+                if record:
+                    hist.append({k: np.asarray(v) for k, v in u.items()})
+        return TrainState(params=state.params, opt=opt_state), hist
+
+
+@pytest.fixture(scope="module")
+def harness(tmp_path_factory):
+    """Lazy per-tag cache of (built program, evolved source TrainState,
+    saved checkpoint dir) — sources are built once and shared across the
+    whole pair matrix."""
+    key = jax.random.PRNGKey(0)
+    params = _params(key)
+    progs: dict = {}
+    srcs: dict = {}
+
+    def prog(tag) -> Prog:
+        if tag not in progs:
+            progs[tag] = Prog(tag)
+        return progs[tag]
+
+    def source(tag):
+        if tag not in srcs:
+            p = prog(tag)
+            state = TrainState(params=params,
+                               opt=p.opt.init(params))
+            with p.ctx:
+                state = TrainState(
+                    params=state.params,
+                    opt=p.opt.warm_start(state.opt,
+                                         _grad_at(key, params, 0)))
+            state, _ = p.evolve(state, key, range(SAVE_STEP))
+            root = tmp_path_factory.mktemp(f"ckpt_{tag}")
+            mgr = CheckpointManager(root)
+            descs = p.descriptors(params)
+            mgr.save(SAVE_STEP, state, blocking=True,
+                     extra_meta=xp.state_program_records(state, descs))
+            host = jax.tree.map(np.asarray, state)
+            srcs[tag] = (root, host, state)
+        return srcs[tag]
+
+    return {"key": key, "params": params, "prog": prog, "source": source}
+
+
+def _restore(harness, src_tag, tgt_tag):
+    root, host_src, _ = harness["source"](src_tag)
+    tgt = harness["prog"](tgt_tag)
+    params = harness["params"]
+    like = TrainState(params=params, opt=tgt.opt.init(params))
+    descs = tgt.descriptors(params)
+    got = CheckpointManager(root).restore(
+        like,
+        shardings=train_state_shardings(like, descs, tgt.mesh,
+                                        tgt.param_shardings),
+        loader=xp.elastic_loader(descs))
+    assert got is not None
+    back, step = got
+    assert step == SAVE_STEP
+    return host_src, back, tgt
+
+
+@pytest.mark.parametrize("src,tgt", PAIRS,
+                         ids=[f"{s}->{t}" for s, t in PAIRS])
+def test_bit_exact_matrix(harness, src, tgt):
+    """Same-method pairs (and grass -> dense-basis) round-trip the
+    LOGICAL state bit-exactly: layout, regime and group-size changes
+    never touch the arrays, only the placement."""
+    host_src, back, _ = _restore(harness, src, tgt)
+    flat_src = jax.tree_util.tree_flatten_with_path(host_src)[0]
+    flat_back = jax.tree_util.tree_leaves(back)
+    assert len(flat_src) == len(flat_back)
+    for (path, a), b in zip(flat_src, flat_back):
+        np.testing.assert_array_equal(
+            a, np.asarray(b), err_msg=jax.tree_util.keystr(path))
+
+
+def test_restored_state_lands_in_target_layout(harness):
+    """row-rs target: restored M/V arrive reduce-scattered — (r, n/g)
+    column slices per shard — and S row-sharded, straight off the target
+    program's declared state layout."""
+    _, back, tgt = _restore(harness, "replicated", "rowrs-g8")
+    st = back.opt.inner["w"]
+    assert st.M.sharding.spec == P(None, "x")
+    assert st.S.sharding.spec == P("x", None)
+    shard = st.M.addressable_shards[0]
+    assert shard.data.shape == (RANK, N // 8)
+    s_shard = st.S.addressable_shards[0]
+    assert s_shard.data.shape == (M // 8, RANK)
+    # the odd-n leaf's target program degraded to replicated M/V (250 %
+    # 8 != 0) — same checkpoint, different admissibility, still restores
+    assert back.opt.inner["wodd"].M.sharding.spec == P(None, None)
+
+
+def test_dense_basis_to_grass_conversion(harness):
+    """Cross-method restore: the grass target gets a valid one-hot row
+    selection and moments rotated by the paper's Eq. 8-9 with
+    Q = S_new^T S_old (the ``rotate_moments_dense`` oracle)."""
+    root, host_src, _ = harness["source"]("column-g4")
+    tgt = harness["prog"]("grass")
+    params = harness["params"]
+    like = TrainState(params=params, opt=tgt.opt.init(params))
+    descs = tgt.descriptors(params)
+    back, _ = CheckpointManager(root).restore(
+        like, loader=xp.elastic_loader(descs))
+    for leaf in ("w", "layers"):
+        S_new = np.asarray(back.opt.inner[leaf].S)
+        assert set(np.unique(S_new)) <= {0.0, 1.0}
+        assert (S_new.sum(axis=-2) == 1.0).all()      # one-hot columns
+        assert (S_new.sum(axis=(-2, -1)) == RANK).all()
+        src_st = host_src.opt.inner[leaf]
+        Q = np.swapaxes(S_new, -1, -2) @ src_st.S
+        M_ref, V_ref = rotate_moments_dense(
+            jnp.asarray(Q), jnp.asarray(src_st.M), jnp.asarray(src_st.V),
+            jnp.int32(SAVE_STEP), AdamHP())
+        np.testing.assert_allclose(np.asarray(back.opt.inner[leaf].M),
+                                   np.asarray(M_ref), atol=1e-6)
+        np.testing.assert_allclose(np.asarray(back.opt.inner[leaf].V),
+                                   np.asarray(V_ref), atol=1e-6)
+
+
+@pytest.mark.elastic_loop
+@pytest.mark.parametrize("src,tgt", LOOP_PAIRS,
+                         ids=[f"{s}->{t}" for s, t in LOOP_PAIRS])
+def test_post_restore_trajectory_matches_uninterrupted(harness, src, tgt):
+    """10 post-restore steps under the TARGET program vs the
+    uninterrupted SOURCE-program run, from the bit-exact restored state:
+    per-step update agreement within the accumulated PR 1 budgets
+    (1e-5 plain / 1e-3 tracking per step — cross-program fp noise
+    compounds through the evolving state, so step s's tolerance is the
+    budget sum since the restore)."""
+    key = harness["key"]
+    _, _, state_src = harness["source"](src)
+    host_src, back, tgt_prog = _restore(harness, src, tgt)
+    src_prog = harness["prog"](src)
+    steps = range(SAVE_STEP, SAVE_STEP + POST_STEPS)
+    _, ref = src_prog.evolve(state_src, key, steps, record=True)
+    _, got = tgt_prog.evolve(back, key, steps, record=True)
+    budget = 0.0
+    tracked = 0
+    for i, s in enumerate(steps):
+        do = s % 4 == 0
+        tracked += do
+        budget += 1e-3 if do else 1e-5
+        for leaf in ("w", "layers", "wodd"):
+            rel = float(np.max(np.abs(ref[i][leaf] - got[i][leaf]))
+                        / (np.max(np.abs(ref[i][leaf])) + 1e-12))
+            assert rel < 10 * budget, (s, leaf, rel, budget)
+    assert tracked == 2   # the loop exercised tracking steps, plural
+
+
+def test_fallback_skips_layout_incompatible_latest(harness, tmp_path):
+    """A newest checkpoint the transpose pass cannot reach the target
+    from (rank crossed plan.py's dense gate) is skipped — restore falls
+    back to the older, transposable one."""
+    key = harness["key"]
+    params = harness["params"]
+    p = harness["prog"]("replicated")
+    state = TrainState(params=params, opt=p.opt.init(params))
+    mgr = CheckpointManager(tmp_path)
+    descs = p.descriptors(params)
+    mgr.save(3, state, blocking=True,
+             extra_meta=xp.state_program_records(state, descs))
+    # newest step: saved at rank m=64 — every 2-D leaf is DENSE there
+    cfg_dense = LowRankConfig(rank=M, update_interval=4)
+    opt_dense = lowrank_optimizer(cfg_dense)
+    st_dense = TrainState(params=params, opt=opt_dense.init(params))
+    descs_dense = checkpoint_descriptors(params, opt_dense)
+    mgr.save(9, st_dense, blocking=True,
+             extra_meta=xp.state_program_records(st_dense, descs_dense))
+    got = mgr.restore(TrainState(params=params, opt=p.opt.init(params)),
+                      loader=xp.elastic_loader(descs))
+    assert got is not None
+    assert got[1] == 3

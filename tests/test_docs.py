@@ -17,9 +17,15 @@ def test_intra_repo_doc_links_resolve():
 
 
 def test_readme_documents_verify_command():
-    cmds = check_docs.readme_commands()
+    cmds = [c for doc, c in check_docs.doc_commands() if doc == "README.md"]
     assert any("python -m pytest" in c and "PYTHONPATH=src" in c
                for c in cmds), cmds
+
+
+def test_docs_document_elastic_restore():
+    cmds = [c for _, c in check_docs.doc_commands()]
+    assert any("tools/dump_ckpt.py" in c for c in cmds), cmds
+    assert any("tests/test_checkpoint_elastic.py" in c for c in cmds), cmds
 
 
 def test_readme_and_architecture_exist():

@@ -1,13 +1,14 @@
-"""Docs hygiene checker: intra-repo links resolve and README commands parse.
+"""Docs hygiene checker: intra-repo links resolve and doc commands parse.
 
 Two layers:
 
 * link check (always): every relative markdown link in the repo's *.md
   files (root + docs/) must point at an existing file or directory;
   ``#anchors`` are stripped, external ``http(s)://`` links are skipped.
-* command check (``--run``): fenced ```bash blocks in README.md are
-  scanned; ``python <script>.py`` invocations must reference existing
-  scripts, and every ``python -m pytest`` invocation is executed with
+* command check (``--run``): fenced ```bash blocks in EVERY doc file
+  (root + docs/ — README, architecture.md, ...) are scanned;
+  ``python <script>.py`` invocations must reference existing scripts,
+  and every ``python -m pytest`` invocation is executed with
   ``--collect-only -q`` appended — proving the documented verify command
   parses and the suite collects — without running the tests.
 
@@ -50,22 +51,35 @@ def check_links() -> list[str]:
     return errors
 
 
-def readme_commands() -> list[str]:
-    """Non-comment command lines from README.md bash fences."""
-    text = (REPO / "README.md").read_text()
-    lines: list[str] = []
-    for block in FENCE_RE.findall(text):
-        for line in block.splitlines():
-            line = line.strip()
-            if line and not line.startswith("#"):
-                lines.append(line)
-    return lines
+def doc_commands() -> list[tuple[str, str]]:
+    """(doc-file, command) pairs from bash fences in every doc file.
+
+    Continuation lines (trailing ``\\``) are joined so a wrapped pytest
+    invocation is collected as one command.
+    """
+    pairs: list[tuple[str, str]] = []
+    for md in doc_files():
+        name = str(md.relative_to(REPO))
+        for block in FENCE_RE.findall(md.read_text()):
+            pending = ""
+            for line in block.splitlines():
+                line = line.strip()
+                if not line or line.startswith("#"):
+                    continue
+                if line.endswith("\\"):
+                    pending += line[:-1] + " "
+                    continue
+                pairs.append((name, (pending + line).strip()))
+                pending = ""
+            if pending:
+                pairs.append((name, pending.strip()))
+    return pairs
 
 
 def check_commands() -> list[str]:
-    """Validate README commands: scripts exist, pytest lines collect."""
+    """Validate doc commands: scripts exist, pytest lines collect."""
     errors = []
-    for cmd in readme_commands():
+    for doc, cmd in doc_commands():
         parts = shlex.split(cmd)
         # skip env assignments to find the program
         prog_i = 0
@@ -80,11 +94,11 @@ def check_commands() -> list[str]:
                 capture_output=True, text=True, timeout=600)
             if run.returncode != 0:
                 errors.append(
-                    f"README command failed to collect: {cmd!r}\n"
+                    f"{doc} command failed to collect: {cmd!r}\n"
                     f"{run.stdout[-2000:]}{run.stderr[-2000:]}")
         elif len(prog) > 1 and prog[1].endswith(".py"):
             if not (REPO / prog[1]).exists():
-                errors.append(f"README references missing script: {prog[1]}")
+                errors.append(f"{doc} references missing script: {prog[1]}")
     return errors
 
 
@@ -95,9 +109,9 @@ def main() -> int:
     for e in errors:
         print(f"ERROR: {e}")
     if not errors:
-        n_cmds = len(readme_commands()) if "--run" in sys.argv else 0
+        n_cmds = len(doc_commands()) if "--run" in sys.argv else 0
         print(f"docs OK: {len(doc_files())} files checked"
-              + (f", {n_cmds} README commands scanned" if n_cmds else ""))
+              + (f", {n_cmds} doc commands scanned" if n_cmds else ""))
     return 1 if errors else 0
 
 

@@ -1,0 +1,139 @@
+"""Checkpoint inspector: steps, manifest schema, embedded StepPrograms.
+
+    PYTHONPATH=src python tools/dump_ckpt.py /path/to/ckpt-dir
+    PYTHONPATH=src python tools/dump_ckpt.py /path/to/ckpt-dir --step 50 \
+        --leaves --verify
+
+Prints the step directories a ``CheckpointManager`` root holds (flagging
+orphaned ``.tmp`` dirs from crashed saves), then for the chosen step (the
+newest by default): the manifest format/extras, the embedded per-leaf
+StepProgram descriptors (``state_programs`` — regime, shards, state
+layout, rank, method: what the elastic restore transposes from), and with
+``--leaves`` the full per-leaf table.  ``--verify`` re-reads ``data.bin``
+and recomputes every crc32 — the offline answer to "is this checkpoint
+restorable, and if not, which leaf is damaged?".
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import zlib
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.checkpoint.manager import CheckpointManager, load_manifest
+
+
+def _fmt_bytes(n: int) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB"):
+        if n < 1024 or unit == "GiB":
+            return f"{n:.1f} {unit}" if unit != "B" else f"{n} B"
+        n /= 1024
+    return f"{n} B"
+
+
+def _verify(path: Path, manifest: dict) -> int:
+    try:
+        import zstandard as zstd
+        dctx = zstd.ZstdDecompressor()
+    except Exception:
+        dctx = None
+    data = (path / "data.bin").read_bytes()
+    bad = 0
+    for i, meta in enumerate(manifest["leaves"]):
+        blob = data[meta["offset"]:meta["offset"] + meta["nbytes"]]
+        try:
+            if len(blob) < meta["nbytes"]:
+                raise IOError(f"truncated ({len(blob)}/{meta['nbytes']} B)")
+            if meta["compressed"]:
+                if dctx is None:
+                    raise IOError("compressed but zstandard unavailable")
+                blob = dctx.decompress(blob,
+                                       max_output_size=meta["raw_nbytes"])
+            if zlib.crc32(blob) != meta["crc32"]:
+                raise IOError("crc32 mismatch")
+        except Exception as e:
+            print(f"  LEAF {i} DAMAGED: {e}")
+            bad += 1
+    print(f"  verify: {len(manifest['leaves']) - bad} ok, {bad} damaged")
+    return bad
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("root", help="CheckpointManager root directory")
+    ap.add_argument("--step", type=int, default=None,
+                    help="inspect this step (default: newest)")
+    ap.add_argument("--leaves", action="store_true",
+                    help="print the full per-leaf manifest table")
+    ap.add_argument("--verify", action="store_true",
+                    help="recompute every leaf crc32 against data.bin")
+    args = ap.parse_args(argv)
+
+    root = Path(args.root)
+    if not root.exists():
+        print(f"no such directory: {root}")
+        return 1
+    mgr = CheckpointManager(root)
+    steps = mgr.steps()
+    tmps = sorted(p.name for p in root.iterdir()
+                  if p.is_dir() and p.name.endswith(".tmp"))
+    print(f"{root}: {len(steps)} complete step(s) "
+          f"{steps if steps else ''}")
+    for t in tmps:
+        print(f"  orphaned partial write (crashed save): {t}/")
+    if not steps:
+        return 0 if not args.verify else 1
+
+    step = args.step if args.step is not None else steps[-1]
+    path = root / f"step_{step:010d}"
+    if not (path / "manifest.msgpack").exists():
+        print(f"step {step}: no manifest at {path}")
+        return 1
+    manifest = load_manifest(path)
+    extra = manifest.get("extra", {})
+    total_raw = sum(m["raw_nbytes"] for m in manifest["leaves"])
+    total_disk = sum(m["nbytes"] for m in manifest["leaves"])
+    print(f"\nstep {step} ({path.name}): format {manifest['format']}, "
+          f"{manifest['n_leaves']} leaves, "
+          f"{_fmt_bytes(total_raw)} logical / {_fmt_bytes(total_disk)} "
+          "on disk")
+    for k in ("step", "time"):
+        if k in extra:
+            print(f"  extra.{k}: {extra[k]}")
+
+    programs = extra.get("state_programs")
+    if programs:
+        print(f"\n  state programs ({len(programs)} optimizer-state "
+              "nodes):")
+        for rec in programs:
+            if rec["kind"] == "dense":
+                print(f"    {rec['path']:40s} dense")
+                continue
+            print(f"    {rec['path']:40s} {rec['regime']:10s} "
+                  f"g={rec['shards']} axes={tuple(rec['axes']) or '-'} "
+                  f"state={rec['state_layout']:10s} "
+                  f"m={rec['m']} n={rec['n']} r={rec['rank']} "
+                  f"method={rec['method']}")
+    else:
+        print("\n  no embedded state programs (pre-elastic checkpoint: "
+              "restores strict-shape only)")
+
+    if args.leaves:
+        print("\n  leaves:")
+        for i, m in enumerate(manifest["leaves"]):
+            print(f"    [{i:3d}] shape={tuple(m['shape'])!s:20s} "
+                  f"{m['dtype']:10s} {_fmt_bytes(m['raw_nbytes']):>12s} "
+                  f"crc32={m['crc32']:#010x}"
+                  f"{' zstd' if m['compressed'] else ''}")
+
+    if args.verify:
+        print()
+        return 1 if _verify(path, manifest) else 0
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
