@@ -71,8 +71,11 @@ def load_manifest(path: str | os.PathLike) -> dict:
 
 
 def save_pytree(path: str | os.PathLike, tree: Any,
-                extra_meta: dict | None = None) -> None:
-    """Synchronous atomic checkpoint write of one pytree."""
+                extra_meta: dict | None = None,
+                marker: str | None = None) -> None:
+    """Synchronous atomic checkpoint write of one pytree.  ``marker``
+    names an empty tag file written into the tmp dir before the
+    ``os.replace`` — atomic with the checkpoint (the known-good tag)."""
     path = Path(path)
     tmp = path.with_name(path.name + ".tmp")
     tmp.mkdir(parents=True, exist_ok=True)
@@ -111,6 +114,8 @@ def save_pytree(path: str | os.PathLike, tree: Any,
     # structure as python repr for restore-time validation / tooling
     (tmp / "structure.json").write_text(json.dumps(
         {"treedef": str(treedef), "extra": extra_meta or {}}, indent=2))
+    if marker:
+        (tmp / marker).touch()
     if path.exists():
         _rmtree(path)
     os.replace(tmp, path)
@@ -179,31 +184,83 @@ def _rmtree(p: Path) -> None:
 
 
 class CheckpointManager:
-    """Step-indexed checkpoint directory with async save + keep-N GC."""
+    """Step-indexed checkpoint directory with async save + keep-N GC.
+
+    Robustness behaviours (see docs/architecture.md, "Self-healing
+    runtime"):
+
+    * **I/O retry**: each save attempt that dies on a transient
+      ``OSError`` is retried up to ``retries`` times with exponential
+      backoff + jitter; only exhaustion surfaces the error (on the next
+      ``wait()``).  ``fail_next_saves(n)`` is the fault-injection knob —
+      the next ``n`` attempts raise before touching disk.
+    * **Known-good tagging**: ``save(..., known_good=True)`` drops a
+      ``KNOWN_GOOD`` marker into the checkpoint directory *atomically
+      with the checkpoint itself* (written into the tmp dir before the
+      ``os.replace``).  The caller tags only after the step's drained
+      metrics validate, so a tagged step is one the host sentinel
+      observed healthy.  ``rollback()`` restores the newest tagged step
+      and the GC always preserves it.
+    """
 
     STEP_RE = re.compile(r"^step_(\d+)$")
+    KNOWN_GOOD_MARKER = "KNOWN_GOOD"
 
-    def __init__(self, root: str | os.PathLike, keep: int = 3):
+    def __init__(self, root: str | os.PathLike, keep: int = 3,
+                 retries: int = 3, backoff_s: float = 0.05):
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
         self.keep = keep
+        self.retries = retries
+        self.backoff_s = backoff_s
         self._worker: threading.Thread | None = None
         self._last_error: BaseException | None = None
+        self._fail_saves = 0
 
     # ---------------- save ----------------
 
+    def fail_next_saves(self, n: int) -> None:
+        """Fault injection (--inject ckpt-io-error, tests): the next ``n``
+        save *attempts* raise OSError before touching the filesystem."""
+        self._fail_saves = n
+
+    def _save_once(self, step: int, host_tree: Any, meta: dict,
+                   known_good: bool) -> None:
+        if self._fail_saves > 0:
+            self._fail_saves -= 1
+            raise OSError("injected checkpoint I/O failure")
+        path = self.root / f"step_{step:010d}"
+        save_pytree(path, host_tree, meta,
+                    marker=self.KNOWN_GOOD_MARKER if known_good else None)
+
     def save(self, step: int, tree: Any, blocking: bool = False,
-             extra_meta: dict | None = None) -> None:
+             extra_meta: dict | None = None,
+             known_good: bool = False) -> None:
         self.wait()   # backpressure: one outstanding save
         host_tree = jax.tree.map(np.asarray, tree)   # snapshot now
-        meta = dict(extra_meta or {}, step=step, time=time.time())
+        meta = dict(extra_meta or {}, step=step, time=time.time(),
+                    known_good=bool(known_good))
 
         def work():
-            try:
-                save_pytree(self.root / f"step_{step:010d}", host_tree, meta)
-                self._gc()
-            except BaseException as e:  # surfaced on next wait()
-                self._last_error = e
+            import random
+            for attempt in range(self.retries + 1):
+                try:
+                    self._save_once(step, host_tree, meta, known_good)
+                    self._gc()
+                    return
+                except OSError as e:
+                    if attempt == self.retries:
+                        self._last_error = e   # surfaced on next wait()
+                        return
+                    delay = (self.backoff_s * (2 ** attempt)
+                             * (1.0 + random.random()))
+                    print(f"[ckpt] save step {step} attempt "
+                          f"{attempt + 1} failed ({e}) — retrying in "
+                          f"{delay:.3f}s", flush=True)
+                    time.sleep(delay)
+                except BaseException as e:  # non-I/O: no point retrying
+                    self._last_error = e
+                    return
 
         if blocking:
             work()
@@ -234,6 +291,34 @@ class CheckpointManager:
     def latest_step(self) -> int | None:
         s = self.steps()
         return s[-1] if s else None
+
+    def known_good_steps(self) -> list[int]:
+        """Complete checkpoints carrying the KNOWN_GOOD tag, ascending."""
+        return [s for s in self.steps()
+                if (self.root / f"step_{s:010d}"
+                    / self.KNOWN_GOOD_MARKER).exists()]
+
+    def rollback(self, like: Any, shardings: Any | None = None,
+                 loader=None, before: int | None = None
+                 ) -> tuple[Any, int] | None:
+        """Restore the newest *known-good* checkpoint (optionally only
+        steps strictly below ``before``), falling back past damaged
+        tagged steps like :meth:`restore`.  Returns (tree, step) or None
+        when no tagged step is restorable.  Waits out any in-flight save
+        first so the rollback never races the worker thread."""
+        self.wait()
+        load = loader if loader is not None else load_pytree
+        for s in reversed(self.known_good_steps()):
+            if before is not None and s >= before:
+                continue
+            path = self.root / f"step_{s:010d}"
+            try:
+                return load(path, like, shardings), s
+            except Exception as e:
+                print(f"[ckpt] known-good step {s} not restorable "
+                      f"({type(e).__name__}: {e}) — falling back to the "
+                      "previous tagged checkpoint", flush=True)
+        return None
 
     def restore(self, like: Any, step: int | None = None,
                 shardings: Any | None = None,
@@ -271,6 +356,14 @@ class CheckpointManager:
         return None
 
     def _gc(self) -> None:
+        if not self.keep:
+            return
         steps = self.steps()
-        for s in steps[:-self.keep] if self.keep else []:
-            _rmtree(self.root / f"step_{s:010d}")
+        preserve = set(steps[-self.keep:])
+        kg = self.known_good_steps()
+        if kg:
+            # the rollback anchor outlives the keep-N window
+            preserve.add(kg[-1])
+        for s in steps:
+            if s not in preserve:
+                _rmtree(self.root / f"step_{s:010d}")

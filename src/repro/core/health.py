@@ -1,0 +1,147 @@
+"""In-graph step-health reporting for the self-healing training runtime.
+
+Every train step emits a tiny fp32 :class:`HealthReport` assembled from
+the O(n) reductions the step already produces — the global grad norm
+(``clip_by_global_norm``; on the grad-fused path ``sum tap[-1]`` equals
+||G||_F^2 exactly), the loss scalar, the update norm (the apply reads
+every update leaf anyway, so XLA fuses the reduction into the same
+pass), and the subspace tracker's (sigma, theta) diagnostics.  The
+report NEVER triggers an extra pass over the full-width gradient.
+
+The step-level consumer is ``launch/steps.py``: :func:`step_ok` gates a
+``jax.lax.cond`` around the parameter/optimizer apply, so an unhealthy
+step is **quarantined** — params, Adam moments (M, V), the subspace S
+and the Adam step count all stay bit-identical, matching loss-scaling
+skip semantics.  The host-level consumer is the escalation ladder in
+``launch/train.py`` (skip -> forced refresh -> rollback -> abort).
+
+Subspace diagnostics travel as a single ``(DIAG_SIZE,)`` fp32 vector
+(indices below) because a flat array crosses ``program.lower``'s
+shard_map boundary with one replicated out-spec under every regime —
+sigma/theta derive from psum'd quantities, so they are identical on
+every shard in both tracking schedules.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# Indices into the per-leaf subspace diagnostic vector.
+DIAG_SIGMA = 0        # raw top singular value of the tangent (pre-clamp)
+DIAG_THETA = 1        # rotation angle actually applied (post clamp/guard)
+DIAG_CLAMPED = 2      # 1.0 when eta*sigma wrapped past the clamp
+DIAG_DEGENERATE = 3   # 1.0 when a non-finite geodesic was zeroed
+DIAG_SIZE = 4
+
+# The geodesic rotation angle is only injective on (-pi/2, pi/2): past it,
+# eta*sigma wraps around the circle and the "step" direction inverts (the
+# hazard documented with the rank-1 geodesic in PR 2).  Clamp slightly
+# inside the boundary so cos(theta) stays bounded away from 0.
+THETA_MAX = (math.pi / 2.0) * (1.0 - 1e-3)
+
+
+def zero_diag() -> Array:
+    """The all-healthy diagnostic vector (plain steps, dense leaves)."""
+    return jnp.zeros((DIAG_SIZE,), jnp.float32)
+
+
+def merge_diag(a: Array, b: Array) -> Array:
+    """Aggregate two diagnostic vectors: elementwise max is correct for
+    every slot (worst sigma/theta, sticky flags)."""
+    return jnp.maximum(a, b)
+
+
+def reduce_diag(diag: Array) -> Array:
+    """Collapse a stacked (..., DIAG_SIZE) diagnostic block (vmapped
+    matrix steps) to one vector."""
+    return jnp.max(diag.reshape((-1, DIAG_SIZE)), axis=0)
+
+
+class HealthReport(NamedTuple):
+    """Per-step health scalars, all fp32 () arrays.
+
+    ``ok`` is the quarantine gate: finite loss AND finite global grad
+    norm AND finite update norm.  A non-finite grad norm with a finite
+    loss (bf16 overflow in one leaf) fails the gate even though the
+    clipped update may look small — the clip scale itself is poisoned
+    (inf * 0 and NaN propagation), which is exactly the divergence mode
+    the old loss-only host check let sail through.
+    """
+
+    loss: Array
+    grad_norm: Array
+    update_norm: Array
+    sigma: Array          # worst tracked sigma this step (0 on plain steps)
+    theta: Array          # worst applied rotation angle (0 on plain steps)
+    theta_clamped: Array  # 1.0 if any leaf hit the theta clamp
+    geo_degenerate: Array  # 1.0 if any leaf zeroed a non-finite geodesic
+    ok: Array             # () bool — apply gate
+
+
+def make_report(loss: Array, grad_norm: Array, update_norm: Array,
+                diag: Optional[Array] = None) -> HealthReport:
+    """Assemble the step report from already-computed reductions."""
+    if diag is None:
+        diag = zero_diag()
+    loss = jnp.asarray(loss, jnp.float32)
+    grad_norm = jnp.asarray(grad_norm, jnp.float32)
+    update_norm = jnp.asarray(update_norm, jnp.float32)
+    ok = (jnp.isfinite(loss) & jnp.isfinite(grad_norm)
+          & jnp.isfinite(update_norm))
+    return HealthReport(
+        loss=loss, grad_norm=grad_norm, update_norm=update_norm,
+        sigma=diag[DIAG_SIGMA], theta=diag[DIAG_THETA],
+        theta_clamped=diag[DIAG_CLAMPED],
+        geo_degenerate=diag[DIAG_DEGENERATE], ok=ok)
+
+
+def step_ok(report: HealthReport) -> Array:
+    """The quarantine gate (alias for ``report.ok``, kept as the named
+    entry point the step factory conditions on)."""
+    return report.ok
+
+
+def report_metrics(report: HealthReport) -> dict:
+    """Flatten the report into host-drainable metric entries."""
+    return {
+        "update_norm": report.update_norm,
+        "sigma": report.sigma,
+        "theta": report.theta,
+        "theta_clamped": report.theta_clamped,
+        "geo_degenerate": report.geo_degenerate,
+        "quarantined": (~report.ok).astype(jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# In-graph fault-injection codes (--inject, launch/train.py)
+# ---------------------------------------------------------------------------
+#
+# The codes ride into the compiled step as ONE traced int32 scalar, so an
+# injection run never recompiles per step and a non-injection run never
+# carries the argument at all (make_train_step(inject=False) builds the
+# exact pre-injection program).  The injected faults reuse values the
+# step already streams: nan-grad scales the loss scalar fed to
+# value_and_grad (the backward cotangent seed — zero extra passes, and
+# the TRUE loss still reaches metrics via aux), loss-spike amplifies the
+# applied update inside the apply that reads it anyway.  sigma-blowup is
+# a *static* eta multiplier (threaded to track_subspace as a float) since
+# it only exists to wrap theta on one tracking step.
+
+INJECT_NONE = 0
+INJECT_NAN_GRAD = 1
+INJECT_LOSS_SPIKE = 2
+
+# Update amplification for INJECT_LOSS_SPIKE (applied NEGATED — a huge
+# ascent step, so the loss rises in every training phase): large enough
+# that the next steps' losses spike well past the sentinel's EMA gate
+# even at the low-lr end of the cosine schedule, small enough the
+# post-fault losses stay finite (a finite-but-wrecked model is the case
+# quarantine canNOT catch — only the host ladder can).
+LOSS_SPIKE_AMP = 4096.0

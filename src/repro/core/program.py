@@ -585,9 +585,10 @@ def executor(program: StepProgram) -> Exec:
 
 
 def lower(program: StepProgram, fn: Callable, *, mesh, batch_dims: int,
-          with_param: bool, with_tap: bool = False) -> Callable:
+          with_param: bool, with_tap: bool = False,
+          with_health: bool = False) -> Callable:
     """Turn the per-bucket stacked step ``fn(g, st[, p][, tap]) ->
-    (delta, st')`` into the program's runner.
+    (delta, st'[, diag])`` into the program's runner.
 
     Replicated programs return ``fn`` unchanged (plain jit path, GSPMD
     propagation).  Sharded programs wrap ``fn`` in ``shard_map`` with
@@ -600,6 +601,10 @@ def lower(program: StepProgram, fn: Callable, *, mesh, batch_dims: int,
     (r+1, n) [A; colnorms] panel as the trailing argument; it shards
     along n with the gradient columns (the tap is column-separable), so
     inside the column regime each shard consumes exactly its slice.
+    ``with_health`` appends a third output: the per-matrix
+    (health.DIAG_SIZE,) diagnostic vector, replicated — sigma/theta and
+    the guard flags derive from psum'd quantities, so every shard holds
+    the same values under both tracking schedules.
     """
     if not program.axes:
         return fn
@@ -624,6 +629,9 @@ def lower(program: StepProgram, fn: Callable, *, mesh, batch_dims: int,
     in_specs = (gspec, stspec) + ((gspec,) if with_param else ())
     if with_tap:
         in_specs = in_specs + (P(*lead, None, ax),)
+    out_specs = (gspec, stspec)
+    if with_health:
+        out_specs = out_specs + (P(*lead, None),)
     sharded = shard_map(fn, mesh=mesh, in_specs=in_specs,
-                        out_specs=(gspec, stspec), check_rep=False)
+                        out_specs=out_specs, check_rep=False)
     return sharded

@@ -30,6 +30,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import health as health_lib
 from repro.core import program as program_lib
 
 Array = jax.Array
@@ -200,7 +201,43 @@ def top1_eigh(T: Array) -> Rank1Triple:
 # ---------------------------------------------------------------------------
 
 
-def geodesic_step(S: Array, triple: Rank1Triple, eta: float) -> Array:
+def guard_geodesic(triple: Rank1Triple, eta: float
+                   ) -> tuple[Rank1Triple, Array, Array]:
+    """Runtime health guards on the rank-1 geodesic (shard-local scalars,
+    valid under every StepProgram regime).
+
+    1. **Non-finite guard**: a non-finite (sigma, u, v) — overflowed
+       gradients, a NaN'd power iteration — would poison S for every
+       later step.  Zero the triple instead: with theta = 0 and v = 0
+       the geodesic is the exact identity (S_new = S bit-wise, rotation
+       Q = I exactly).
+    2. **Theta clamp**: the rotation angle theta = eta*sigma is only
+       injective on (-pi/2, pi/2); past it the step wraps around the
+       circle (the PR 2 hazard).  Clamp to ``health.THETA_MAX`` and flag.
+
+    Returns ``(guarded_triple, theta, diag)`` with ``theta`` the angle to
+    actually apply and ``diag`` the (health.DIAG_SIZE,) report vector
+    (raw sigma, applied theta, clamp/degenerate flags).
+    """
+    sigma_raw = triple.sigma
+    finite = (jnp.isfinite(sigma_raw) & jnp.all(jnp.isfinite(triple.u))
+              & jnp.all(jnp.isfinite(triple.v)))
+    sigma_f = jnp.where(finite, sigma_raw, 0.0)
+    guarded = Rank1Triple(
+        sigma=sigma_f,
+        u=jnp.where(finite, triple.u, jnp.zeros_like(triple.u)),
+        v=jnp.where(finite, triple.v, jnp.zeros_like(triple.v)))
+    theta_raw = sigma_f * eta
+    theta = jnp.minimum(theta_raw, health_lib.THETA_MAX)
+    diag = jnp.stack([
+        sigma_raw.astype(jnp.float32), theta.astype(jnp.float32),
+        (theta_raw > health_lib.THETA_MAX).astype(jnp.float32),
+        (~finite).astype(jnp.float32)])
+    return guarded, theta, diag
+
+
+def geodesic_step(S: Array, triple: Rank1Triple, eta: float,
+                  theta: Optional[Array] = None) -> Array:
     """Move along the Grassmann geodesic by step ``eta`` (paper Eq. 5).
 
     For the rank-1 tangent approximation ``T ~= sigma * u v^T`` the exponential
@@ -213,8 +250,12 @@ def geodesic_step(S: Array, triple: Rank1Triple, eta: float) -> Array:
     is preserved exactly because u ⟂ range(S) and ||u|| = ||v|| = 1.
     When sigma == 0 (zero tangent: the subspace already contains G's range)
     u is zeroed by the guard in ``top1_power`` and S is returned unchanged.
+
+    ``theta`` overrides the rotation angle (the health guard passes the
+    clamped eta*sigma through here; default keeps the raw product).
     """
-    theta = triple.sigma * eta
+    if theta is None:
+        theta = triple.sigma * eta
     Sv = S @ triple.v                                   # (m,)
     upd = jnp.outer(Sv * (jnp.cos(theta) - 1.0) + triple.u * jnp.sin(theta),
                     triple.v)
@@ -271,6 +312,11 @@ class TrackResult(NamedTuple):
     #                               basis moves (None on the jnp path)
     A_new: Optional[Array] = None  # (r, n) global NEW-basis projection
     #                                (gram schedule only)
+    diag: Optional[Array] = None   # (health.DIAG_SIZE,) fp32 health
+    #                                diagnostics — raw sigma, applied
+    #                                theta, clamp/degenerate flags;
+    #                                replicated under every regime (all
+    #                                derive from psum'd quantities)
 
 
 def _track_tangent_schedule(S, G, *, eta, fused_tangent, exact_top1,
@@ -301,10 +347,11 @@ def _track_tangent_schedule(S, G, *, eta, fused_tangent, exact_top1,
     # enters only through u (sigma, v come from the sign-invariant Gram).
     triple = triple._replace(u=-triple.u)
     triple = stabilize_triple(S, triple)
-    S_new = geodesic_step(S, triple, eta)
+    triple, theta, diag = guard_geodesic(triple, eta)
+    S_new = geodesic_step(S, triple, eta, theta=theta)
     return TrackResult(S_new=S_new, A=A,
-                       cos_theta=jnp.cos(triple.sigma * eta), v=triple.v,
-                       gsq=gsq)
+                       cos_theta=jnp.cos(theta), v=triple.v,
+                       gsq=gsq, diag=diag)
 
 
 def _track_gram_schedule(S, G, *, eta, fused_tangent, exact_top1,
@@ -383,7 +430,21 @@ def _track_gram_schedule(S, G, *, eta, fused_tangent, exact_top1,
     uhat_loc = ok * (u_loc - S @ Stu) / jnp.maximum(nu, _TINY)
     sigma = sigma_raw * ok
 
-    theta = sigma * eta
+    # Health guards (the replicated scalars suffice: a non-finite value
+    # anywhere in the sharded G reaches sigma/v through the psum'd Gram).
+    # A degenerate geodesic becomes the exact identity (theta = 0, v = 0)
+    # instead of poisoning S; eta*sigma wrapping past pi/2 clamps.
+    finite = jnp.isfinite(sigma) & jnp.all(jnp.isfinite(v))
+    sigma_f = jnp.where(finite, sigma, 0.0)
+    v = jnp.where(finite, v, jnp.zeros_like(v))
+    uhat_loc = jnp.where(finite, uhat_loc, jnp.zeros_like(uhat_loc))
+    theta_raw = sigma_f * eta
+    theta = jnp.minimum(theta_raw, health_lib.THETA_MAX)
+    diag = jnp.stack([
+        sigma_raw.astype(jnp.float32), theta.astype(jnp.float32),
+        (theta_raw > health_lib.THETA_MAX).astype(jnp.float32),
+        (~finite).astype(jnp.float32)])
+
     cos_t, sin_t = jnp.cos(theta), jnp.sin(theta)
     Sv_loc = S @ v                                 # (m_loc,)
     S_new = S + jnp.outer(Sv_loc * (cos_t - 1.0) + uhat_loc * sin_t, v)
@@ -391,10 +452,11 @@ def _track_gram_schedule(S, G, *, eta, fused_tangent, exact_top1,
     # Gt_new = A + v (p^T G), all replicated — no further pass over G
     utG = -(v @ TtG) / denom                       # (n,)  u^T G
     uhatG = ok * (utG - Stu @ A) / jnp.maximum(nu, _TINY)
+    uhatG = jnp.where(finite, uhatG, jnp.zeros_like(uhatG))
     ptG = (cos_t - 1.0) * (v @ A) + sin_t * uhatG
     A_new = A + jnp.outer(v, ptG)
     return TrackResult(S_new=S_new, A=A, cos_theta=cos_t, v=v, gsq=gsq,
-                       A_new=A_new)
+                       A_new=A_new, diag=diag)
 
 
 _SCHEDULES = {"tangent": _track_tangent_schedule,

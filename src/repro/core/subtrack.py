@@ -46,6 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import health as health_lib
 from repro.core import plan as plan_lib
 from repro.core import program as program_lib
 from repro.core import subspace as sub
@@ -138,7 +139,7 @@ def _get_backend(cfg: LowRankConfig):
 def _plain_matrix_step(cfg: LowRankConfig, hp: AdamHP, G: Array,
                        st: MatrixOptState, step: Array, lr: Array,
                        param: Optional[Array], out_dtype, exec=None,
-                       tap=None):
+                       tap=None, with_health: bool = False):
     """``tap``, when given, is the grad-fused (r+1, n) [A; colnorms]
     panel emitted by the backward pass (models.common.tapped_matmul):
     rows [0:r] are the projection S^T G, row r the per-column ||G||^2 —
@@ -152,32 +153,44 @@ def _plain_matrix_step(cfg: LowRankConfig, hp: AdamHP, G: Array,
                             weight_decay=cfg.weight_decay, param=param,
                             out_dtype=out_dtype, exec=exec,
                             precomputed_proj=pp, precomputed_gsq=pg)
+    if with_health:
+        # plain steps run no geodesic — the all-healthy diag keeps the
+        # output structure uniform for callers that request the report
+        # on every step
+        return out.delta, out.state, health_lib.zero_diag()
     return out.delta, out.state
 
 
 def _refresh_subspace(cfg: LowRankConfig, G: Array, st: MatrixOptState,
                       step: Array, n_updates: Array, backend=None,
-                      exec=None):
+                      exec=None, eta_scale: float = 1.0):
     """Compute the new basis per the configured method.
 
-    Returns (S_new, rank1_info, gsq, proj): rank1_info is (cos_theta, v)
-    for the Grassmann method (enabling the O(rn) rotation) and None
-    otherwise; gsq is the per-column ||G_:,j||^2 harvested by the fused
-    Grassmann backend pass (basis-independent, reused by the Eq. 12 clip);
-    proj is the globally-assembled NEW-basis projection when the
-    program's gram schedule produced it (row-family regimes) — the
-    epilogue then re-projects nothing.
+    Returns (S_new, rank1_info, gsq, proj, diag): rank1_info is
+    (cos_theta, v) for the Grassmann method (enabling the O(rn)
+    rotation) and None otherwise; gsq is the per-column ||G_:,j||^2
+    harvested by the fused Grassmann backend pass (basis-independent,
+    reused by the Eq. 12 clip); proj is the globally-assembled NEW-basis
+    projection when the program's gram schedule produced it (row-family
+    regimes) — the epilogue then re-projects nothing; diag is the
+    tracker's (health.DIAG_SIZE,) health vector (None for methods with
+    no geodesic to guard).
 
     ``exec`` carries the leaf's StepProgram.  Only the Grassmann tracker
     (whose collectives are the program's declared rounds — see
     ``subspace.track_subspace``) and the frozen subspace are shardable;
     the SVD/random/Oja refreshes contract over all columns, so
     ``program.build_program`` never routes them here sharded.
+
+    ``eta_scale`` is a static multiplier on the geodesic step size —
+    1.0 everywhere except the sigma-blowup fault injection, which uses
+    it to wrap theta past the clamp on one tracking step.
     """
     rank = st.S.shape[-1]
     if cfg.method == "grassmann":
         res = sub.track_subspace(
-            st.S, G, eta=cfg.eta, fused_tangent=cfg.fused_tangent,
+            st.S, G, eta=cfg.eta * eta_scale,
+            fused_tangent=cfg.fused_tangent,
             exact_top1=cfg.exact_top1, power_iters=cfg.power_iters,
             backend=backend, exec=exec)
         S_new = res.S_new
@@ -185,12 +198,12 @@ def _refresh_subspace(cfg: LowRankConfig, G: Array, st: MatrixOptState,
             do = (n_updates % cfg.reorth_interval) == (cfg.reorth_interval - 1)
             S_new = jax.lax.cond(do, sub.reorthonormalize, lambda s: s, S_new)
             # after a QR scrub the rank-1 rotation identity no longer holds
-            return S_new, None, res.gsq, res.A_new
-        return S_new, (res.cos_theta, res.v), res.gsq, res.A_new
+            return S_new, None, res.gsq, res.A_new, res.diag
+        return S_new, (res.cos_theta, res.v), res.gsq, res.A_new, res.diag
     if cfg.method == "svd":
-        return sub.refresh_svd(G, rank), None, None, None
+        return sub.refresh_svd(G, rank), None, None, None, None
     if cfg.method == "random":
-        return sub.refresh_random(G, rank, step=step), None, None, None
+        return sub.refresh_random(G, rank, step=step), None, None, None, None
     if cfg.method == "grass":
         # Grass (arXiv:2406.17660): S <- the top-r coordinate rows by
         # gradient row energy — a structured-sparse one-hot selection
@@ -199,7 +212,7 @@ def _refresh_subspace(cfg: LowRankConfig, G: Array, st: MatrixOptState,
         G32 = G.astype(jnp.float32)
         _, idx = jax.lax.top_k(jnp.sum(G32 * G32, axis=1), rank)
         return jax.nn.one_hot(idx, G.shape[0], dtype=jnp.float32).T, \
-            None, None, None
+            None, None, None, None
     if cfg.method == "osd":
         # Oja-style online PCA: S <- orth(S + lr * (I - SS^T) G G^T S)
         G32 = G.astype(jnp.float32)
@@ -207,21 +220,22 @@ def _refresh_subspace(cfg: LowRankConfig, G: Array, st: MatrixOptState,
         GGS = G32 @ GS                           # (m, r)
         corr = GGS - st.S @ (st.S.T @ GGS)
         return sub.reorthonormalize(st.S + cfg.osd_lr * corr), None, None, \
-            None
+            None, None
     if cfg.method == "none":
         # frozen subspace: the change of basis is exactly I, expressed as
         # the rank-1 identity (cos_theta = 1, v = 0) so the rotation path
         # stays shard-local under row-family programs (the dense
         # Q = S^T S fallback would contract over sharded rows)
         return st.S, (jnp.float32(1.0), jnp.zeros(rank, jnp.float32)), \
-            None, None
+            None, None, None
     raise ValueError(f"unknown subspace method {cfg.method!r}")
 
 
 def _tracking_matrix_step(cfg: LowRankConfig, hp: AdamHP, G: Array,
                           st: MatrixOptState, step: Array, n_updates: Array,
                           lr: Array, param: Optional[Array], out_dtype,
-                          exec=None):
+                          exec=None, eta_scale: float = 1.0,
+                          with_health: bool = False):
     """The 1-of-k subspace-update step, fused end to end when kernels are
     on: the program-scheduled subspace refresh (one read of G on the
     tangent schedule; the gram schedule's project/tangent/tangent_gram
@@ -241,8 +255,8 @@ def _tracking_matrix_step(cfg: LowRankConfig, hp: AdamHP, G: Array,
     # materializing an (m, n) fp32 copy up front
     Gc = G if backend is not None else G.astype(jnp.float32)
 
-    S_new, rank1_info, gsq, proj = _refresh_subspace(
-        cfg, Gc, st, step, n_updates, backend, exec)
+    S_new, rank1_info, gsq, proj, diag = _refresh_subspace(
+        cfg, Gc, st, step, n_updates, backend, exec, eta_scale)
 
     rotated = None
     if cfg.projection_aware:
@@ -266,6 +280,9 @@ def _tracking_matrix_step(cfg: LowRankConfig, hp: AdamHP, G: Array,
                             lr=lr, weight_decay=cfg.weight_decay, param=param,
                             out_dtype=out_dtype, precomputed_proj=proj,
                             precomputed_gsq=gsq, exec=exec)
+    if with_health:
+        return out.delta, out.state, (diag if diag is not None
+                                      else health_lib.zero_diag())
     return out.delta, out.state
 
 
@@ -360,8 +377,15 @@ def lowrank_optimizer(cfg: LowRankConfig, *, mesh=None,
         return state._replace(inner=inner)
 
     def update(grads, state: OptState, params, lr,
-               do_subspace_update: bool = False, taps=None):
+               do_subspace_update: bool = False, taps=None,
+               with_health: bool = False, eta_scale: float = 1.0):
         """Returns (updates, new_state); updates are added to params.
+        With ``with_health=True`` returns (updates, new_state, diag):
+        ``diag`` is the max-aggregated (health.DIAG_SIZE,) subspace
+        diagnostic over every low-rank leaf (raw sigma, applied theta,
+        clamp/degenerate flags; all zeros on plain steps).  ``eta_scale``
+        statically scales the Grassmann geodesic step size (fault
+        injection only — the default compiles the identical program).
 
         Low-rank leaves emit the *final-dtype* update directly from the
         matrix step (lr, hp.scale, recovery clip and weight decay folded
@@ -411,16 +435,20 @@ def lowrank_optimizer(cfg: LowRankConfig, *, mesh=None,
             if do_subspace_update:
                 def base(G, s, p=None, tap=None):
                     return _tracking_matrix_step(cfg, hp, G, s, step, n_upd,
-                                                 lr32, p, out_dtype, exec)
+                                                 lr32, p, out_dtype, exec,
+                                                 eta_scale, with_health)
             else:
                 def base(G, s, p=None, tap=None):
                     return _plain_matrix_step(cfg, hp, G, s, step, lr32, p,
-                                              out_dtype, exec, tap)
+                                              out_dtype, exec, tap,
+                                              with_health)
             return base
 
         def run_stacked(g2, st, p2, batch_dims, out_dtype, prog, tap=None):
             """Run the matrix step over a (possibly stacked) canonical
-            gradient; returns (delta_stacked, new_state_stacked).
+            gradient; returns (delta_stacked, new_state_stacked, diag) —
+            ``diag`` is the stack-reduced (health.DIAG_SIZE,) health
+            vector under ``with_health``, None otherwise.
 
             ONE lowering path for every regime: the per-matrix step is
             built against the program's executor (collectives by round
@@ -452,8 +480,14 @@ def lowrank_optimizer(cfg: LowRankConfig, *, mesh=None,
             runner = program_lib.lower(prog, fn, mesh=mesh,
                                        batch_dims=batch_dims,
                                        with_param=wd,
-                                       with_tap=tap is not None)
-            return runner(*args)
+                                       with_tap=tap is not None,
+                                       with_health=with_health)
+            out = runner(*args)
+            if with_health:
+                delta, new_st, diag = out
+                return delta, new_st, health_lib.reduce_diag(diag)
+            delta, new_st = out
+            return delta, new_st, None
 
         def leaf_single(plan, g, st, p, tap=None):
             """Unbucketed path: one launch for one leaf (original layout —
@@ -465,9 +499,9 @@ def lowrank_optimizer(cfg: LowRankConfig, *, mesh=None,
                 tap = None
             g2 = plan_lib.canonical_grad(g, plan)
             p2 = plan_lib.canonical_grad(p, plan) if cfg.weight_decay else None
-            delta, new_st = run_stacked(g2, st, p2, plan.batch_dims, p.dtype,
-                                        prog, tap=tap)
-            return plan_lib.uncanonical_update(delta, plan), new_st
+            delta, new_st, diag = run_stacked(g2, st, p2, plan.batch_dims,
+                                              p.dtype, prog, tap=tap)
+            return plan_lib.uncanonical_update(delta, plan), new_st, diag
 
         is_plan = lambda x: isinstance(x, plan_lib.ParamPlan)  # noqa: E731
         treedef = jax.tree.structure(plans, is_leaf=is_plan)
@@ -480,6 +514,12 @@ def lowrank_optimizer(cfg: LowRankConfig, *, mesh=None,
 
         updates_out: list = [None] * len(plan_leaves)
         states_out: list = [None] * len(plan_leaves)
+        health = health_lib.zero_diag() if with_health else None
+
+        def absorb(diag):
+            nonlocal health
+            if with_health and diag is not None:
+                health = health_lib.merge_diag(health, diag)
 
         # group low-rank leaves into same-(m, n, rank, dtype) buckets
         buckets: dict[tuple, list[int]] = {}
@@ -512,9 +552,10 @@ def lowrank_optimizer(cfg: LowRankConfig, *, mesh=None,
                 for i in idxs:
                     tap = (tap_leaves[i]
                            if not do_subspace_update else None)
-                    updates_out[i], states_out[i] = leaf_single(
+                    updates_out[i], states_out[i], diag = leaf_single(
                         plan_leaves[i], grad_leaves[i], state_leaves[i],
                         param_leaves[i], tap=tap)
+                    absorb(diag)
                 continue
 
             # stack every member's matrices along one leading axis
@@ -537,9 +578,10 @@ def lowrank_optimizer(cfg: LowRankConfig, *, mesh=None,
                 else None
             st_all = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
                                   *st_parts)
-            delta_all, st_new_all = run_stacked(
+            delta_all, st_new_all, diag = run_stacked(
                 g_all, st_all, p_all, 1, param_leaves[idxs[0]].dtype,
                 leaf_program(plan_leaves[idxs[0]]))
+            absorb(diag)
 
             # split back to leaves and restore each one's stack layout
             splits = list(np.cumsum(sizes)[:-1])
@@ -560,10 +602,13 @@ def lowrank_optimizer(cfg: LowRankConfig, *, mesh=None,
 
         updates = jax.tree.unflatten(treedef, updates_out)
         new_inner = jax.tree.unflatten(treedef, states_out)
-        return updates, OptState(
+        new_state = OptState(
             step=step + 1,
             n_updates=n_upd + (1 if do_subspace_update else 0),
             inner=new_inner)
+        if with_health:
+            return updates, new_state, health
+        return updates, new_state
 
     def state_bytes(params) -> int:
         plans = plan_lib.make_plans(params, cfg.rank)

@@ -110,3 +110,74 @@ def batch_for_model(model_cfg, shape, dataset: SyntheticLMDataset,
         batch["frames"] = 0.1 * jax.random.normal(
             key, (B, S, model_cfg.d_model), jnp.bfloat16)
     return batch
+
+
+# ---------------------------------------------------------------------------
+# Resilient batch fetch (self-healing runtime)
+# ---------------------------------------------------------------------------
+
+
+class BatchError(RuntimeError):
+    """A fetched batch failed validation (corrupt tokens)."""
+
+
+def validate_batch(batch: dict, vocab_size: int) -> None:
+    """Cheap host-side integrity gate on a fetched batch: token ids must
+    be int and inside [0, vocab_size).  An out-of-range id would index
+    the embedding table out of bounds — with XLA's clamping semantics
+    that is a *silent* wrong-gradient step, which quarantine cannot see
+    (everything stays finite), so it must be caught before dispatch."""
+    toks = batch.get("tokens")
+    if toks is None:
+        raise BatchError("batch has no 'tokens' entry")
+    if not jnp.issubdtype(toks.dtype, jnp.integer):
+        raise BatchError(f"tokens dtype {toks.dtype} is not integral")
+    lo, hi = int(jnp.min(toks)), int(jnp.max(toks))
+    if lo < 0 or hi >= vocab_size:
+        raise BatchError(
+            f"token ids outside [0, {vocab_size}): min={lo} max={hi}")
+
+
+def fetch_batch(model_cfg, dataset: SyntheticLMDataset, step: int, *,
+                retries: int = 3, backoff_s: float = 0.01,
+                mutate=None) -> tuple[dict | None, bool]:
+    """Fetch + validate global batch ``step`` with bounded retry.
+
+    Returns ``(batch, ok)``.  Transient failures (an assembly exception
+    or a validation miss) retry up to ``retries`` times with exponential
+    backoff + jitter — the synthetic pipeline is deterministic, but a
+    real corpus loader behind this interface hits flaky storage.  A
+    *persistently* bad batch returns ``(None, False)`` — a skip-marked
+    result the training loop treats as one strike and steps over —
+    instead of crashing the prefetch path.
+
+    ``mutate`` (fault injection: ``--inject corrupt-batch``) is applied
+    to the assembled batch before validation on every attempt.
+    """
+    import random
+    import time as _time
+
+    err: Exception | None = None
+    for attempt in range(retries + 1):
+        try:
+            batch = batch_for_model(model_cfg, None, dataset, step)
+            if mutate is not None:
+                batch = mutate(batch)
+            validate_batch(batch, model_cfg.vocab_size)
+            return batch, True
+        except Exception as e:
+            err = e
+            if attempt < retries:
+                _time.sleep(backoff_s * (2 ** attempt)
+                            * (1.0 + random.random()))
+    print(f"[data] batch {step} unusable after {retries + 1} attempts "
+          f"({type(err).__name__}: {err}) — returning skip marker",
+          flush=True)
+    return None, False
+
+
+def corrupt_tokens(batch: dict) -> dict:
+    """The corrupt-batch injection: one token id pushed out of range."""
+    toks = batch["tokens"]
+    bad = toks.at[0, 0].set(jnp.int32(2 ** 30))
+    return dict(batch, tokens=bad)

@@ -38,3 +38,18 @@ def smoke_context() -> MeshContext:
     dev = np.array(jax.devices()[:1]).reshape(1, 1)
     return MeshContext(mesh=Mesh(dev, ("data", "model")),
                        batch_axes=("data",))
+
+
+def host_context() -> MeshContext:
+    """(1, N) mesh over ALL local devices — exercises real model-axis
+    collectives on a fake multi-device host (XLA_FLAGS
+    ``--xla_force_host_platform_device_count=8``).  Used by the
+    fault-injection acceptance runs so every sharding regime's
+    quarantine path executes with genuine psums."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    dev = np.array(devs).reshape(1, len(devs))
+    return MeshContext(mesh=Mesh(dev, ("data", "model")),
+                       batch_axes=("data",))

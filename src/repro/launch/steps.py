@@ -15,11 +15,13 @@ optimizers that still return fp32 updates.
 from __future__ import annotations
 
 import functools
+import inspect
 from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import health as health_lib
 from repro.core import program as program_lib
 from repro.core.lowrank_adam import MatrixOptState
 from repro.core.subtrack import GradientTransform, OptState
@@ -135,12 +137,39 @@ def _none_like(tree):
     return None
 
 
+def guarded_apply(state: TrainState, updates, new_opt,
+                  report: health_lib.HealthReport) -> TrainState:
+    """Quarantine gate around the parameter/optimizer apply: when the
+    step's :class:`~repro.core.health.HealthReport` fails (non-finite
+    loss, global grad norm, or update norm), the WHOLE TrainState is
+    kept bit-identical — params, Adam moments (M, V), the subspace S and
+    the Adam step count — matching loss-scaling skip semantics.  Healthy
+    steps apply exactly what the un-guarded step applied."""
+    def apply():
+        params = jax.tree.map(lambda p, u: p + u.astype(p.dtype),
+                              state.params, updates)
+        return TrainState(params=params, opt=new_opt)
+
+    return jax.lax.cond(health_lib.step_ok(report), apply, lambda: state)
+
+
 def make_train_step(bundle: ModelBundle, optimizer: GradientTransform,
                     *, clip_norm: float = 1.0, accum: int = 1,
                     remat: str = "full", grad_shardings=None,
-                    accum_dtype=jnp.float32, grad_fused: bool = False):
+                    accum_dtype=jnp.float32, grad_fused: bool = False,
+                    inject: bool = False):
     """Returns train_step(state, batch, lr, *, do_subspace_update) ->
     (state, metrics).  Donate ``state`` when jitting.
+
+    Every step emits a :class:`repro.core.health.HealthReport` in its
+    metrics (assembled from reductions the step already produces — no
+    extra pass over the gradients) and quarantines itself through
+    :func:`guarded_apply` when the report fails.
+
+    ``inject=True`` adds a traced int32 ``inject_code`` positional after
+    ``lr`` plus a static ``eta_scale`` keyword (the in-graph half of the
+    ``--inject`` fault surface; see ``repro.core.health`` for the codes).
+    The default builds the exact pre-injection program.
 
     ``grad_shardings`` (pytree of NamedSharding matching params) pins each
     per-microbatch gradient to the parameter's layout *in the gradient's
@@ -168,6 +197,9 @@ def make_train_step(bundle: ModelBundle, optimizer: GradientTransform,
     use_taps = (grad_fused and accum == 1
                 and bundle.loss_taps is not None)
     tap_paths = _tap_paths(bundle.cfg) if use_taps else []
+    upd_params = inspect.signature(optimizer.update).parameters
+    has_health = "with_health" in upd_params
+    has_eta_scale = "eta_scale" in upd_params
 
     def _pin(grads):
         if grad_shardings is None:
@@ -175,14 +207,27 @@ def make_train_step(bundle: ModelBundle, optimizer: GradientTransform,
         return jax.tree.map(jax.lax.with_sharding_constraint, grads,
                             grad_shardings)
 
-    def grads_of(params, batch):
-        (loss, metrics), grads = jax.value_and_grad(
-            loss_fn, has_aux=True)(params, batch)
+    def grads_of(params, batch, gscale=None):
+        """``gscale`` (traced scalar, injection only) scales the loss
+        VALUE fed to the backward — the cotangent seeds with it, so
+        every gradient leaf is scaled without an extra pass — while the
+        TRUE loss reaches the metrics through the aux channel."""
+        if gscale is None:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            return loss, metrics, _pin(grads)
+
+        def inj_loss(p, b):
+            loss, metrics = loss_fn(p, b)
+            return loss * gscale, (loss, metrics)
+
+        (_, (loss, metrics)), grads = jax.value_and_grad(
+            inj_loss, has_aux=True)(params, batch)
         return loss, metrics, _pin(grads)
 
-    def accum_grads(params, batch):
+    def accum_grads(params, batch, gscale=None):
         if accum == 1:
-            return grads_of(params, batch)
+            return grads_of(params, batch, gscale)
         # split the leading batch dim into `accum` microbatches and scan
         def resh(x):
             return x.reshape(accum, x.shape[0] // accum, *x.shape[1:])
@@ -193,7 +238,7 @@ def make_train_step(bundle: ModelBundle, optimizer: GradientTransform,
 
         def step(carry, mb):
             g_acc, l_acc = carry
-            loss, metrics, g = grads_of(params, mb)
+            loss, metrics, g = grads_of(params, mb, gscale)
             g_acc = _pin(jax.tree.map(
                 lambda a, b: a + b.astype(accum_dtype) / accum, g_acc, g))
             return (g_acc, l_acc + loss / accum), metrics
@@ -202,7 +247,7 @@ def make_train_step(bundle: ModelBundle, optimizer: GradientTransform,
         metrics = jax.tree.map(lambda m: m[-1], metrics)
         return loss, metrics, grads
 
-    def tapped_grads(state: TrainState, batch):
+    def tapped_grads(state: TrainState, batch, gscale=None):
         """One backward over (params, seeds): the seeds' cotangents ARE
         the per-leaf [A; colnorms] tap panels (see tapped_matmul)."""
         sites = []
@@ -213,7 +258,7 @@ def make_train_step(bundle: ModelBundle, optimizer: GradientTransform,
                 continue  # absent leaf (tied lm_head) or dense plan
             sites.append((path, st.S, st.M.shape[-1]))
         if not sites:
-            loss, metrics, grads = grads_of(state.params, batch)
+            loss, metrics, grads = grads_of(state.params, batch, gscale)
             return loss, metrics, grads, None
 
         seeds: dict = {}
@@ -226,9 +271,17 @@ def make_train_step(bundle: ModelBundle, optimizer: GradientTransform,
             taps_in: dict = {}
             for path, S, n in sites:
                 _site_set(taps_in, path, (S, _site_get(sd, path)))
-            return bundle.loss_taps(params, batch, taps_in, remat=remat)
+            loss, metrics = bundle.loss_taps(params, batch, taps_in,
+                                             remat=remat)
+            if gscale is None:
+                return loss, (loss, metrics)
+            # the tap panels are cotangents too, so they scale with the
+            # gradients — A by gscale, the squared colnorms by gscale
+            # (they are linear in the seed): a NaN'd backward poisons
+            # them consistently and the tap-fed clip norm catches it
+            return loss * gscale, (loss, metrics)
 
-        (loss, metrics), (grads, tap_grads) = jax.value_and_grad(
+        (_, (loss, metrics)), (grads, tap_grads) = jax.value_and_grad(
             loss_with_taps, argnums=(0, 1), has_aux=True)(
                 state.params, seeds)
         taps = _none_like(state.params)
@@ -236,13 +289,17 @@ def make_train_step(bundle: ModelBundle, optimizer: GradientTransform,
             _site_set(taps, path, _site_get(tap_grads, path))
         return loss, metrics, _pin(grads), taps
 
-    def train_step(state: TrainState, batch, lr,
-                   *, do_subspace_update: bool = False):
+    def step_core(state: TrainState, batch, lr, inject_code,
+                  do_subspace_update: bool, eta_scale: float):
+        gscale = None
+        if inject_code is not None:
+            gscale = jnp.where(inject_code == health_lib.INJECT_NAN_GRAD,
+                               jnp.float32(jnp.nan), jnp.float32(1.0))
         taps = None
         if use_taps and not do_subspace_update:
-            loss, metrics, grads, taps = tapped_grads(state, batch)
+            loss, metrics, grads, taps = tapped_grads(state, batch, gscale)
         else:
-            loss, metrics, grads = accum_grads(state.params, batch)
+            loss, metrics, grads = accum_grads(state.params, batch, gscale)
         grads, gnorm = clip_by_global_norm(grads, clip_norm, taps=taps)
         if taps is not None:
             # the clip rescales G by s, so A scales by s and the squared
@@ -253,13 +310,53 @@ def make_train_step(bundle: ModelBundle, optimizer: GradientTransform,
                     [t[..., :-1, :] * s, t[..., -1:, :] * (s * s)],
                     axis=-2), taps)
         opt_kw = {} if taps is None else {"taps": taps}
-        updates, opt = optimizer.update(
-            grads, state.opt, state.params, lr,
-            do_subspace_update=do_subspace_update, **opt_kw)
-        params = jax.tree.map(lambda p, u: p + u.astype(p.dtype),
-                              state.params, updates)
-        metrics = dict(metrics, loss=loss, grad_norm=gnorm, lr=lr)
-        return TrainState(params=params, opt=opt), metrics
+        if has_eta_scale and eta_scale != 1.0:
+            opt_kw["eta_scale"] = eta_scale
+        with_health = has_health and do_subspace_update
+        if with_health:
+            opt_kw["with_health"] = True
+            updates, opt, diag = optimizer.update(
+                grads, state.opt, state.params, lr,
+                do_subspace_update=do_subspace_update, **opt_kw)
+        else:
+            diag = None
+            updates, opt = optimizer.update(
+                grads, state.opt, state.params, lr,
+                do_subspace_update=do_subspace_update, **opt_kw)
+        if inject_code is not None:
+            # loss-spike: amplify AND NEGATE the applied update (fused
+            # into the apply, which reads every update leaf anyway) — a
+            # huge ascent step raises the loss in any training phase,
+            # where a huge descent step can accidentally help early on.
+            # The step itself stays finite/healthy, only the FOLLOWING
+            # steps' losses spike, which is the host sentinel's case to
+            # catch
+            amp = jnp.where(inject_code == health_lib.INJECT_LOSS_SPIKE,
+                            jnp.float32(-health_lib.LOSS_SPIKE_AMP),
+                            jnp.float32(1.0))
+            updates = jax.tree.map(
+                lambda u: (u.astype(jnp.float32) * amp).astype(u.dtype),
+                updates)
+        # the apply reads every update leaf, so XLA fuses this reduction
+        # into the same pass — the report costs no extra gradient reads
+        unorm = global_norm(updates)
+        report = health_lib.make_report(loss, gnorm, unorm, diag)
+        new_state = guarded_apply(state, updates, opt, report)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm, lr=lr,
+                       **health_lib.report_metrics(report))
+        return new_state, metrics
+
+    if inject:
+        def train_step(state: TrainState, batch, lr, inject_code,
+                       *, do_subspace_update: bool = False,
+                       eta_scale: float = 1.0):
+            return step_core(state, batch, lr, inject_code,
+                             do_subspace_update, eta_scale)
+    else:
+        def train_step(state: TrainState, batch, lr,
+                       *, do_subspace_update: bool = False):
+            return step_core(state, batch, lr, None,
+                             do_subspace_update, 1.0)
 
     return train_step
 

@@ -25,6 +25,16 @@ Production behaviours exercised here (and tested in tests/test_train_loop.py):
   computes the current step, and the blocking ``float(metrics)`` drain
   trails dispatch by one step, so host work never serializes the device
   queue (divergence detection runs one step late by design).
+* **self-healing runtime**: every step emits an in-graph
+  ``HealthReport`` (repro.core.health) and quarantines itself under
+  ``lax.cond`` when non-finite — params/M/V/S/count bit-identical, like
+  a loss-scaling skip.  The host-side :class:`HealthSentinel` folds the
+  device verdict, non-finite grad norms, and an EMA loss-spike gate into
+  one escalation ladder: skip -> forced subspace refresh -> rollback to
+  the newest *known-good* checkpoint with lr backoff -> abort.
+  ``--inject kind@step`` (nan-grad, loss-spike, sigma-blowup,
+  corrupt-batch, ckpt-io-error) exercises every rung; injections are
+  consumed once so post-rollback replay is clean.
 * **mesh-native hot path**: on a multi-device mesh with ``--use-kernels``
   each low-rank leaf is sharded in its cheapest admissible regime —
   column (n) or row (m), picked by the modeled per-device bytes
@@ -48,11 +58,13 @@ import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs.registry import PAPER_RANKS, get_config
+from repro.core import health as health_lib
 from repro.core.api import get_optimizer
-from repro.data.pipeline import DataConfig, SyntheticLMDataset, batch_for_model
+from repro.data.pipeline import (DataConfig, SyntheticLMDataset,
+                                 batch_for_model, corrupt_tokens, fetch_batch)
 from repro.distributed import sharding as sh
 from repro.distributed.context import mesh_context
-from repro.launch.mesh import make_context, smoke_context
+from repro.launch.mesh import host_context, make_context, smoke_context
 from repro.checkpoint import transpose as ckpt_transpose
 from repro.launch.steps import (TrainState, checkpoint_descriptors,
                                 default_rank, make_train_step,
@@ -91,6 +103,126 @@ class StragglerWatchdog:
         return slow
 
 
+class HealthSentinel:
+    """Host-side health gate driving the escalation ladder.
+
+    One verdict per drained step, from three strike sources folded into
+    the same counter (the old host check only looked at the loss and let
+    a non-finite grad norm with a finite loss sail through):
+
+    * the device's in-graph quarantine verdict (``quarantined`` metric),
+    * a non-finite drained loss OR grad norm,
+    * an EMA loss-spike gate (same mean/var recursion as the straggler
+      watchdog): loss > mean + sigma*sqrt(var) AND loss > mean*factor —
+      this catches the finite-but-wrecked-model case quarantine cannot.
+
+    Consecutive strikes climb the ladder: 1 -> skip (in-graph quarantine
+    already protected the state; just log), 2 -> force a subspace
+    refresh on the next dispatch (a poisoned S recovers from fresh
+    gradients), >=3 -> roll back to the newest known-good checkpoint
+    with lr backoff for a cooldown window.  A healthy step resets the
+    counter; more than ``max_rollbacks`` rollbacks (or no known-good
+    checkpoint when one is needed) aborts the run.
+    """
+
+    OK, SKIP, REFRESH, ROLLBACK, ABORT = \
+        "ok", "skip", "refresh", "rollback", "abort"
+
+    def __init__(self, alpha: float = 0.05, warmup: int = 5,
+                 sigma: float = 4.0, factor: float = 1.25,
+                 strikes_to_rollback: int = 3, max_rollbacks: int = 2,
+                 lr_backoff: float = 0.5, cooldown: int = 10):
+        self.alpha, self.warmup, self.sigma, self.factor = \
+            alpha, warmup, sigma, factor
+        self.strikes_to_rollback = strikes_to_rollback
+        self.max_rollbacks = max_rollbacks
+        self.lr_backoff = lr_backoff
+        self.cooldown = cooldown
+        self.mean = 0.0
+        self.var = 0.0
+        self.n = 0
+        self.strikes = 0
+        self.rollbacks = 0
+        self.backoff_until = -1
+        self.quarantined_steps: list[int] = []
+        self.events: list[dict] = []
+
+    def lr_scale(self, step: int) -> float:
+        return self.lr_backoff if step < self.backoff_until else 1.0
+
+    def _spiked(self, loss: float) -> bool:
+        if self.n < self.warmup:
+            return False
+        thresh = self.mean + self.sigma * math.sqrt(max(self.var, 1e-12))
+        return loss > thresh and loss > self.mean * self.factor
+
+    def observe(self, step: int, loss: float, grad_norm: float,
+                quarantined: bool) -> str:
+        if quarantined:
+            self.quarantined_steps.append(step)
+            return self.strike(step, "step quarantined in-graph")
+        if not (np.isfinite(loss) and np.isfinite(grad_norm)):
+            return self.strike(
+                step, f"non-finite drain (loss={loss}, gnorm={grad_norm})")
+        if self._spiked(loss):
+            return self.strike(
+                step, f"loss spike ({loss:.4f} vs EMA {self.mean:.4f})")
+        self.n += 1
+        if self.n <= self.warmup:
+            self.mean = loss if self.n == 1 else \
+                (self.mean * (self.n - 1) + loss) / self.n
+        else:
+            d = loss - self.mean
+            self.mean += self.alpha * d
+            self.var = (1 - self.alpha) * (self.var + self.alpha * d * d)
+        self.strikes = 0
+        return self.OK
+
+    def strike(self, step: int, reason: str) -> str:
+        self.strikes += 1
+        if self.strikes == 1:
+            action = self.SKIP
+        elif self.strikes < self.strikes_to_rollback:
+            action = self.REFRESH
+        else:
+            self.strikes = 0
+            self.rollbacks += 1
+            action = (self.ABORT if self.rollbacks > self.max_rollbacks
+                      else self.ROLLBACK)
+        self.events.append({"step": step, "reason": reason,
+                            "action": action})
+        print(f"[sentinel] step {step}: {reason} — "
+              f"strike -> {action}", flush=True)
+        return action
+
+    def note_rollback(self, resume_step: int) -> None:
+        self.backoff_until = resume_step + self.cooldown
+
+
+INJECT_KINDS = ("nan-grad", "loss-spike", "sigma-blowup", "corrupt-batch",
+                "ckpt-io-error")
+
+# Static eta multiplier for --inject sigma-blowup: with the default
+# eta=10 this drives eta*sigma far past pi/2 on the injected tracking
+# step, so the theta clamp (repro.core.health.THETA_MAX) must hold.
+BLOWUP_ETA_SCALE = 1e6
+
+
+def parse_injections(spec: str) -> dict[int, str]:
+    """``kind@step[,kind@step...]`` -> {step: kind}."""
+    out: dict[int, str] = {}
+    if not spec:
+        return out
+    for part in spec.split(","):
+        kind, _, at = part.strip().rpartition("@")
+        if kind not in INJECT_KINDS:
+            raise SystemExit(
+                f"--inject: unknown kind {kind!r} (choose from "
+                f"{', '.join(INJECT_KINDS)})")
+        out[int(at)] = kind
+    return out
+
+
 def train(argv=None) -> dict:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="llama-100m")
@@ -107,8 +239,11 @@ def train(argv=None) -> dict:
     ap.add_argument("--remat", default="full", choices=["full", "dots", "none"])
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced same-family config")
-    ap.add_argument("--mesh", default="smoke", choices=["smoke", "prod",
-                                                        "multipod"])
+    ap.add_argument("--mesh", default="smoke",
+                    choices=["smoke", "host", "prod", "multipod"],
+                    help="smoke: 1 device; host: (1, N) over all local "
+                         "devices (fake-multi-device fault-injection "
+                         "runs); prod/multipod: production topologies")
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=50)
     ap.add_argument("--resume", default="elastic",
@@ -123,6 +258,12 @@ def train(argv=None) -> dict:
                          "fresh (checkpoints are still written)")
     ap.add_argument("--fail-at-step", type=int, default=-1,
                     help="failure injection: raise at this step")
+    ap.add_argument("--inject", default="",
+                    help="fault injection: comma-separated kind@step with "
+                         f"kind in {{{', '.join(INJECT_KINDS)}}} — e.g. "
+                         "'nan-grad@13,loss-spike@31'.  Each entry fires "
+                         "once (consumed), so replay after a sentinel "
+                         "rollback is clean")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--eta", type=float, default=10.0)
@@ -149,7 +290,10 @@ def train(argv=None) -> dict:
     args = ap.parse_args(argv)
 
     ctx = (smoke_context() if args.mesh == "smoke"
+           else host_context() if args.mesh == "host"
            else make_context(multi_pod=args.mesh == "multipod"))
+    injections = parse_injections(args.inject)
+    inject_on = bool(injections)
 
     with mesh_context(ctx):
         cfg = get_config(args.arch, smoke=args.smoke)
@@ -231,8 +375,11 @@ def train(argv=None) -> dict:
                   flush=True)
         train_step = make_train_step(
             bundle, optimizer, accum=args.accum, remat=args.remat,
-            grad_shardings=hot_shardings, grad_fused=grad_fused)
-        jit_step = jax.jit(train_step, static_argnames=("do_subspace_update",),
+            grad_shardings=hot_shardings, grad_fused=grad_fused,
+            inject=inject_on)
+        static = (("do_subspace_update", "eta_scale") if inject_on
+                  else ("do_subspace_update",))
+        jit_step = jax.jit(train_step, static_argnames=static,
                            donate_argnums=(0,))
         warm = jax.jit(make_warm_start(bundle, optimizer, remat=args.remat))
 
@@ -240,6 +387,7 @@ def train(argv=None) -> dict:
             if args.checkpoint_dir else None
         start_step = 0
         ckpt_extra: dict = {}
+        restore_shardings = restore_loader = None
         if ckpt is not None:
             # the per-leaf StepProgram descriptors of THIS run's layouts:
             # embedded in every save (the source programs a later restore
@@ -249,15 +397,18 @@ def train(argv=None) -> dict:
                 mesh=ctx.mesh if hot_specs is not None else None,
                 param_specs=hot_specs)
             ckpt_extra = ckpt_transpose.state_program_records(state, descs)
+            # the elastic restore pieces double as the sentinel's rollback
+            # path — a rollback IS an in-process elastic restore
+            restore_shardings = train_state_shardings(
+                state, descs,
+                ctx.mesh if hot_shardings is not None else None,
+                hot_shardings)
+            restore_loader = ckpt_transpose.elastic_loader(descs)
             if args.resume != "off":
                 if args.resume == "elastic":
-                    restored = ckpt.restore(
-                        state,
-                        shardings=train_state_shardings(
-                            state, descs,
-                            ctx.mesh if hot_shardings is not None else None,
-                            hot_shardings),
-                        loader=ckpt_transpose.elastic_loader(descs))
+                    restored = ckpt.restore(state,
+                                            shardings=restore_shardings,
+                                            loader=restore_loader)
                 else:
                     restored = ckpt.restore(state)
                 if restored is not None:
@@ -268,11 +419,14 @@ def train(argv=None) -> dict:
                           flush=True)
 
         k = getattr(optimizer.config, "update_interval", 0)
+        baseline = args.optimizer in ("adamw", "badam")
         watchdog = StragglerWatchdog()
+        sentinel = HealthSentinel()
         history: list[dict] = []
+        skipped_batches: list[int] = []
         t_start = time.time()
 
-        if start_step == 0 and args.optimizer not in ("adamw", "badam"):
+        if start_step == 0 and not baseline:
             batch0 = batch_for_model(cfg, None, data, 0)
             state, warm_loss = warm(state, batch0)
             print(f"[train] warm-started subspaces from step-0 gradients "
@@ -283,14 +437,20 @@ def train(argv=None) -> dict:
         # the blocking float(...) sync always trails the dispatch frontier
         # by one step, so the host keeps the device queue non-empty
         # instead of serializing dispatch -> compute -> readback every
-        # step.  Consequence (documented): divergence is detected one
-        # step after it happens, and the straggler watchdog sees
-        # drain-to-dispatch latencies (the true pipelined step time).
+        # step.  Consequence (documented): the sentinel sees step t's
+        # health one step late — in-graph quarantine already protected
+        # the state, so the late verdict only drives *escalation* (the
+        # ladder), never correctness.  On rollback the just-dispatched
+        # step is discarded undrained and the loop rewinds to the
+        # checkpoint's step; the stateless data pipeline makes the rewind
+        # a pure counter reset.
 
-        def drain(rec: dict, metrics) -> None:
+        def drain(rec: dict, metrics) -> str:
             loss = float(metrics["loss"])          # blocks on rec["step"]
             rec["loss"] = loss
             rec["grad_norm"] = float(metrics["grad_norm"])
+            rec["quarantined"] = bool(float(metrics["quarantined"]))
+            rec["theta_clamped"] = bool(float(metrics["theta_clamped"]))
             rec["dt"] = time.time() - rec.pop("t0")
             watchdog.observe(rec["step"], rec["dt"])
             history.append(rec)
@@ -298,45 +458,167 @@ def train(argv=None) -> dict:
                     or rec["step"] == args.steps - 1:
                 print(f"[train] step {rec['step']:5d}  loss {loss:8.4f}  "
                       f"lr {rec['lr']:.2e}  {rec['dt']:6.2f}s"
-                      f"{'  [subspace update]' if rec['subspace_update'] else ''}",
+                      f"{'  [subspace update]' if rec['subspace_update'] else ''}"
+                      f"{'  [QUARANTINED]' if rec['quarantined'] else ''}",
                       flush=True)
-            if not np.isfinite(loss):
+            return sentinel.observe(rec["step"], loss, rec["grad_norm"],
+                                    rec["quarantined"])
+
+        def fetch(s: int):
+            """Resilient (retry + validate) prefetch of global batch s."""
+            if s >= args.steps:
+                return None, True
+            mut = None
+            if injections.get(s) == "corrupt-batch":
+                injections.pop(s)
+                mut = corrupt_tokens
+            return fetch_batch(cfg, data, s, mutate=mut)
+
+        pending_refresh = False
+
+        def apply_action(act: str, at_step: int, cur_state):
+            """Execute a sentinel verdict.  Returns (state, resume_step)
+            on rollback, None otherwise; raises on abort."""
+            nonlocal pending_refresh
+            if act in (HealthSentinel.OK, HealthSentinel.SKIP):
+                return None
+            if act == HealthSentinel.REFRESH:
+                pending_refresh = True
+                return None
+            if act == HealthSentinel.ABORT:
                 raise FloatingPointError(
-                    f"loss diverged at step {rec['step']}")
+                    f"[sentinel] aborting at step {at_step}: escalation "
+                    f"ladder exhausted after {sentinel.max_rollbacks} "
+                    "rollbacks")
+            res = ckpt.rollback(cur_state, shardings=restore_shardings,
+                                loader=restore_loader) \
+                if ckpt is not None else None
+            if res is None:
+                raise FloatingPointError(
+                    f"[sentinel] unrecoverable at step {at_step}: rollback "
+                    "requested but no known-good checkpoint is available")
+            tree, ck_step = res
+            sentinel.note_rollback(resume_step=ck_step + 1)
+            pending_refresh = False
+            print(f"[sentinel] rolled back to known-good checkpoint step "
+                  f"{ck_step}; resuming at {ck_step + 1} with lr x"
+                  f"{sentinel.lr_backoff} for {sentinel.cooldown} steps",
+                  flush=True)
+            return tree, ck_step + 1
 
         inflight = None                            # (rec, metrics) of step-1
-        batch = batch_for_model(cfg, None, data, start_step)
-        for step in range(start_step, args.steps):
-            if step == args.fail_at_step:
-                if ckpt:
-                    ckpt.wait()
-                raise RuntimeError(
-                    f"[failure-injection] simulated node failure at step {step}")
-            t0 = time.time()
-            do_update = bool(k) and step > 0 and step % k == 0 \
-                and args.optimizer not in ("adamw", "badam")
-            state, metrics = jit_step(state, batch,
-                                      jnp.float32(sched(step)),
-                                      do_subspace_update=do_update)
-            if step + 1 < args.steps:              # prefetch under compute
-                batch = batch_for_model(cfg, None, data, step + 1)
-            if inflight is not None:
-                drain(*inflight)
-            inflight = ({"step": step, "lr": float(sched(step)),
-                         "subspace_update": do_update, "t0": t0}, metrics)
-            if ckpt and step and step % args.checkpoint_every == 0:
-                # validate THIS step's loss before persisting its state —
-                # the one-step-late drain must never checkpoint a diverged
-                # state (the save reads the device buffers anyway, so the
-                # pipeline already serializes here)
-                drain(*inflight)
-                inflight = None
-                ckpt.save(step, state, extra_meta=ckpt_extra)
-        if inflight is not None:
-            drain(*inflight)
+        last_act = HealthSentinel.OK
+        step = start_step
+        batch, batch_ok = fetch(step)
+        while True:
+            while step < args.steps:
+                if step == args.fail_at_step:
+                    if ckpt:
+                        ckpt.wait()
+                    raise RuntimeError(
+                        f"[failure-injection] simulated node failure at step {step}")
+                kind = injections.get(step)
+                if kind is not None and kind != "corrupt-batch":
+                    injections.pop(step)           # consumed-once
+                else:
+                    kind = None
+                if kind == "ckpt-io-error":
+                    if ckpt:
+                        # flaky-filesystem injection: the next save's first
+                        # attempts raise OSError; the bounded retry in
+                        # CheckpointManager.save must absorb them
+                        ckpt.fail_next_saves(2)
+                    kind = None
+                if not batch_ok:
+                    # skip-marked batch from the resilient fetch: one
+                    # strike, no dispatch — the step is simply not taken
+                    skipped_batches.append(step)
+                    history.append({"step": step, "loss": None,
+                                    "skipped_batch": True})
+                    act = sentinel.strike(step,
+                                          "unusable batch (skip-marked)")
+                    rb = apply_action(act, step, state)
+                    if rb is not None:
+                        state, step = rb
+                        inflight = None
+                    else:
+                        step += 1
+                    batch, batch_ok = fetch(step)
+                    continue
+                t0 = time.time()
+                do_update = bool(k) and step > 0 and step % k == 0 \
+                    and not baseline
+                if not baseline and (pending_refresh
+                                     or kind == "sigma-blowup"):
+                    if pending_refresh:
+                        print(f"[sentinel] step {step}: forcing subspace "
+                              "refresh", flush=True)
+                    do_update = True
+                pending_refresh = False
+                lr = float(sched(step)) * sentinel.lr_scale(step)
+                if inject_on:
+                    if kind:
+                        print(f"[inject] step {step}: {kind}", flush=True)
+                    code = {None: health_lib.INJECT_NONE,
+                            "nan-grad": health_lib.INJECT_NAN_GRAD,
+                            "loss-spike": health_lib.INJECT_LOSS_SPIKE,
+                            "sigma-blowup": health_lib.INJECT_NONE}[kind]
+                    eta_scale = (BLOWUP_ETA_SCALE
+                                 if kind == "sigma-blowup" else 1.0)
+                    state, metrics = jit_step(state, batch, jnp.float32(lr),
+                                              jnp.int32(code),
+                                              do_subspace_update=do_update,
+                                              eta_scale=eta_scale)
+                else:
+                    state, metrics = jit_step(state, batch, jnp.float32(lr),
+                                              do_subspace_update=do_update)
+                nbatch, nbatch_ok = fetch(step + 1)  # prefetch under compute
+                act = HealthSentinel.OK
+                if inflight is not None:
+                    act = drain(*inflight)
+                    last_act = act
+                rb = apply_action(act, step - 1, state)
+                if rb is not None:
+                    # the just-dispatched step ran on suspect state —
+                    # discard it undrained and rewind to the checkpoint
+                    state, step = rb
+                    inflight = None
+                    batch, batch_ok = fetch(step)
+                    continue
+                inflight = ({"step": step, "lr": lr,
+                             "subspace_update": do_update, "t0": t0},
+                            metrics)
+                batch, batch_ok = nbatch, nbatch_ok
+                if ckpt and step and step % args.checkpoint_every == 0:
+                    # validate THIS step's health before persisting —
+                    # only a step the sentinel passes is tagged
+                    # known-good (the rollback targets); a step that
+                    # itself escalates is never saved at all
+                    act = drain(*inflight)
+                    last_act = act
+                    inflight = None
+                    rb = apply_action(act, step, state)
+                    if rb is not None:
+                        state, step = rb
+                        batch, batch_ok = fetch(step)
+                        continue
+                    ckpt.save(step, state, extra_meta=ckpt_extra,
+                              known_good=(act == HealthSentinel.OK))
+                step += 1
+            if inflight is None:
+                break
+            act = drain(*inflight)
+            last_act = act
+            inflight = None
+            rb = apply_action(act, args.steps - 1, state)
+            if rb is None:
+                break
+            state, step = rb                       # tail rollback: re-enter
+            batch, batch_ok = fetch(step)
         if ckpt:
             ckpt.save(args.steps - 1, state, blocking=True,
-                      extra_meta=ckpt_extra)
+                      extra_meta=ckpt_extra,
+                      known_good=(last_act == HealthSentinel.OK))
 
         wall = time.time() - t_start
         summary = {
@@ -346,6 +628,10 @@ def train(argv=None) -> dict:
             "wall_time_s": wall,
             "state_bytes": optimizer.state_bytes(state.params),
             "stragglers": watchdog.flagged,
+            "quarantined_steps": sentinel.quarantined_steps,
+            "rollbacks": sentinel.rollbacks,
+            "skipped_batches": skipped_batches,
+            "sentinel_events": sentinel.events,
             "history": history,
         }
         if args.metrics_out:

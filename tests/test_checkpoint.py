@@ -283,10 +283,10 @@ class TestAsyncStress:
         real = manager_mod.save_pytree
         gate, entered = threading.Event(), threading.Event()
 
-        def held(path, tree, extra_meta=None):
+        def held(path, tree, extra_meta=None, marker=None):
             entered.set()
             assert gate.wait(30), "test deadlock: gate never released"
-            real(path, tree, extra_meta)
+            real(path, tree, extra_meta, marker=marker)
 
         mgr = CheckpointManager(tmp_path, keep=5)
         mgr.save(1, _tree(1), blocking=True)
@@ -308,7 +308,7 @@ class TestAsyncStress:
     def test_wait_reraises_exactly_once(self, tmp_path, monkeypatch):
         mgr = CheckpointManager(tmp_path, keep=5)
 
-        def boom(path, tree, extra_meta=None):
+        def boom(path, tree, extra_meta=None, marker=None):
             raise RuntimeError("disk full")
 
         monkeypatch.setattr(manager_mod, "save_pytree", boom)
@@ -424,3 +424,94 @@ class TestTransposeUnit:
         with pytest.raises(Exception, match="count mismatch"):
             elastic_loader({"opt": _desc(16), "opt2": _desc(16)})(
                 tmp_path / "ck", st, None)
+
+
+class TestSaveRetry:
+    """Flaky-filesystem resilience: bounded retry with backoff in
+    CheckpointManager.save, exercised through the fail_next_saves
+    fault-injection knob (--inject ckpt-io-error rides the same path)."""
+
+    def test_transient_failures_absorbed_by_retry(self, tmp_path):
+        mgr = CheckpointManager(tmp_path, retries=3, backoff_s=0.001)
+        mgr.fail_next_saves(2)
+        mgr.save(1, _tree(), blocking=True)   # attempts 1-2 raise, 3 lands
+        mgr.wait()                            # must NOT raise
+        assert mgr.steps() == [1]
+
+    def test_exhausted_retries_surface_in_wait(self, tmp_path):
+        mgr = CheckpointManager(tmp_path, retries=0, backoff_s=0.0)
+        mgr.fail_next_saves(1)
+        mgr.save(1, _tree())
+        with pytest.raises(OSError, match="injected checkpoint I/O"):
+            mgr.wait()
+        assert mgr.steps() == []
+        # the error is surfaced exactly once and the manager recovers
+        mgr.save(2, _tree(), blocking=True)
+        assert mgr.steps() == [2]
+
+    def test_async_retry_then_success(self, tmp_path):
+        mgr = CheckpointManager(tmp_path, retries=2, backoff_s=0.001)
+        mgr.fail_next_saves(1)
+        mgr.save(5, _tree())                  # async worker retries inside
+        mgr.wait()
+        assert mgr.steps() == [5]
+
+
+class TestKnownGood:
+    """Known-good tagging + rollback: the sentinel's escalation target."""
+
+    def test_marker_written_atomically_with_checkpoint(self, tmp_path):
+        mgr = CheckpointManager(tmp_path)
+        mgr.save(1, _tree(), blocking=True, known_good=True)
+        mgr.save(2, _tree(), blocking=True)
+        assert (tmp_path / "step_0000000001"
+                / CheckpointManager.KNOWN_GOOD_MARKER).exists()
+        assert not (tmp_path / "step_0000000002"
+                    / CheckpointManager.KNOWN_GOOD_MARKER).exists()
+        assert mgr.known_good_steps() == [1]
+
+    def test_rollback_prefers_newest_tagged(self, tmp_path):
+        mgr = CheckpointManager(tmp_path, keep=10)
+        for s, good in ((1, True), (2, False), (3, True), (4, False)):
+            mgr.save(s, _tree(seed=s), blocking=True, known_good=good)
+        got = mgr.rollback(_tree())
+        assert got is not None
+        tree, step = got
+        assert step == 3
+        np.testing.assert_array_equal(np.asarray(tree["params"]["w"]),
+                                      np.asarray(_tree(seed=3)["params"]["w"]))
+
+    def test_rollback_before_bound(self, tmp_path):
+        mgr = CheckpointManager(tmp_path, keep=10)
+        for s in (1, 3):
+            mgr.save(s, _tree(seed=s), blocking=True, known_good=True)
+        _, step = mgr.rollback(_tree(), before=3)
+        assert step == 1
+
+    def test_rollback_falls_back_past_damaged_tag(self, tmp_path):
+        mgr = CheckpointManager(tmp_path, keep=10)
+        for s in (1, 3):
+            mgr.save(s, _tree(seed=s), blocking=True, known_good=True)
+        (tmp_path / "step_0000000003" / "data.bin").unlink()
+        # step 3 now incomplete: not listed, rollback lands on step 1
+        _, step = mgr.rollback(_tree())
+        assert step == 1
+
+    def test_rollback_none_without_tags(self, tmp_path):
+        mgr = CheckpointManager(tmp_path)
+        mgr.save(1, _tree(), blocking=True)   # untagged
+        assert mgr.rollback(_tree()) is None
+
+    def test_gc_preserves_newest_known_good(self, tmp_path):
+        """The rollback anchor outlives the keep-N window."""
+        mgr = CheckpointManager(tmp_path, keep=2)
+        mgr.save(1, _tree(seed=1), blocking=True, known_good=True)
+        for s in (2, 3, 4):
+            mgr.save(s, _tree(seed=s), blocking=True)
+        assert mgr.steps() == [1, 3, 4]
+        assert mgr.known_good_steps() == [1]
+        # a newer tag releases the old anchor on the next GC
+        mgr.save(5, _tree(seed=5), blocking=True, known_good=True)
+        mgr.save(6, _tree(seed=6), blocking=True)
+        assert 1 not in mgr.steps()
+        assert mgr.known_good_steps() == [5]

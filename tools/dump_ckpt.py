@@ -5,7 +5,9 @@
         --leaves --verify
 
 Prints the step directories a ``CheckpointManager`` root holds (flagging
-orphaned ``.tmp`` dirs from crashed saves), then for the chosen step (the
+orphaned ``.tmp`` dirs from crashed saves and marking sentinel-validated
+known-good steps — the rollback targets — with ``*``), then for the
+chosen step (the
 newest by default): the manifest format/extras, the embedded per-leaf
 StepProgram descriptors (``state_programs`` — regime, shards, state
 layout, rank, method: what the elastic restore transposes from), and with
@@ -78,10 +80,12 @@ def main(argv=None) -> int:
         return 1
     mgr = CheckpointManager(root)
     steps = mgr.steps()
+    good = set(mgr.known_good_steps())
     tmps = sorted(p.name for p in root.iterdir()
                   if p.is_dir() and p.name.endswith(".tmp"))
+    tagged = [f"{s}*" if s in good else str(s) for s in steps]
     print(f"{root}: {len(steps)} complete step(s) "
-          f"{steps if steps else ''}")
+          f"[{', '.join(tagged)}]{'  (* = known-good)' if good else ''}")
     for t in tmps:
         print(f"  orphaned partial write (crashed save): {t}/")
     if not steps:
@@ -100,6 +104,7 @@ def main(argv=None) -> int:
           f"{manifest['n_leaves']} leaves, "
           f"{_fmt_bytes(total_raw)} logical / {_fmt_bytes(total_disk)} "
           "on disk")
+    print(f"  known-good: {'yes (sentinel-validated; rollback target)' if step in good else 'no'}")
     for k in ("step", "time"):
         if k in extra:
             print(f"  extra.{k}: {extra[k]}")
