@@ -205,6 +205,7 @@ class CheckpointManager:
 
     STEP_RE = re.compile(r"^step_(\d+)$")
     KNOWN_GOOD_MARKER = "KNOWN_GOOD"
+    RESUME_MARKER = "RESUME"
 
     def __init__(self, root: str | os.PathLike, keep: int = 3,
                  retries: int = 3, backoff_s: float = 0.05):
@@ -216,6 +217,7 @@ class CheckpointManager:
         self._worker: threading.Thread | None = None
         self._last_error: BaseException | None = None
         self._fail_saves = 0
+        self._hang_next_save_s = 0.0
 
     # ---------------- save ----------------
 
@@ -224,8 +226,17 @@ class CheckpointManager:
         save *attempts* raise OSError before touching the filesystem."""
         self._fail_saves = n
 
+    def hang_next_save(self, seconds: float) -> None:
+        """Fault injection (tests): the next save attempt stalls for
+        ``seconds`` before touching disk — a hung filesystem, the case
+        ``wait(timeout=...)`` exists to bound."""
+        self._hang_next_save_s = seconds
+
     def _save_once(self, step: int, host_tree: Any, meta: dict,
                    known_good: bool) -> None:
+        if self._hang_next_save_s > 0:
+            hang, self._hang_next_save_s = self._hang_next_save_s, 0.0
+            time.sleep(hang)
         if self._fail_saves > 0:
             self._fail_saves -= 1
             raise OSError("injected checkpoint I/O failure")
@@ -269,13 +280,49 @@ class CheckpointManager:
             self._worker = threading.Thread(target=work, daemon=True)
             self._worker.start()
 
-    def wait(self) -> None:
+    def wait(self, timeout: float | None = None) -> None:
+        """Join the in-flight save, then surface any save failure.
+
+        ``timeout`` (seconds) bounds the join — without it a hung
+        filesystem deadlocks shutdown and the preemption drain.  On
+        expiry a ``TimeoutError`` (an ``OSError``, the same failure
+        family the bounded-retry path reports) is raised; the worker
+        thread cannot be cancelled and is left running, and the manager
+        stays joinable — a later ``wait()`` re-joins it.
+        """
         if self._worker is not None:
-            self._worker.join()
+            self._worker.join(timeout)
+            if self._worker.is_alive():
+                raise TimeoutError(
+                    f"checkpoint save still running after {timeout:.1f}s — "
+                    "filesystem presumed hung")
             self._worker = None
         if self._last_error is not None:
             err, self._last_error = self._last_error, None
             raise err
+
+    # ---------------- resume marker ----------------
+
+    def write_resume_marker(self, step: int, reason: str) -> None:
+        """Drop a ``RESUME`` record in the root: the preemption drain's
+        promise that the newest checkpoint is a clean auto-resume point.
+        One small json file, overwritten per preemption."""
+        (self.root / self.RESUME_MARKER).write_text(json.dumps(
+            {"step": int(step), "reason": reason, "time": time.time()}))
+
+    def consume_resume_marker(self) -> dict | None:
+        """Pop the resume marker if one exists (returns its record).  The
+        restarted run consumes it exactly once — a second restart without
+        a new preemption sees a plain elastic resume."""
+        p = self.root / self.RESUME_MARKER
+        if not p.exists():
+            return None
+        try:
+            rec = json.loads(p.read_text())
+        except (OSError, ValueError):
+            rec = {}
+        p.unlink(missing_ok=True)
+        return rec
 
     # ---------------- restore ----------------
 

@@ -259,6 +259,49 @@ def transpose_state(loaded, records: list[dict], param_descs):
 
 
 # ---------------------------------------------------------------------------
+# Offline target-mesh admissibility (tools/dump_ckpt.py --target-mesh)
+# ---------------------------------------------------------------------------
+
+
+def restore_targets(record: dict, device_count: int) -> dict:
+    """Which StepProgram regimes one embedded state-program record can
+    elastic-restore onto for a ``device_count``-device ``(1, g)`` mesh.
+
+    The *restore* itself is always admissible onto "replicated" — layout,
+    regime and group-size changes are identity on the logical state (the
+    module lowering table) — so the operator question this answers is
+    which SHARDED hot paths survive the move.  The gates are the same
+    deployment rules ``hotpath_param_specs`` ranks with
+    (``repro.kernels.traffic.in_column_regime`` / ``in_row_regime``, and
+    ``pick_row_flavor`` for the row family's Adam-state flavour), so the
+    report cannot drift from what the restarted run would actually plan.
+    """
+    from repro.core.program import pick_row_flavor
+    from repro.kernels import traffic
+
+    if record.get("kind") != "lowrank":
+        return {"regimes": ["dense"], "notes": []}
+    m, n, r = int(record["m"]), int(record["n"]), int(record["rank"])
+    g = int(device_count)
+    regimes = ["replicated"]
+    notes = []
+    if g > 1:
+        if traffic.in_column_regime(n, g, r):
+            regimes.append("column")
+        elif n % g:
+            notes.append(f"column: n={n} % g={g} != 0")
+        else:
+            notes.append(f"column: n/g={n // g} < 2r={2 * r}")
+        if traffic.in_row_regime(m, g, r):
+            regimes.append(pick_row_flavor(m, n, r, g))
+        elif m % g:
+            notes.append(f"row: m={m} % g={g} != 0")
+        else:
+            notes.append(f"row: m/g={m // g} < 2r={2 * r}")
+    return {"regimes": regimes, "notes": notes}
+
+
+# ---------------------------------------------------------------------------
 # The restore-side loader
 # ---------------------------------------------------------------------------
 

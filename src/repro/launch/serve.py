@@ -9,6 +9,14 @@ refilled as soon as its sequence finishes — slot refill re-prefills into
 the batch gap).  Prefill and decode are separately jitted; decode is the
 steady-state program (one token across all slots per call).  Greedy
 sampling by default, temperature optional.
+
+Graceful degradation (:class:`AdmissionQueue`): when the decode batch is
+saturated, admission beyond ``--max-queue`` pending requests is SHED at
+submit (status ``"shed"``), and a queued request that waits past
+``--deadline-s`` is EXPIRED at the next wave take (status ``"expired"``)
+— explicit markers instead of unbounded waiting, the serving-robustness
+floor under overload.  Both knobs default off (0 = unbounded / no
+deadline).
 """
 
 from __future__ import annotations
@@ -37,6 +45,63 @@ class Request:
     t_submit: float = 0.0
     t_first: float = 0.0
     t_done: float = 0.0
+    status: str = "queued"    # queued | done | expired | shed
+
+
+class AdmissionQueue:
+    """Bounded FIFO admission with per-request queue deadlines.
+
+    Pure host-side policy (no model, no jax) so overload behaviour is
+    unit-testable: ``submit`` sheds beyond ``max_queue`` pending entries,
+    ``take_wave`` first expires entries whose queue wait exceeds
+    ``deadline_s`` and then hands out up to ``batch`` survivors in FIFO
+    order.  ``max_queue=0`` / ``deadline_s=0`` disable the respective
+    limit.  Rejected requests are kept (with their status marker) on the
+    ``shed`` / ``expired`` lists so the caller can report them instead of
+    leaving clients waiting forever.
+    """
+
+    def __init__(self, max_queue: int = 0, deadline_s: float = 0.0):
+        self.max_queue = max_queue
+        self.deadline_s = deadline_s
+        self.pending: list[Request] = []
+        self.shed: list[Request] = []
+        self.expired: list[Request] = []
+
+    def __len__(self) -> int:
+        return len(self.pending)
+
+    def submit(self, req: Request, now: float | None = None) -> bool:
+        """Admit ``req`` (True) or shed it (False) when the queue is full."""
+        if req.t_submit == 0.0:
+            req.t_submit = time.time() if now is None else now
+        if self.max_queue and len(self.pending) >= self.max_queue:
+            req.status = "shed"
+            self.shed.append(req)
+            return False
+        req.status = "queued"
+        self.pending.append(req)
+        return True
+
+    def _expire(self, now: float) -> None:
+        if not self.deadline_s:
+            return
+        keep = []
+        for r in self.pending:
+            if now - r.t_submit > self.deadline_s:
+                r.status = "expired"
+                self.expired.append(r)
+            else:
+                keep.append(r)
+        self.pending = keep
+
+    def take_wave(self, batch: int, now: float | None = None
+                  ) -> list[Request]:
+        """Expire overdue entries, then pop up to ``batch`` requests."""
+        self._expire(time.time() if now is None else now)
+        wave = self.pending[:batch]
+        del self.pending[:batch]
+        return wave
 
 
 def serve(argv=None):
@@ -51,6 +116,12 @@ def serve(argv=None):
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="shed request submissions beyond this many "
+                         "pending entries (0 = unbounded)")
+    ap.add_argument("--deadline-s", type=float, default=0.0,
+                    help="expire requests that wait in the queue longer "
+                         "than this before their wave starts (0 = none)")
     args = ap.parse_args(argv)
 
     ctx = (smoke_context() if args.mesh == "smoke"
@@ -70,16 +141,18 @@ def serve(argv=None):
             vocab_size=cfg.vocab_size, seq_len=args.prompt_len,
             global_batch=args.requests, seed=args.seed))
         prompts = np.asarray(data.global_batch_at(0)["tokens"])
-        queue = [Request(rid=i, prompt=prompts[i], max_new=args.gen,
-                         t_submit=time.time())
-                 for i in range(args.requests)]
+        queue = AdmissionQueue(max_queue=args.max_queue,
+                               deadline_s=args.deadline_s)
+        for i in range(args.requests):
+            queue.submit(Request(rid=i, prompt=prompts[i],
+                                 max_new=args.gen, t_submit=time.time()))
         done: list[Request] = []
 
         B = args.batch
         t0 = time.time()
         n_decode_calls = 0
-        while queue or done is None:
-            wave = [queue.pop(0) for _ in range(min(B, len(queue)))]
+        while len(queue):
+            wave = queue.take_wave(B)
             if not wave:
                 break
             # pad the wave to the static batch with repeats of slot 0
@@ -112,17 +185,25 @@ def serve(argv=None):
             now = time.time()
             for r in wave:
                 r.t_done = now
+                r.status = "done"
                 done.append(r)
 
         wall = time.time() - t0
         total_new = sum(len(r.out_tokens) for r in done)
-        ttft = np.mean([r.t_first - r.t_submit for r in done])
+        ttft = np.mean([r.t_first - r.t_submit for r in done]) \
+            if done else 0.0
         print(f"[serve] {len(done)} requests, {total_new} tokens in "
               f"{wall:.2f}s  ({total_new / max(wall, 1e-9):.1f} tok/s, "
               f"mean TTFT {ttft:.2f}s, {n_decode_calls} decode calls)",
               flush=True)
+        if queue.shed or queue.expired:
+            print(f"[serve] degraded: {len(queue.shed)} shed at admission, "
+                  f"{len(queue.expired)} expired past the "
+                  f"{args.deadline_s:.1f}s queue deadline", flush=True)
         return {"requests": len(done), "tokens": total_new,
-                "wall_s": wall, "tok_per_s": total_new / max(wall, 1e-9)}
+                "wall_s": wall, "tok_per_s": total_new / max(wall, 1e-9),
+                "shed": [r.rid for r in queue.shed],
+                "expired": [r.rid for r in queue.expired]}
 
 
 def _sample(logits, key, temperature: float):

@@ -41,6 +41,22 @@ Production behaviours exercised here (and tested in tests/test_train_loop.py):
   (``hotpath_param_specs``; override with ``--hotpath-layout``) — and
   the fused optimizer step runs under ``shard_map`` — see
   repro.core.subtrack for the per-regime collective contract.
+* **elastic mesh failover**: a step deadline on the metric drain (plus
+  any raising collective) turns a hung/lost device into a ``MESH_LOST``
+  verdict — distinct from the numerical ladder, because the *logical*
+  state is fine and only the topology is suspect.  The runtime then
+  rebuilds the mesh from the survivors (``degraded_context``), re-runs
+  ``hotpath_param_specs`` + ``build_program`` on the new topology
+  (regimes legitimately flip as group sizes shrink), elastic-restores
+  the newest known-good checkpoint onto the re-planned programs via
+  ``CheckpointManager.rollback``, and resumes — bounded by
+  ``--max-failovers``.  ``--inject dev-loss@N`` simulates the loss on
+  the fake mesh (raise or hang flavour), ``slow-host@N`` injects a
+  stall that must trip the straggler watchdog without corrupting state.
+* **preemption**: SIGTERM/SIGINT finishes the in-flight step, writes a
+  blocking known-good checkpoint plus a ``RESUME`` marker, and exits 0;
+  the restarted run consumes the marker and auto-resumes.  ``--inject
+  preempt@N`` self-delivers the signal for the e2e tests.
 """
 
 from __future__ import annotations
@@ -48,7 +64,10 @@ from __future__ import annotations
 import argparse
 import json
 import math
+import os
+import signal
 import sys
+import threading
 import time
 from pathlib import Path
 
@@ -64,7 +83,9 @@ from repro.data.pipeline import (DataConfig, SyntheticLMDataset,
                                  batch_for_model, corrupt_tokens, fetch_batch)
 from repro.distributed import sharding as sh
 from repro.distributed.context import mesh_context
-from repro.launch.mesh import host_context, make_context, smoke_context
+from repro.launch.mesh import (MeshLostError, SimulatedDeviceLoss,
+                               degraded_context, host_context, make_context,
+                               smoke_context)
 from repro.checkpoint import transpose as ckpt_transpose
 from repro.launch.steps import (TrainState, checkpoint_descriptors,
                                 default_rank, make_train_step,
@@ -123,10 +144,19 @@ class HealthSentinel:
     with lr backoff for a cooldown window.  A healthy step resets the
     counter; more than ``max_rollbacks`` rollbacks (or no known-good
     checkpoint when one is needed) aborts the run.
+
+    Infrastructure faults take a separate door: :meth:`mesh_lost` is the
+    ``MESH_LOST`` verdict for a hung or raising collective / lost device.
+    It never touches the strike counter — the logical state is not
+    suspect, the *topology* is — and escalates straight to ``FAILOVER``
+    (rebuild the mesh from survivors, re-plan the StepPrograms, elastic-
+    restore the newest known-good checkpoint; see the failover loop in
+    :func:`train`).  No lr backoff either: the model was healthy.
     """
 
     OK, SKIP, REFRESH, ROLLBACK, ABORT = \
         "ok", "skip", "refresh", "rollback", "abort"
+    MESH_LOST, FAILOVER = "mesh-lost", "failover"
 
     def __init__(self, alpha: float = 0.05, warmup: int = 5,
                  sigma: float = 4.0, factor: float = 1.25,
@@ -198,9 +228,19 @@ class HealthSentinel:
     def note_rollback(self, resume_step: int) -> None:
         self.backoff_until = resume_step + self.cooldown
 
+    def mesh_lost(self, step: int, reason: str) -> str:
+        """The infrastructure verdict: record it and escalate straight to
+        failover (no strikes, no lr backoff — see the class docstring)."""
+        self.events.append({"step": step, "reason": reason,
+                            "action": self.FAILOVER,
+                            "verdict": self.MESH_LOST})
+        print(f"[sentinel] step {step}: {reason} — verdict "
+              f"{self.MESH_LOST} -> {self.FAILOVER}", flush=True)
+        return self.FAILOVER
+
 
 INJECT_KINDS = ("nan-grad", "loss-spike", "sigma-blowup", "corrupt-batch",
-                "ckpt-io-error")
+                "ckpt-io-error", "dev-loss", "preempt", "slow-host")
 
 # Static eta multiplier for --inject sigma-blowup: with the default
 # eta=10 this drives eta*sigma far past pi/2 on the injected tracking
@@ -223,7 +263,7 @@ def parse_injections(spec: str) -> dict[int, str]:
     return out
 
 
-def train(argv=None) -> dict:
+def _parse_args(argv) -> argparse.Namespace:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="llama-100m")
     ap.add_argument("--optimizer", default="subtrack")
@@ -263,7 +303,51 @@ def train(argv=None) -> dict:
                          f"kind in {{{', '.join(INJECT_KINDS)}}} — e.g. "
                          "'nan-grad@13,loss-spike@31'.  Each entry fires "
                          "once (consumed), so replay after a sentinel "
-                         "rollback is clean")
+                         "rollback is clean.  Infrastructure kinds: "
+                         "dev-loss (a device subset leaves the mesh at "
+                         "step N and STAYS lost until failover — see "
+                         "--survivors/--dev-loss-mode), preempt (self-"
+                         "delivered SIGTERM), slow-host (a --stall-s "
+                         "stall that must trip the straggler watchdog "
+                         "without corrupting state)")
+    ap.add_argument("--mesh-devices", type=int, default=0,
+                    help="with --mesh host: build the (1, N) mesh over "
+                         "only the first N local devices (0 = all) — how "
+                         "the failover tests run uninjected degraded-mesh "
+                         "reference trajectories")
+    ap.add_argument("--step-timeout", type=float, default=300.0,
+                    help="deadline (s) on each step's device compute / "
+                         "metric drain; exceeding it is a MESH_LOST "
+                         "verdict (a collective presumed hung) and "
+                         "triggers failover.  0 disables")
+    ap.add_argument("--survivors", type=int, default=0,
+                    help="device count the mesh shrinks to on failover "
+                         "when the fault does not name survivors "
+                         "(0 = half the mesh, min 1); also the subset "
+                         "size --inject dev-loss leaves alive")
+    ap.add_argument("--dev-loss-mode", default="raise",
+                    choices=["raise", "hang"],
+                    help="--inject dev-loss flavour: raise surfaces a "
+                         "failed collective at dispatch; hang blocks the "
+                         "metric drain so the --step-timeout watchdog "
+                         "must catch it")
+    ap.add_argument("--hang-s", type=float, default=30.0,
+                    help="how long the simulated hung collective blocks "
+                         "(dev-loss hang mode; keep it above "
+                         "--step-timeout so the deadline fires first)")
+    ap.add_argument("--stall-s", type=float, default=0.75,
+                    help="--inject slow-host stall duration (s)")
+    ap.add_argument("--max-failovers", type=int, default=2,
+                    help="mesh rebuilds allowed before a MESH_LOST "
+                         "verdict is re-raised to the operator")
+    ap.add_argument("--save-timeout", type=float, default=60.0,
+                    help="bound (s) on checkpoint-save waits during "
+                         "preemption drain and failover — a hung "
+                         "filesystem must not hang the exit path")
+    ap.add_argument("--resume-marker", default="on", choices=["on", "off"],
+                    help="write a RESUME marker on preemption and consume "
+                         "it (with a log line) on the next start; off "
+                         "disables both sides")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--eta", type=float, default=10.0)
@@ -287,13 +371,165 @@ def train(argv=None) -> dict:
                          "forces the reduce-scatter row variant (M/V "
                          "sharded into n/g slices); off disables the "
                          "shard_map'd hot path (GSPMD propagation)")
-    args = ap.parse_args(argv)
+    return ap.parse_args(argv)
 
+
+class _FailoverSession:
+    """Host state that must survive a mesh failover (each `_run` rebuilds
+    everything mesh-derived from scratch; everything here carries over):
+    the consumed-once injection table, the sentinel (its events and loss
+    EMA are mesh-independent), accumulated history, the checkpoint
+    manager, the armed device-loss simulator and the preemption flag."""
+
+    def __init__(self, args: argparse.Namespace):
+        self.injections = parse_injections(args.inject)
+        self.inject_on = bool(self.injections)
+        self.sentinel = HealthSentinel()
+        self.watchdog = StragglerWatchdog()
+        self.history: list[dict] = []
+        self.skipped_batches: list[int] = []
+        self.ckpt = (CheckpointManager(args.checkpoint_dir)
+                     if args.checkpoint_dir else None)
+        self.dev_loss = SimulatedDeviceLoss()
+        self.preempt = False                 # set by the signal handler
+        self.preempt_signum: int | None = None
+        self.resume_via_rollback = False     # next _run restores via rollback
+        self.failovers = 0
+        self.failover_events: list[dict] = []
+        self.prev_programs: list[tuple] | None = None
+        self.t_start = time.time()
+
+
+def _install_preempt_handlers(session: _FailoverSession):
+    """SIGTERM/SIGINT -> preemption drain (finish the in-flight step,
+    blocking known-good save, RESUME marker, exit 0).  Handlers only
+    install from the main thread (signal.signal's constraint); the
+    previous handlers are returned so an in-process caller (pytest) gets
+    them back afterwards."""
+    if threading.current_thread() is not threading.main_thread():
+        return None
+    prev = {}
+    def handler(signum, frame):
+        session.preempt = True
+        session.preempt_signum = signum
+        print(f"[train] caught signal {signum} — preemption: finishing "
+              "the in-flight step, saving known-good, exiting cleanly",
+              flush=True)
+    for sig in (signal.SIGTERM, signal.SIGINT):
+        try:
+            prev[sig] = signal.signal(sig, handler)
+        except (ValueError, OSError):  # pragma: no cover - exotic platform
+            pass
+    return prev
+
+
+def _restore_preempt_handlers(prev) -> None:
+    for sig, h in (prev or {}).items():
+        try:
+            signal.signal(sig, h)
+        except (ValueError, OSError):  # pragma: no cover
+            pass
+
+
+def _deadline(fn, timeout: float, what: str):
+    """Run ``fn`` under a wall-clock deadline.  A device sync that never
+    returns (hung collective, dead participant) becomes a
+    :class:`MeshLostError` after ``timeout`` seconds — the runner thread
+    cannot be cancelled and is abandoned (daemon), which is exactly the
+    semantics of a host giving up on a wedged device.  ``timeout <= 0``
+    runs inline."""
+    if not timeout or timeout <= 0:
+        return fn()
+    box: dict = {}
+
+    def run():
+        try:
+            box["ok"] = fn()
+        except BaseException as e:  # re-raised on the caller's thread
+            box["err"] = e
+
+    t = threading.Thread(target=run, daemon=True)
+    t.start()
+    t.join(timeout)
+    if t.is_alive():
+        raise MeshLostError(
+            f"step deadline exceeded ({timeout:.1f}s) during {what} — "
+            "device compute or a collective presumed hung")
+    if "err" in box:
+        raise box["err"]
+    return box.get("ok")
+
+
+def _failover(args, session: _FailoverSession, ctx, err: MeshLostError):
+    """Handle a MESH_LOST verdict: pick the survivors, rebuild the mesh
+    context, and flag the next ``_run`` to elastic-restore the newest
+    known-good checkpoint onto the re-planned programs.  Re-raises when
+    failover cannot help (no checkpoint dir, budget exhausted)."""
+    step = err.step if err.step is not None else \
+        (session.history[-1]["step"] if session.history else -1)
+    session.sentinel.mesh_lost(step, str(err))
+    session.failovers += 1
+    if session.ckpt is None:
+        raise MeshLostError(
+            "mesh lost with no --checkpoint-dir: nothing to fail over "
+            "from") from err
+    if session.failovers > args.max_failovers:
+        raise MeshLostError(
+            f"mesh lost again after {args.max_failovers} failover(s) — "
+            "giving up") from err
+    # Absorb any in-flight save (bounded — a hung filesystem must not
+    # also hang the failover); its error, if any, is not fatal here: the
+    # rollback below targets already-landed known-good steps.
+    try:
+        session.ckpt.wait(timeout=args.save_timeout)
+    except OSError as e:
+        print(f"[failover] pending checkpoint save abandoned ({e})",
+              flush=True)
+    survivors = err.survivors
+    if not survivors:
+        keep = args.survivors or max(1, len(jax.devices()) // 2)
+        survivors = jax.devices()[:keep]
+    session.dev_loss.disarm()         # the lost devices are out of the mesh
+    session.resume_via_rollback = True
+    fresh = StragglerWatchdog()       # new topology, new timing statistics
+    fresh.flagged = session.watchdog.flagged
+    session.watchdog = fresh
+    session.failover_events.append({
+        "step": step, "from_devices": int(ctx.mesh.devices.size),
+        "to_devices": len(survivors)})
+    print(f"[failover] rebuilding mesh {ctx.mesh.devices.size} -> "
+          f"{len(survivors)} devices; re-planning StepPrograms and "
+          "elastic-restoring the newest known-good checkpoint", flush=True)
+    return degraded_context(survivors)
+
+
+def train(argv=None) -> dict:
+    args = _parse_args(argv)
     ctx = (smoke_context() if args.mesh == "smoke"
-           else host_context() if args.mesh == "host"
+           else host_context(limit=args.mesh_devices or None)
+           if args.mesh == "host"
            else make_context(multi_pod=args.mesh == "multipod"))
-    injections = parse_injections(args.inject)
-    inject_on = bool(injections)
+    session = _FailoverSession(args)
+    prev_handlers = _install_preempt_handlers(session)
+    try:
+        while True:
+            try:
+                return _run(args, ctx, session)
+            except MeshLostError as e:
+                ctx = _failover(args, session, ctx, e)
+            except jax.errors.JaxRuntimeError as e:
+                # A real raising collective / dead backend surfaces here
+                # (not via the simulator): same MESH_LOST door, bounded
+                # by the same failover budget.
+                ctx = _failover(args, session, ctx, MeshLostError(
+                    f"runtime error treated as mesh loss: {e}"))
+    finally:
+        _restore_preempt_handlers(prev_handlers)
+
+
+def _run(args, ctx, session: _FailoverSession) -> dict:
+    injections = session.injections
+    inject_on = session.inject_on
 
     with mesh_context(ctx):
         cfg = get_config(args.arch, smoke=args.smoke)
@@ -383,8 +619,7 @@ def train(argv=None) -> dict:
                            donate_argnums=(0,))
         warm = jax.jit(make_warm_start(bundle, optimizer, remat=args.remat))
 
-        ckpt = CheckpointManager(args.checkpoint_dir) \
-            if args.checkpoint_dir else None
+        ckpt = session.ckpt
         start_step = 0
         ckpt_extra: dict = {}
         restore_shardings = restore_loader = None
@@ -404,7 +639,54 @@ def train(argv=None) -> dict:
                 ctx.mesh if hot_shardings is not None else None,
                 hot_shardings)
             restore_loader = ckpt_transpose.elastic_loader(descs)
-            if args.resume != "off":
+            # re-planning ledger: after a failover the descriptors above
+            # were rebuilt against the degraded mesh — diff them against
+            # the pre-fault programs so the regime/group flips are
+            # observable (summary + log), not just implicit
+            progs = [(d.regime, int(d.shards), d.state_layout, int(d.rank))
+                     for d in ckpt_transpose.descriptor_leaves(descs)
+                     if d.kind == "lowrank"]
+            if session.resume_via_rollback \
+                    and session.prev_programs is not None:
+                changed = sum(1 for a, b in
+                              zip(session.prev_programs, progs) if a != b)
+                if session.failover_events:
+                    session.failover_events[-1]["program_changes"] = changed
+                print(f"[failover] re-planned StepPrograms on the "
+                      f"{ctx.mesh.devices.size}-device mesh: {changed} of "
+                      f"{len(progs)} low-rank leaves changed "
+                      "regime/group/state-layout", flush=True)
+            session.prev_programs = progs
+            if args.resume_marker == "on":
+                marker = ckpt.consume_resume_marker()
+                if marker:
+                    print(f"[train] resume marker found "
+                          f"(step {marker.get('step')}, "
+                          f"{marker.get('reason')}) — auto-resuming",
+                          flush=True)
+            if session.resume_via_rollback:
+                # failover resume: the newest KNOWN-GOOD checkpoint,
+                # elastic-transposed onto the re-planned programs and
+                # device_put with the degraded mesh's shardings — the
+                # manager saved under the old mesh's layouts, restores
+                # under the new ones
+                res = ckpt.rollback(state, shardings=restore_shardings,
+                                    loader=restore_loader)
+                if res is None:
+                    raise RuntimeError(
+                        "[failover] unrecoverable: mesh lost but no "
+                        "known-good checkpoint restores onto the "
+                        "degraded mesh")
+                state, ck_step = res
+                start_step = ck_step + 1
+                session.resume_via_rollback = False
+                if session.failover_events:
+                    session.failover_events[-1]["restored_step"] = ck_step
+                    session.failover_events[-1]["resume_step"] = start_step
+                print(f"[failover] restored known-good step {ck_step} "
+                      f"onto {ctx.mesh.devices.size} devices; resuming "
+                      f"at step {start_step}", flush=True)
+            elif args.resume != "off":
                 if args.resume == "elastic":
                     restored = ckpt.restore(state,
                                             shardings=restore_shardings,
@@ -420,11 +702,11 @@ def train(argv=None) -> dict:
 
         k = getattr(optimizer.config, "update_interval", 0)
         baseline = args.optimizer in ("adamw", "badam")
-        watchdog = StragglerWatchdog()
-        sentinel = HealthSentinel()
-        history: list[dict] = []
-        skipped_batches: list[int] = []
-        t_start = time.time()
+        watchdog = session.watchdog
+        sentinel = session.sentinel
+        history = session.history
+        skipped_batches = session.skipped_batches
+        dev_loss = session.dev_loss
 
         if start_step == 0 and not baseline:
             batch0 = batch_for_model(cfg, None, data, 0)
@@ -446,6 +728,20 @@ def train(argv=None) -> dict:
         # a pure counter reset.
 
         def drain(rec: dict, metrics) -> str:
+            # The blocking device sync runs under the step deadline: a
+            # hung collective (or the armed dev-loss simulator) becomes
+            # MESH_LOST instead of wedging the host forever.  Once the
+            # sync returns, the float() reads below are host-local.
+            def sync():
+                dev_loss.check(rec["step"], "drain")
+                jax.block_until_ready(metrics["loss"])
+            try:
+                _deadline(sync, args.step_timeout,
+                          f"metric drain of step {rec['step']}")
+            except MeshLostError as e:
+                if e.step is None:
+                    e.step = rec["step"]
+                raise
             loss = float(metrics["loss"])          # blocks on rec["step"]
             rec["loss"] = loss
             rec["grad_norm"] = float(metrics["grad_norm"])
@@ -510,8 +806,11 @@ def train(argv=None) -> dict:
         last_act = HealthSentinel.OK
         step = start_step
         batch, batch_ok = fetch(step)
+        stall_s = 0.0
         while True:
             while step < args.steps:
+                if session.preempt:
+                    break                          # graceful drain below
                 if step == args.fail_at_step:
                     if ckpt:
                         ckpt.wait()
@@ -529,6 +828,37 @@ def train(argv=None) -> dict:
                         # CheckpointManager.save must absorb them
                         ckpt.fail_next_saves(2)
                     kind = None
+                if kind == "dev-loss":
+                    # arm the simulator: from this step on, the mesh has
+                    # lost all but the survivor subset (stays armed until
+                    # failover disarms it — a lost device stays lost)
+                    keep = args.survivors \
+                        or max(1, ctx.mesh.devices.size // 2)
+                    survivors = list(ctx.mesh.devices.flat)[:keep]
+                    dev_loss.arm(step, survivors, mode=args.dev_loss_mode,
+                                 hang_s=args.hang_s)
+                    print(f"[inject] step {step}: dev-loss "
+                          f"({ctx.mesh.devices.size} -> {keep} devices, "
+                          f"mode={args.dev_loss_mode})", flush=True)
+                    kind = None
+                if kind == "preempt":
+                    # self-delivered SIGTERM: the handler sets the flag,
+                    # the NEXT loop top takes the graceful-drain branch
+                    # (this step still dispatches — "finish the in-flight
+                    # step" semantics)
+                    print(f"[inject] step {step}: preempt (SIGTERM to "
+                          "self)", flush=True)
+                    os.kill(os.getpid(), signal.SIGTERM)
+                    kind = None
+                if kind == "slow-host":
+                    stall_s = args.stall_s         # applied after dispatch
+                    print(f"[inject] step {step}: slow-host "
+                          f"(+{stall_s:.2f}s stall)", flush=True)
+                    kind = None
+                if dev_loss.armed:
+                    # raise-mode device loss surfaces at dispatch (XLA
+                    # reports a dead participant on the calling thread)
+                    dev_loss.check(step, "dispatch")
                 if not batch_ok:
                     # skip-marked batch from the resilient fetch: one
                     # strike, no dispatch — the step is simply not taken
@@ -572,6 +902,12 @@ def train(argv=None) -> dict:
                 else:
                     state, metrics = jit_step(state, batch, jnp.float32(lr),
                                               do_subspace_update=do_update)
+                if stall_s:
+                    # slow-host injection: a pure host-side stall — the
+                    # step's wall time inflates (the straggler watchdog
+                    # must flag it at drain) but device state is untouched
+                    time.sleep(stall_s)
+                    stall_s = 0.0
                 nbatch, nbatch_ok = fetch(step + 1)  # prefetch under compute
                 act = HealthSentinel.OK
                 if inflight is not None:
@@ -605,6 +941,8 @@ def train(argv=None) -> dict:
                     ckpt.save(step, state, extra_meta=ckpt_extra,
                               known_good=(act == HealthSentinel.OK))
                 step += 1
+            if session.preempt:
+                break
             if inflight is None:
                 break
             act = drain(*inflight)
@@ -615,12 +953,45 @@ def train(argv=None) -> dict:
                 break
             state, step = rb                       # tail rollback: re-enter
             batch, batch_ok = fetch(step)
-        if ckpt:
+
+        preempted = False
+        if session.preempt:
+            # Preemption drain: finish the in-flight step (it already
+            # dispatched — drain its metrics so the save below is tagged
+            # off an observed-healthy verdict), write a bounded blocking
+            # known-good save plus the RESUME marker, and exit cleanly.
+            # Every checkpoint wait is bounded: a hung filesystem must
+            # not turn a preemption into a SIGKILL.
+            act = HealthSentinel.OK
+            if inflight is not None:
+                act = drain(*inflight)
+                inflight = None
+            save_step = history[-1]["step"] if history \
+                else max(start_step - 1, 0)
+            if ckpt is not None:
+                try:
+                    ckpt.wait(timeout=args.save_timeout)
+                    ckpt.save(save_step, state, extra_meta=ckpt_extra,
+                              known_good=(act == HealthSentinel.OK))
+                    ckpt.wait(timeout=args.save_timeout)
+                except OSError as e:
+                    print(f"[train] preemption save did not land ({e}) — "
+                          "the previous checkpoint is the resume point",
+                          flush=True)
+                if args.resume_marker == "on":
+                    ckpt.write_resume_marker(
+                        save_step,
+                        reason=f"preempted (signal "
+                               f"{session.preempt_signum})")
+            preempted = True
+            print(f"[train] preemption drain complete at step {save_step}"
+                  " — exiting cleanly for restart", flush=True)
+        elif ckpt:
             ckpt.save(args.steps - 1, state, blocking=True,
                       extra_meta=ckpt_extra,
                       known_good=(last_act == HealthSentinel.OK))
 
-        wall = time.time() - t_start
+        wall = time.time() - session.t_start
         summary = {
             "arch": cfg.name, "optimizer": args.optimizer, "rank": rank,
             "steps": args.steps, "final_loss": history[-1]["loss"]
@@ -632,13 +1003,18 @@ def train(argv=None) -> dict:
             "rollbacks": sentinel.rollbacks,
             "skipped_batches": skipped_batches,
             "sentinel_events": sentinel.events,
+            "preempted": preempted,
+            "failovers": session.failovers,
+            "failover_events": session.failover_events,
+            "mesh_devices": int(ctx.mesh.devices.size),
             "history": history,
         }
         if args.metrics_out:
             Path(args.metrics_out).parent.mkdir(parents=True, exist_ok=True)
             Path(args.metrics_out).write_text(json.dumps(summary, indent=2))
-        print(f"[train] done: {args.steps} steps in {wall:.1f}s, "
-              f"final loss {summary['final_loss']}", flush=True)
+        if not preempted:
+            print(f"[train] done: {args.steps} steps in {wall:.1f}s, "
+                  f"final loss {summary['final_loss']}", flush=True)
         return summary
 
 

@@ -515,3 +515,55 @@ class TestKnownGood:
         mgr.save(6, _tree(seed=6), blocking=True)
         assert 1 not in mgr.steps()
         assert mgr.known_good_steps() == [5]
+
+
+class TestBoundedWait:
+    """wait(timeout=): a hung filesystem must not deadlock shutdown, the
+    preemption drain, or a failover (all three call the bounded form)."""
+
+    def test_hung_save_trips_timeout_then_rejoins(self, tmp_path):
+        mgr = CheckpointManager(tmp_path)
+        mgr.hang_next_save(0.5)
+        mgr.save(1, _tree())
+        with pytest.raises(TimeoutError, match="presumed hung"):
+            mgr.wait(timeout=0.05)
+        # TimeoutError is an OSError — the same failure family the
+        # bounded-retry save path reports, so callers absorb both with
+        # one except clause
+        assert isinstance(TimeoutError("x"), OSError)
+        mgr.wait()             # unbounded: re-joins the abandoned worker
+        assert mgr.steps() == [1]
+
+    def test_fast_save_within_timeout_is_clean(self, tmp_path):
+        mgr = CheckpointManager(tmp_path)
+        mgr.save(1, _tree())
+        mgr.wait(timeout=30.0)
+        assert mgr.steps() == [1]
+
+    def test_timeout_does_not_mask_save_failure(self, tmp_path):
+        mgr = CheckpointManager(tmp_path, retries=0)
+        mgr.fail_next_saves(1)
+        mgr.save(1, _tree())
+        with pytest.raises(OSError, match="injected"):
+            mgr.wait(timeout=30.0)
+
+
+class TestResumeMarker:
+    def test_round_trip_and_consume_once(self, tmp_path):
+        mgr = CheckpointManager(tmp_path)
+        assert mgr.consume_resume_marker() is None
+        mgr.write_resume_marker(17, reason="preempted (signal 15)")
+        assert (tmp_path / CheckpointManager.RESUME_MARKER).exists()
+        rec = mgr.consume_resume_marker()
+        assert rec["step"] == 17
+        assert rec["reason"] == "preempted (signal 15)"
+        # consumed exactly once: the marker file is gone and a second
+        # restart sees a plain elastic resume
+        assert not (tmp_path / CheckpointManager.RESUME_MARKER).exists()
+        assert mgr.consume_resume_marker() is None
+
+    def test_corrupt_marker_still_consumed(self, tmp_path):
+        mgr = CheckpointManager(tmp_path)
+        (tmp_path / CheckpointManager.RESUME_MARKER).write_text("not json")
+        assert mgr.consume_resume_marker() == {}
+        assert not (tmp_path / CheckpointManager.RESUME_MARKER).exists()

@@ -1,0 +1,85 @@
+"""AdmissionQueue: graceful degradation of the serving driver.
+
+Pure host-side policy (no model, no jax): bounded admission sheds at
+submit, queue deadlines expire at wave take, survivors leave FIFO — all
+driven with explicit ``now`` timestamps so the tests are clock-free.
+"""
+
+import numpy as np
+
+from repro.launch.serve import AdmissionQueue, Request
+
+
+def _req(rid, t=0.0):
+    return Request(rid=rid, prompt=np.zeros(4, np.int32), max_new=4,
+                   t_submit=t)
+
+
+class TestAdmission:
+    def test_shed_beyond_max_queue(self):
+        q = AdmissionQueue(max_queue=2)
+        assert q.submit(_req(0, t=1.0))
+        assert q.submit(_req(1, t=1.0))
+        assert not q.submit(_req(2, t=1.0))
+        assert len(q) == 2
+        assert [r.rid for r in q.shed] == [2]
+        assert q.shed[0].status == "shed"
+        assert all(r.status == "queued" for r in q.pending)
+
+    def test_unbounded_by_default(self):
+        q = AdmissionQueue()
+        for i in range(100):
+            assert q.submit(_req(i, t=1.0))
+        assert len(q) == 100 and not q.shed
+
+    def test_submit_stamps_missing_t_submit(self):
+        q = AdmissionQueue()
+        r = _req(0, t=0.0)
+        q.submit(r, now=42.0)
+        assert r.t_submit == 42.0
+
+
+class TestDeadline:
+    # t_submit=0.0 means "unset" to submit(), so synthetic clocks start
+    # at t=1.0
+    def test_overdue_requests_expire_at_wave_take(self):
+        q = AdmissionQueue(deadline_s=5.0)
+        q.submit(_req(0, t=1.0))
+        q.submit(_req(1, t=4.0))
+        wave = q.take_wave(4, now=7.0)     # rid 0 waited 6s > 5s
+        assert [r.rid for r in wave] == [1]
+        assert [r.rid for r in q.expired] == [0]
+        assert q.expired[0].status == "expired"
+
+    def test_exact_deadline_still_served(self):
+        q = AdmissionQueue(deadline_s=5.0)
+        q.submit(_req(0, t=1.0))
+        assert [r.rid for r in q.take_wave(1, now=6.0)] == [0]
+
+    def test_no_deadline_never_expires(self):
+        q = AdmissionQueue()
+        q.submit(_req(0, t=1.0))
+        assert [r.rid for r in q.take_wave(1, now=1e9)] == [0]
+        assert not q.expired
+
+
+class TestWave:
+    def test_fifo_order_and_batch_bound(self):
+        q = AdmissionQueue()
+        for i in range(5):
+            q.submit(_req(i, t=1.0))
+        assert [r.rid for r in q.take_wave(2, now=1.0)] == [0, 1]
+        assert [r.rid for r in q.take_wave(2, now=1.0)] == [2, 3]
+        assert [r.rid for r in q.take_wave(2, now=1.0)] == [4]
+        assert not q.take_wave(2, now=1.0)
+
+    def test_shed_and_expired_compose(self):
+        q = AdmissionQueue(max_queue=3, deadline_s=2.0)
+        q.submit(_req(0, t=1.0))
+        q.submit(_req(1, t=1.5))
+        q.submit(_req(2, t=4.0))
+        assert not q.submit(_req(3, t=4.0))        # full -> shed
+        wave = q.take_wave(4, now=4.0)             # 0, 1 overdue
+        assert [r.rid for r in wave] == [2]
+        assert {r.rid for r in q.expired} == {0, 1}
+        assert {r.rid for r in q.shed} == {3}

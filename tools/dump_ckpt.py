@@ -72,6 +72,14 @@ def main(argv=None) -> int:
                     help="print the full per-leaf manifest table")
     ap.add_argument("--verify", action="store_true",
                     help="recompute every leaf crc32 against data.bin")
+    ap.add_argument("--target-mesh", action="append", type=int,
+                    default=None, metavar="N",
+                    help="elastic-restore admissibility report: for each "
+                         "given device count (repeatable), print which "
+                         "StepProgram regimes every low-rank leaf can "
+                         "restore onto — the offline answer to 'can I "
+                         "resume this checkpoint on N devices, and with "
+                         "which sharded hot paths?'")
     args = ap.parse_args(argv)
 
     root = Path(args.root)
@@ -125,6 +133,24 @@ def main(argv=None) -> int:
     else:
         print("\n  no embedded state programs (pre-elastic checkpoint: "
               "restores strict-shape only)")
+
+    if args.target_mesh:
+        if not programs:
+            print("\n  --target-mesh: no embedded state programs — "
+                  "elastic restore (and this report) needs them")
+            return 1
+        from repro.checkpoint.transpose import restore_targets
+        for g in args.target_mesh:
+            print(f"\n  restore onto {g} device(s) — admissible regimes "
+                  "per leaf (restore itself is always admissible: layout "
+                  "changes are identity; this lists the sharded hot "
+                  "paths the gates admit):")
+            for rec in programs:
+                rep = restore_targets(rec, g)
+                line = f"    {rec['path']:40s} {', '.join(rep['regimes'])}"
+                if rep["notes"]:
+                    line += f"   [{'; '.join(rep['notes'])}]"
+                print(line)
 
     if args.leaves:
         print("\n  leaves:")
