@@ -322,6 +322,45 @@ def hotpath_table(shapes=((1024, 2736, 256), (2048, 5461, 512),
     return "\n".join(lines)
 
 
+def decode_table(batches=(8, 32, 128), contexts=(256, 1024, 4096),
+                 block_sizes=(16, 32), *, max_len: int = 4096,
+                 n_q: int = 32, n_kv: int = 8, hd: int = 128) -> str:
+    """Serving decode attention at this roofline's bandwidth: per
+    (batch, context, block-size) cell, modeled HBM bytes of the dense
+    static cache (reads the whole max_len buffer every step) vs the
+    paged block pool (reads only the blocks each sequence owns), with
+    the arithmetic intensity of the step.
+
+    AI ~= the GQA group factor (flops / KV bytes ~ Hq/Hkv) — decode is
+    memory-bound at every cell, two orders under the ~240 flop/byte
+    compute:bandwidth knee, which is WHY cutting cache bytes by
+    context/max_len converts one-for-one into step time (the paged
+    engine's perf claim; kernel in repro/kernels/paged_attention.py)."""
+    from repro.kernels.traffic import (decode_attention_flops,
+                                       decode_dense_bytes,
+                                       decode_paged_bytes)
+
+    lines = [
+        f"\n### Paged vs dense decode-attention traffic (max_len "
+        f"{max_len}, Hq {n_q}, Hkv {n_kv}, hd {hd}, bf16 KV)\n",
+        "| batch | context | block | dense MB | paged MB | paged/dense | "
+        "AI flop/B | dense us @HBM | paged us @HBM |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for B in batches:
+        dense = decode_dense_bytes(B, max_len, n_kv, hd)
+        for ctx in contexts:
+            flops = decode_attention_flops(B, ctx, n_q, hd)
+            for bs in block_sizes:
+                paged = decode_paged_bytes(B, ctx, bs, n_kv, hd)
+                lines.append(
+                    f"| {B} | {ctx} | {bs} | {dense/1e6:.2f} | "
+                    f"{paged/1e6:.2f} | {paged/dense:.3f} | "
+                    f"{flops/paged:.2f} | {dense/HBM_BW*1e6:.1f} | "
+                    f"{paged/HBM_BW*1e6:.1f} |")
+    return "\n".join(lines)
+
+
 def main() -> None:
     import argparse
     ap = argparse.ArgumentParser()
@@ -332,13 +371,21 @@ def main() -> None:
     ap.add_argument("--hotpath", action="store_true",
                     help="print the optimizer hot-path HBM-traffic model "
                          "(no dry-run artifacts needed)")
+    ap.add_argument("--decode", action="store_true",
+                    help="print the paged-vs-dense decode cache-traffic "
+                         "model (no dry-run artifacts needed)")
     args = ap.parse_args()
 
-    if args.hotpath:
-        section = hotpath_table()
-        print(section)
+    if args.hotpath or args.decode:
+        sections = []
+        if args.hotpath:
+            sections.append(hotpath_table())
+        if args.decode:
+            sections.append(decode_table())
+        out = "\n".join(sections)
+        print(out)
         if args.out:
-            Path(args.out).write_text(section)
+            Path(args.out).write_text(out)
         return
 
     sections = []

@@ -1,0 +1,301 @@
+"""Serving load benchmark: the paged engine under Poisson arrivals,
+deterministic overload, and the chunked-prefill TTFT bound.
+
+    PYTHONPATH=src python benchmarks/serve_bench.py --json
+
+Three sections, written to ``BENCH_serve.json`` (committed, validated by
+``tools/check_bench.py`` in CI):
+
+``load``
+    Wall-clock open-loop run: requests arrive on a seeded Poisson
+    process while the engine ticks.  Records tokens/s, TTFT and
+    end-to-end latency (mean/p50/p99), decode-call and prefill-chunk
+    counts, and KV-pool occupancy.  Jits are pre-warmed on identical
+    shapes so compile time never pollutes request 0's TTFT.
+
+``overload``
+    Deterministic synthetic clock (no timing flake): a burst over the
+    queue bound, a request that can never fit the KV pool, a pool that
+    holds one sequence at a time, and a queue deadline.  Proves the full
+    degradation taxonomy fires — shed at submit, OOM-shed at admission,
+    deferred-then-expired under sustained pressure — and that the served
+    remainder still completes.
+
+``ttft_bound``
+    A short request is mid-decode when a long prompt arrives.  With
+    blocking prefill (whole prompt in one call) the short request's
+    worst inter-token gap spans the entire long prefill; with chunked
+    prefill each tick runs one chunk plus a decode wave, so the gap is
+    bounded by one chunk.  Records both max gaps; the chunked one must
+    be smaller (the ``bounded`` flag CI checks).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _reset(engine, queue) -> None:
+    """Clear accounting after a warm-up run; jitted programs (and their
+    compiled executables) stay cached on the engine."""
+    engine.stats = {"decode_calls": 0, "prefill_chunks": 0,
+                    "oom_shed": 0, "oom_deferrals": 0, "occupancy": []}
+    engine.done = []
+    engine.token_stamps = {}
+    queue.pending = []
+    queue.shed = []
+    queue.expired = []
+
+
+def _prompts(rng, n, length, vocab):
+    return rng.integers(0, vocab, size=(n, length)).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# load: Poisson arrivals, wall clock
+# ---------------------------------------------------------------------------
+
+
+def bench_load(cfg, bundle, params, *, requests=12, prompt_len=32,
+               gen=16, batch=4, block_size=16, prefill_chunk=8,
+               rate_rps=10.0, seed=0) -> dict:
+    from repro.launch.serve import AdmissionQueue, Request
+    from repro.serve.engine import PagedEngine
+
+    rng = np.random.default_rng(seed)
+    max_context = prompt_len + gen
+    pool_blocks = 1 + batch * -(-max_context // block_size)
+    queue = AdmissionQueue()
+    engine = PagedEngine(bundle, params, queue, batch=batch,
+                         block_size=block_size, pool_blocks=pool_blocks,
+                         max_context=max_context,
+                         prefill_chunk=prefill_chunk)
+
+    # warm the prefill-chunk and decode-wave programs on the real shapes
+    warm = _prompts(rng, 2, prompt_len, cfg.vocab_size)
+    for i in range(2):
+        queue.submit(Request(rid=1000 + i, prompt=warm[i], max_new=gen))
+    engine.run()
+    _reset(engine, queue)
+
+    prompts = _prompts(rng, requests, prompt_len, cfg.vocab_size)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_rps, size=requests))
+    reqs = [Request(rid=i, prompt=prompts[i], max_new=gen)
+            for i in range(requests)]
+
+    t0 = time.time()
+    nxt = 0
+    while nxt < requests or len(queue) or engine.seqs:
+        now = time.time()
+        while nxt < requests and now - t0 >= arrivals[nxt]:
+            queue.submit(reqs[nxt], now=now)
+            nxt += 1
+        if not engine.step() and nxt < requests:
+            time.sleep(max(0.0, arrivals[nxt] - (time.time() - t0)))
+    wall = time.time() - t0
+
+    done = engine.done
+    ttft = np.asarray([r.t_first - r.t_submit for r in done])
+    lat = np.asarray([r.t_done - r.t_submit for r in done])
+    tokens = sum(len(r.out_tokens) for r in done)
+    occ = engine.stats["occupancy"]
+    out = {
+        "requests": requests,
+        "done": len(done),
+        "shed": len(queue.shed),
+        "expired": len(queue.expired),
+        "rate_rps": rate_rps,
+        "tokens": tokens,
+        "wall_s": wall,
+        "tok_per_s": tokens / max(wall, 1e-9),
+        "ttft_mean_s": float(ttft.mean()),
+        "ttft_p50_s": float(np.percentile(ttft, 50)),
+        "ttft_p99_s": float(np.percentile(ttft, 99)),
+        "latency_p50_s": float(np.percentile(lat, 50)),
+        "latency_p99_s": float(np.percentile(lat, 99)),
+        "decode_calls": engine.stats["decode_calls"],
+        "prefill_chunks": engine.stats["prefill_chunks"],
+        "kv_occupancy_mean": float(np.mean(occ)) if occ else 0.0,
+        "kv_occupancy_peak": float(np.max(occ)) if occ else 0.0,
+    }
+    print(f"[serve_bench:load] {out['done']}/{requests} done, "
+          f"{out['tok_per_s']:.1f} tok/s, TTFT p50 {out['ttft_p50_s']:.3f}s "
+          f"p99 {out['ttft_p99_s']:.3f}s, occupancy peak "
+          f"{out['kv_occupancy_peak']:.2f}", flush=True)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# overload: deterministic synthetic clock, full degradation taxonomy
+# ---------------------------------------------------------------------------
+
+
+def bench_overload(cfg, bundle, params, *, seed=0) -> dict:
+    from repro.launch.serve import AdmissionQueue, Request
+    from repro.serve.engine import PagedEngine
+
+    rng = np.random.default_rng(seed)
+    prompt_len, gen = 16, 8
+    max_context = prompt_len + gen
+    # pool holds exactly one sequence -> every co-arrival defers
+    pool_blocks = 1 + -(-max_context // 8)
+    queue = AdmissionQueue(max_queue=6, deadline_s=5.0)
+    engine = PagedEngine(bundle, params, queue, batch=2, block_size=8,
+                         pool_blocks=pool_blocks, max_context=max_context)
+
+    # warm-up outside the synthetic clock
+    queue.submit(Request(rid=1000,
+                         prompt=_prompts(rng, 1, prompt_len,
+                                         cfg.vocab_size)[0],
+                         max_new=gen))
+    engine.run()
+    _reset(engine, queue)
+
+    # one request that can NEVER fit (prompt alone over max_context),
+    # then a burst of ten ordinary ones over the queue bound of six
+    prompts = _prompts(rng, 10, prompt_len, cfg.vocab_size)
+    giant = _prompts(rng, 1, max_context + 56, cfg.vocab_size)[0]
+    queue.submit(Request(rid=99, prompt=giant, max_new=gen), now=0.0)
+    for i in range(10):
+        queue.submit(Request(rid=i, prompt=prompts[i], max_new=gen),
+                     now=0.0)
+    submitted = 11
+
+    now = 0.0
+    while len(queue) or engine.seqs:
+        engine.step(now=now)
+        now += 2.0
+        if now > 400.0:
+            raise RuntimeError("overload bench wedged: engine not draining")
+
+    out = {
+        "requests": submitted,
+        "done": len(engine.done),
+        "shed": len(queue.shed),
+        "expired": len(queue.expired),
+        "oom_shed": engine.stats["oom_shed"],
+        "oom_deferrals": engine.stats["oom_deferrals"],
+        "deadline_s": queue.deadline_s,
+        "max_queue": queue.max_queue,
+        "pool_blocks": pool_blocks,
+    }
+    print(f"[serve_bench:overload] {out['done']} done, {out['shed']} shed "
+          f"(incl. {out['oom_shed']} KV OOM), {out['expired']} expired, "
+          f"{out['oom_deferrals']} deferrals", flush=True)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# ttft_bound: chunked prefill bounds the inter-token gap
+# ---------------------------------------------------------------------------
+
+
+def _max_gap_run(cfg, bundle, params, *, prefill_chunk, seed) -> float:
+    """Max inter-token gap (s) of a short in-flight request while a
+    192-token prompt prefills, under the given chunking."""
+    from repro.launch.serve import AdmissionQueue, Request
+    from repro.serve.engine import PagedEngine
+
+    rng = np.random.default_rng(seed)
+    short_len, long_len, gen = 16, 192, 24
+    block_size = 16
+    max_context = long_len + gen
+    pool_blocks = 1 + 2 * -(-max_context // block_size)
+    queue = AdmissionQueue()
+    engine = PagedEngine(bundle, params, queue, batch=2,
+                         block_size=block_size, pool_blocks=pool_blocks,
+                         max_context=max_context,
+                         prefill_chunk=prefill_chunk)
+
+    def mk(rid, length, max_new):
+        return Request(rid=rid, prompt=_prompts(rng, 1, length,
+                                                cfg.vocab_size)[0],
+                       max_new=max_new)
+
+    # warm-up compiles both prefill shapes and the decode wave
+    queue.submit(mk(1000, short_len, 4))
+    queue.submit(mk(1001, long_len, 2))
+    engine.run()
+    _reset(engine, queue)
+
+    queue.submit(mk(0, short_len, gen))
+    while len(queue.pending) or not (
+            engine.seqs and len(engine.seqs[0].req.out_tokens) >= 2):
+        engine.step()
+    queue.submit(mk(1, long_len, 2))        # lands mid-decode of rid 0
+    while len(queue) or engine.seqs:
+        engine.step()
+    return float(np.max(np.diff(engine.token_stamps[0])))
+
+
+def bench_ttft_bound(cfg, bundle, params, *, seed=0) -> dict:
+    chunk = 16
+    chunked = _max_gap_run(cfg, bundle, params, prefill_chunk=chunk,
+                           seed=seed)
+    blocking = _max_gap_run(cfg, bundle, params, prefill_chunk=0,
+                            seed=seed)
+    out = {
+        "prefill_chunk": chunk,
+        "long_prompt": 192,
+        "chunked_max_gap_s": chunked,
+        "blocking_max_gap_s": blocking,
+        "bounded": bool(chunked < blocking),
+    }
+    print(f"[serve_bench:ttft_bound] max inter-token gap: chunked "
+          f"{chunked * 1e3:.1f}ms vs blocking {blocking * 1e3:.1f}ms "
+          f"(bounded={out['bounded']})", flush=True)
+    return out
+
+
+# ---------------------------------------------------------------------------
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="llama-100m")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--rate-rps", type=float, default=10.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_serve.json at the repo root")
+    ap.add_argument("--out", default=str(REPO / "BENCH_serve.json"))
+    args = ap.parse_args()
+
+    import jax
+    from repro.configs.registry import get_config
+    from repro.distributed.context import mesh_context
+    from repro.launch.mesh import smoke_context
+    from repro.models.api import build_model
+
+    with mesh_context(smoke_context()):
+        cfg = get_config(args.arch, smoke=True)
+        bundle = build_model(cfg)
+        params = bundle.init(jax.random.PRNGKey(args.seed))
+
+        payload = {
+            "config": {"arch": args.arch, "smoke": True,
+                       "backend": jax.default_backend(),
+                       "seed": args.seed},
+            "load": bench_load(cfg, bundle, params,
+                               requests=args.requests,
+                               rate_rps=args.rate_rps, seed=args.seed),
+            "overload": bench_overload(cfg, bundle, params,
+                                       seed=args.seed),
+            "ttft_bound": bench_ttft_bound(cfg, bundle, params,
+                                           seed=args.seed),
+        }
+
+    if args.json:
+        Path(args.out).write_text(json.dumps(payload, indent=2) + "\n")
+        print(f"[serve_bench] wrote {args.out}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -241,3 +241,33 @@ def fused_update(G: Array | None, S: Array, Gt: Array | None, Gto: Array,
                                   out_dtype=out_dtype, param=param,
                                   wd_coef=wd_coef,
                                   interpret=(mode == "interpret"))
+
+
+# --- serving: paged-attention decode --------------------------------------
+
+
+def paged_attention(q: Array, k_pool: Array, v_pool: Array,
+                    block_tables: Array, lengths: Array) -> Array:
+    """Block-table decode attention -> (B, Hq, hd).  Kernel:
+    paged_attention.paged_attention; oracle/fallback:
+    ref.paged_attention_ref.
+
+    Compiled-path gate: hd % 128 == 0 (MXU lane alignment) and
+    block_size % 8 == 0 (sublane tiling of the gathered K/V block);
+    anything else — including every smoke config — runs the oracle, or
+    the kernel in interpret mode when REPRO_FORCE_KERNELS=1 so CI
+    exercises the real schedule on any shape.
+    """
+    from repro.kernels import paged_attention as paged
+
+    mode = _mode()
+    if mode == "ref":
+        return ref.paged_attention_ref(q, k_pool, v_pool, block_tables,
+                                       lengths)
+    hd = q.shape[-1]
+    bs = k_pool.shape[1]
+    if mode == "compiled" and (hd % 128 or bs % 8):
+        return ref.paged_attention_ref(q, k_pool, v_pool, block_tables,
+                                       lengths)
+    return paged.paged_attention(q, k_pool, v_pool, block_tables, lengths,
+                                 interpret=(mode == "interpret"))

@@ -166,3 +166,41 @@ def adam_lowrank_norms_ref(Gt: Array, M: Array, V: Array, step: Array,
     Gt32 = Gt.astype(jnp.float32)
     return M1, V1, Gto, jnp.sum(Gt32 * Gt32, axis=0), jnp.sum(Gto * Gto,
                                                               axis=0)
+
+
+def paged_attention_ref(q: Array, k_pool: Array, v_pool: Array,
+                        block_tables: Array, lengths: Array) -> Array:
+    """Paged-attention decode oracle: gather K/V through the block table
+    and run a masked single-token softmax.
+
+    q: (B, Hq, hd) — one query token per sequence; k_pool/v_pool:
+    (nb, bs, Hkv, hd) global block pools; block_tables: (B, W) int32
+    (null block 0 pads unused entries); lengths: (B,) int32 — number of
+    valid gathered positions per sequence (position i of the gathered
+    sequence lives in table word i // bs at offset i % bs).
+
+    -> (B, Hq, hd) in q's dtype.  The softmax is the explicit masked
+    form (not jax.nn.softmax) so a fully-masked lane (lengths[b] == 0)
+    returns exactly zero instead of a uniform average over garbage.
+    """
+    B, Hq, hd = q.shape
+    bs, Hkv = k_pool.shape[1], k_pool.shape[2]
+    G = Hq // Hkv
+    q = q.reshape(B, Hkv, G, hd)
+    W = block_tables.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    # (B, W, bs, Hkv, hd) -> (B, W*bs, Hkv, hd)
+    kg = k_pool[block_tables].reshape(B, W * bs, Hkv, hd)
+    vg = v_pool[block_tables].reshape(B, W * bs, Hkv, hd)
+    logits = jnp.einsum("bkgh,btkh->bkgt", q.astype(jnp.float32),
+                        kg.astype(jnp.float32),
+                        preferred_element_type=jnp.float32) * scale
+    valid = jnp.arange(W * bs)[None, :] < lengths[:, None]        # (B, T)
+    logits = jnp.where(valid[:, None, None, :], logits, -jnp.inf)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)   # all-masked lane: exp(-inf-0)=0
+    p = jnp.exp(logits - m)
+    num = jnp.einsum("bkgt,btkh->bkgh", p, vg.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    den = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    return (num / den).reshape(B, Hq, hd).astype(q.dtype)

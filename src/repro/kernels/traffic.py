@@ -779,3 +779,33 @@ def sharded_traffic_ratio(m: int, n: int, r: int, shards: int, *,
     unf = unf_fn(m, n, r, shards, grad_bytes=grad_bytes,
                  param_bytes=param_bytes)
     return fus.total / unf.total
+
+
+# --- serving: decode-attention cache traffic (dense vs paged) -------------
+
+
+def decode_dense_bytes(batch: int, max_len: int, n_kv: int, hd: int, *,
+                       kv_bytes: int = 2) -> int:
+    """HBM bytes one dense-cache decode step streams through attention:
+    the full (B, max_len) K and V buffers, regardless of how many tokens
+    each sequence actually holds (the static buffer is sized for the
+    worst case and read end to end every step)."""
+    return 2 * batch * max_len * n_kv * hd * kv_bytes
+
+
+def decode_paged_bytes(batch: int, context: int, block_size: int,
+                       n_kv: int, hd: int, *, kv_bytes: int = 2) -> int:
+    """HBM bytes one paged decode step streams: only the blocks each
+    sequence OWNS (ceil(context / bs) of them, last one partially
+    garbage) plus the int32 table words that address them."""
+    blocks = -(-context // block_size)
+    kv = 2 * batch * blocks * block_size * n_kv * hd * kv_bytes
+    table = batch * blocks * 4
+    return kv + table
+
+
+def decode_attention_flops(batch: int, context: int, n_q: int,
+                           hd: int) -> int:
+    """MAC-counted flops of one decode step's attention: QK^T plus PV,
+    2 * (B * Hq * ctx * hd) each."""
+    return 4 * batch * n_q * context * hd

@@ -1,22 +1,29 @@
-"""Batched serving driver: prefill + decode loop with request batching.
+"""Serving driver: paged continuous batching (default) or dense waves.
 
     PYTHONPATH=src python -m repro.launch.serve \
         --arch llama-100m --smoke --requests 8 --prompt-len 32 --gen 16
 
-Serving layout: a static decode batch of ``--batch`` slots; requests are
-drained from a queue into free slots (continuous-batching-lite: a slot is
-refilled as soon as its sequence finishes — slot refill re-prefills into
-the batch gap).  Prefill and decode are separately jitted; decode is the
-steady-state program (one token across all slots per call).  Greedy
-sampling by default, temperature optional.
+Two engines behind one driver:
 
-Graceful degradation (:class:`AdmissionQueue`): when the decode batch is
-saturated, admission beyond ``--max-queue`` pending requests is SHED at
-submit (status ``"shed"``), and a queued request that waits past
-``--deadline-s`` is EXPIRED at the next wave take (status ``"expired"``)
-— explicit markers instead of unbounded waiting, the serving-robustness
-floor under overload.  Both knobs default off (0 = unbounded / no
-deadline).
+``--engine paged`` (default where the config supports it) runs
+:class:`repro.serve.engine.PagedEngine`: a global pool of fixed-size KV
+blocks, per-request block tables, chunked prefill interleaved with
+decode waves, and decode batches assembled per wave from live sequences
+— true continuous batching.  KV exhaustion degrades through the
+admission queue (shed / deferred-then-expired) instead of crashing.
+
+``--engine dense`` is the static-batch baseline: one prefill per wave of
+up to ``--batch`` requests into per-slot dense caches, then decode until
+every sequence in the wave has finished.  Slots without a live sequence
+are masked out of token emission and the wave ends as soon as the
+longest request is done, so heterogeneous ``max_new`` no longer decodes
+dead slots to the global maximum.
+
+Graceful degradation (:class:`AdmissionQueue`): admission beyond
+``--max-queue`` pending requests is SHED at submit, a request that waits
+past ``--deadline-s`` is EXPIRED at the next wave take, and the paged
+engine OOM-sheds requests that can never fit its KV pool.  All three
+leave explicit status markers instead of unbounded waiting.
 """
 
 from __future__ import annotations
@@ -34,6 +41,9 @@ from repro.data.pipeline import DataConfig, SyntheticLMDataset
 from repro.distributed.context import mesh_context
 from repro.launch.mesh import make_context, smoke_context
 from repro.models.api import build_model
+from repro.models.transformer import paged_supported
+from repro.serve.engine import PagedEngine
+from repro.serve.sampling import sample_tokens as _sample
 
 
 @dataclass
@@ -59,6 +69,12 @@ class AdmissionQueue:
     limit.  Rejected requests are kept (with their status marker) on the
     ``shed`` / ``expired`` lists so the caller can report them instead of
     leaving clients waiting forever.
+
+    The paged engine adds two verbs for its KV-pool OOM policy:
+    ``shed_now`` (request can never fit — reject outright) and ``defer``
+    (request doesn't fit *yet* — requeue at the FRONT with its original
+    ``t_submit``, so under sustained pressure the normal deadline
+    machinery expires it rather than the engine spinning on it forever).
     """
 
     def __init__(self, max_queue: int = 0, deadline_s: float = 0.0):
@@ -83,6 +99,16 @@ class AdmissionQueue:
         self.pending.append(req)
         return True
 
+    def shed_now(self, req: Request) -> None:
+        """Reject a request the engine cannot ever serve (KV OOM-shed)."""
+        req.status = "shed"
+        self.shed.append(req)
+
+    def defer(self, req: Request) -> None:
+        """Requeue at the front, keeping t_submit (deadline still ticking)."""
+        req.status = "queued"
+        self.pending.insert(0, req)
+
     def _expire(self, now: float) -> None:
         if not self.deadline_s:
             return
@@ -104,12 +130,133 @@ class AdmissionQueue:
         return wave
 
 
+# ---------------------------------------------------------------------------
+# Dense baseline (static waves, per-slot dense caches)
+# ---------------------------------------------------------------------------
+
+
+def run_dense(cfg, bundle, params, queue: AdmissionQueue, *,
+              batch: int, prompt_len: int, temperature: float = 0.0,
+              seed: int = 0) -> dict:
+    """Wave-at-a-time serving against dense per-slot KV caches.
+
+    All requests in a wave share one prefill (prompts must share
+    ``prompt_len``); the wave then decodes until its longest request
+    finishes — not to a fixed global step count — and slots whose
+    request is already done (or that were batch padding) emit nothing.
+    """
+    max_new_cap = max((r.max_new for r in queue.pending), default=1)
+    max_len = prompt_len + max_new_cap + 8
+    prefill = jax.jit(lambda p, b: bundle.prefill(p, b, max_len))
+    decode = jax.jit(bundle.decode_step, donate_argnums=(1,))
+    key = jax.random.PRNGKey(seed)
+    done: list[Request] = []
+    B = batch
+    t0 = time.time()
+    n_decode_calls = 0
+    n_samples = 0
+
+    while len(queue):
+        wave = queue.take_wave(B)
+        if not wave:
+            break
+        # pad free slots with zero rows, not repeats of slot 0
+        toks = np.zeros((B, prompt_len), np.int32)
+        for i, r in enumerate(wave):
+            toks[i] = r.prompt
+        batch_in = {"tokens": jnp.asarray(toks)}
+        if cfg.vision_tokens:
+            batch_in["vision_embeds"] = jnp.zeros(
+                (B, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+        if cfg.mrope:
+            pos = jnp.broadcast_to(jnp.arange(prompt_len),
+                                   (B, prompt_len)).astype(jnp.int32)
+            batch_in["mrope_positions"] = jnp.stack([pos] * 3, axis=1)
+        if cfg.family == "encdec":
+            batch_in["frames"] = jnp.zeros(
+                (B, prompt_len, cfg.d_model), jnp.bfloat16)
+        logits, cache = prefill(params, batch_in)
+        now = time.time()
+        for r in wave:
+            r.t_first = now
+        tok = _sample(logits, jax.random.fold_in(key, n_samples), temperature)
+        n_samples += 1
+        for i, r in enumerate(wave):
+            r.out_tokens.append(int(tok[i]))
+        # live-mask the decode loop: stop as soon as every request in the
+        # wave has its tokens instead of running to a fixed step count
+        while any(len(r.out_tokens) < r.max_new for r in wave):
+            logits, cache = decode(params, cache, tok)
+            n_decode_calls += 1
+            tok = _sample(logits, jax.random.fold_in(key, n_samples),
+                          temperature)
+            n_samples += 1
+            for i, r in enumerate(wave):
+                if len(r.out_tokens) < r.max_new:
+                    r.out_tokens.append(int(tok[i]))
+        now = time.time()
+        for r in wave:
+            r.t_done = now
+            r.status = "done"
+            done.append(r)
+
+    wall = time.time() - t0
+    return _summary("dense", done, queue, wall, n_decode_calls,
+                    temperature)
+
+
+# ---------------------------------------------------------------------------
+# Paged engine (block-table KV, chunked prefill, continuous batching)
+# ---------------------------------------------------------------------------
+
+
+def run_paged(cfg, bundle, params, queue: AdmissionQueue, *,
+              batch: int, block_size: int, pool_blocks: int,
+              max_context: int, prefill_chunk: int,
+              temperature: float = 0.0, seed: int = 0) -> dict:
+    engine = PagedEngine(bundle, params, queue, batch=batch,
+                         block_size=block_size, pool_blocks=pool_blocks,
+                         max_context=max_context,
+                         prefill_chunk=prefill_chunk,
+                         temperature=temperature, seed=seed)
+    t0 = time.time()
+    stats = engine.run()
+    wall = time.time() - t0
+    out = _summary("paged", engine.done, queue, wall,
+                   stats["decode_calls"], temperature)
+    out["kv"] = {k: stats[k] for k in
+                 ("prefill_chunks", "oom_shed", "oom_deferrals",
+                  "kv_occupancy_mean", "kv_occupancy_peak")}
+    return out
+
+
+def _summary(engine: str, done, queue: AdmissionQueue, wall: float,
+             decode_calls: int, temperature: float) -> dict:
+    total_new = sum(len(r.out_tokens) for r in done)
+    ttft = (np.mean([r.t_first - r.t_submit for r in done])
+            if done else 0.0)
+    print(f"[serve:{engine}] {len(done)} requests, {total_new} tokens in "
+          f"{wall:.2f}s  ({total_new / max(wall, 1e-9):.1f} tok/s, "
+          f"mean TTFT {ttft:.2f}s, {decode_calls} decode calls, "
+          f"temperature {temperature:g})", flush=True)
+    if queue.shed or queue.expired:
+        print(f"[serve:{engine}] degraded: {len(queue.shed)} shed, "
+              f"{len(queue.expired)} expired", flush=True)
+    return {"engine": engine, "requests": len(done), "tokens": total_new,
+            "wall_s": wall, "tok_per_s": total_new / max(wall, 1e-9),
+            "decode_calls": decode_calls, "temperature": temperature,
+            "outputs": {r.rid: list(r.out_tokens) for r in done},
+            "shed": [r.rid for r in queue.shed],
+            "expired": [r.rid for r in queue.expired]}
+
+
 def serve(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="llama-100m")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--mesh", default="smoke", choices=["smoke", "prod",
                                                         "multipod"])
+    ap.add_argument("--engine", default="paged", choices=["paged", "dense"])
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
@@ -122,21 +269,30 @@ def serve(argv=None):
     ap.add_argument("--deadline-s", type=float, default=0.0,
                     help="expire requests that wait in the queue longer "
                          "than this before their wave starts (0 = none)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged engine: tokens per KV block")
+    ap.add_argument("--pool-blocks", type=int, default=0,
+                    help="paged engine: total pool blocks incl. the null "
+                         "block (0 = sized for --batch full sequences)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="paged engine: prompt tokens prefilled per "
+                         "engine tick (0 = whole prompt at once)")
     args = ap.parse_args(argv)
 
     ctx = (smoke_context() if args.mesh == "smoke"
            else make_context(multi_pod=args.mesh == "multipod"))
     with mesh_context(ctx):
         cfg = get_config(args.arch, smoke=args.smoke)
+        engine = args.engine
+        if engine == "paged":
+            ok, why = paged_supported(cfg)
+            if not ok:
+                print(f"[serve] paged engine unavailable for {args.arch}: "
+                      f"{why} — falling back to dense", flush=True)
+                engine = "dense"
         bundle = build_model(cfg)
-        key = jax.random.PRNGKey(args.seed)
-        params = bundle.init(key)
-        max_len = args.prompt_len + args.gen + 8
+        params = bundle.init(jax.random.PRNGKey(args.seed))
 
-        prefill = jax.jit(lambda p, b: bundle.prefill(p, b, max_len))
-        decode = jax.jit(bundle.decode_step, donate_argnums=(1,))
-
-        # synthetic request stream
         data = SyntheticLMDataset(DataConfig(
             vocab_size=cfg.vocab_size, seq_len=args.prompt_len,
             global_batch=args.requests, seed=args.seed))
@@ -146,70 +302,19 @@ def serve(argv=None):
         for i in range(args.requests):
             queue.submit(Request(rid=i, prompt=prompts[i],
                                  max_new=args.gen, t_submit=time.time()))
-        done: list[Request] = []
 
-        B = args.batch
-        t0 = time.time()
-        n_decode_calls = 0
-        while len(queue):
-            wave = queue.take_wave(B)
-            if not wave:
-                break
-            # pad the wave to the static batch with repeats of slot 0
-            toks = np.stack([r.prompt for r in wave] +
-                            [wave[0].prompt] * (B - len(wave)))
-            batch = {"tokens": jnp.asarray(toks)}
-            if cfg.vision_tokens:
-                batch["vision_embeds"] = jnp.zeros(
-                    (B, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
-            if cfg.mrope:
-                pos = jnp.broadcast_to(jnp.arange(args.prompt_len),
-                                       (B, args.prompt_len)).astype(jnp.int32)
-                batch["mrope_positions"] = jnp.stack([pos] * 3, axis=1)
-            if cfg.family == "encdec":
-                batch["frames"] = jnp.zeros(
-                    (B, args.prompt_len, cfg.d_model), jnp.bfloat16)
-            logits, cache = prefill(params, batch)
-            now = time.time()
-            for r in wave:
-                r.t_first = now
-            tok = _sample(logits, key, args.temperature)
-            for i, r in enumerate(wave):
-                r.out_tokens.append(int(tok[i]))
-            for step in range(args.gen - 1):
-                logits, cache = decode(params, cache, tok)
-                tok = _sample(logits, key, args.temperature)
-                n_decode_calls += 1
-                for i, r in enumerate(wave):
-                    r.out_tokens.append(int(tok[i]))
-            now = time.time()
-            for r in wave:
-                r.t_done = now
-                r.status = "done"
-                done.append(r)
-
-        wall = time.time() - t0
-        total_new = sum(len(r.out_tokens) for r in done)
-        ttft = np.mean([r.t_first - r.t_submit for r in done]) \
-            if done else 0.0
-        print(f"[serve] {len(done)} requests, {total_new} tokens in "
-              f"{wall:.2f}s  ({total_new / max(wall, 1e-9):.1f} tok/s, "
-              f"mean TTFT {ttft:.2f}s, {n_decode_calls} decode calls)",
-              flush=True)
-        if queue.shed or queue.expired:
-            print(f"[serve] degraded: {len(queue.shed)} shed at admission, "
-                  f"{len(queue.expired)} expired past the "
-                  f"{args.deadline_s:.1f}s queue deadline", flush=True)
-        return {"requests": len(done), "tokens": total_new,
-                "wall_s": wall, "tok_per_s": total_new / max(wall, 1e-9),
-                "shed": [r.rid for r in queue.shed],
-                "expired": [r.rid for r in queue.expired]}
-
-
-def _sample(logits, key, temperature: float):
-    if temperature <= 0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+        if engine == "dense":
+            return run_dense(cfg, bundle, params, queue, batch=args.batch,
+                             prompt_len=args.prompt_len,
+                             temperature=args.temperature, seed=args.seed)
+        max_context = args.prompt_len + args.gen
+        pool_blocks = args.pool_blocks or (
+            1 + args.batch * -(-max_context // args.block_size))
+        return run_paged(cfg, bundle, params, queue, batch=args.batch,
+                         block_size=args.block_size,
+                         pool_blocks=pool_blocks, max_context=max_context,
+                         prefill_chunk=args.prefill_chunk,
+                         temperature=args.temperature, seed=args.seed)
 
 
 if __name__ == "__main__":

@@ -56,6 +56,12 @@ class ModelBundle:
     # grad-fused (S, seed) pytree of repro.models.transformer.decoder_loss.
     # None for families without taggable matmuls — --grad-fused falls back.
     loss_taps: Callable[..., Any] | None = None
+    # Paged serving path (block-table KV; repro.serve).  All three are None
+    # for families/configs the paged cache doesn't cover — callers fall back
+    # to the dense prefill/decode_step pair (see transformer.paged_supported).
+    init_paged_cache: Callable[..., Any] | None = None   # (num_blocks, block_size) -> PagedKV
+    paged_prefill_chunk: Callable[..., Any] | None = None  # (params, pool, tokens, table, ctx_len) -> (logits, pool)
+    paged_decode_step: Callable[..., Any] | None = None  # (params, pool, token, lengths, tables, live) -> (logits, pool)
 
 
 def _sds(shape, dtype):
@@ -99,11 +105,28 @@ def _decoder_bundle(cfg: ModelConfig) -> ModelBundle:
         cache = jax.eval_shape(lambda: init_cache(B, S))
         return {"cache": cache, "token": _sds((B,), jnp.int32)}
 
+    paged: dict[str, Any] = {}
+    if transformer.paged_supported(cfg)[0]:
+        from repro.models import attention as attn_lib
+
+        paged = {
+            "init_paged_cache": lambda num_blocks, block_size:
+                attn_lib.init_paged_kv(cfg.n_layers, num_blocks, block_size,
+                                       cfg.n_kv_heads, cfg.hd,
+                                       jnp.dtype(cfg.dtype)),
+            "paged_prefill_chunk": lambda params, pool, tokens, table,
+                ctx_len: transformer.decoder_prefill_chunk_paged(
+                    params, pool, tokens, table, ctx_len, cfg),
+            "paged_decode_step": lambda params, pool, token, lengths,
+                tables, live: transformer.decoder_decode_step_paged(
+                    params, pool, token, lengths, tables, live, cfg),
+        }
+
     return ModelBundle(cfg=cfg,
                        init=lambda key: transformer.init_decoder(key, cfg),
                        loss=loss, prefill=prefill, decode_step=decode_step,
                        init_cache=init_cache, input_specs=input_specs,
-                       loss_taps=loss_taps)
+                       loss_taps=loss_taps, **paged)
 
 
 def _zamba_bundle(cfg: ModelConfig) -> ModelBundle:

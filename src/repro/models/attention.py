@@ -205,6 +205,44 @@ def cache_write(k_layer: Array, v_layer: Array, pos_layer: Array,
 
 
 # ---------------------------------------------------------------------------
+# Paged KV (block-table serving cache)
+# ---------------------------------------------------------------------------
+
+
+class PagedKV(NamedTuple):
+    """Global block-pool KV cache for the paged serving engine.
+
+    k, v: (L, num_blocks, block_size, Hkv, hd).  Unlike :class:`KVCache`
+    there is no batch axis — every live sequence's tokens are scattered
+    into pool blocks and addressed through a per-request block table
+    (host-side, see repro.serve.kv_cache.BlockAllocator).  Block 0 is
+    reserved as the NULL block: padded table entries and dead decode
+    lanes write/read there, and length masks keep it out of every
+    softmax, so device code never needs a "is this slot real" branch.
+    """
+
+    k: Array
+    v: Array
+
+    @property
+    def num_blocks(self) -> int:
+        return self.k.shape[1]
+
+    @property
+    def block_size(self) -> int:
+        return self.k.shape[2]
+
+
+def init_paged_kv(n_layers: int, num_blocks: int, block_size: int,
+                  n_kv: int, hd: int, dtype=jnp.bfloat16) -> PagedKV:
+    """num_blocks INCLUDES the reserved null block 0."""
+    return PagedKV(
+        k=jnp.zeros((n_layers, num_blocks, block_size, n_kv, hd), dtype),
+        v=jnp.zeros((n_layers, num_blocks, block_size, n_kv, hd), dtype),
+    )
+
+
+# ---------------------------------------------------------------------------
 # MLA (Multi-head Latent Attention) — MiniCPM3 / DeepSeek-V2 style
 # ---------------------------------------------------------------------------
 

@@ -449,6 +449,172 @@ def _fit_cache(arr: Array, T: int, S: int) -> Array:
     return jnp.roll(tail, shift=(S % T), axis=1)
 
 
+# ---------------------------------------------------------------------------
+# Paged serving: block-table prefill chunks + batched decode
+# ---------------------------------------------------------------------------
+
+
+def paged_supported(cfg: ModelConfig) -> tuple[bool, str]:
+    """Whether the paged serving path can run this config.
+
+    The paged kernel handles the plain GQA decoder (partial rotary and
+    QKV bias included).  Features that change the attention pattern or
+    the cache contents are routed to the dense path instead.
+    """
+    if cfg.family != "decoder":
+        return False, f"family {cfg.family!r} has no paged cache layout"
+    if cfg.attn_type == "mla":
+        return False, "MLA latent cache not yet paged (ROADMAP follow-up)"
+    if cfg.mrope or cfg.vision_tokens:
+        return False, "multimodal position handling not paged"
+    if cfg.sliding_window or cfg.local_global_period:
+        return False, "sliding-window masks not paged"
+    if cfg.attn_softcap:
+        return False, "logit softcap not fused into the paged kernel"
+    return True, ""
+
+
+def _paged_scatter(kp, vp, k_new, v_new, blk, off):
+    """Scatter per-token K/V into pool blocks.
+
+    kp/vp: (nb, bs, Hkv, hd); k_new/v_new: (N, Hkv, hd); blk/off: (N,).
+    Duplicate (blk, off) pairs only occur for dead lanes aimed at the
+    null block, whose contents are never attended to.
+    """
+    kp = kp.at[blk, off].set(k_new.astype(kp.dtype))
+    vp = vp.at[blk, off].set(v_new.astype(vp.dtype))
+    return kp, vp
+
+
+def decoder_prefill_chunk_paged(params, pool, tokens: Array, table: Array,
+                                ctx_len: Array, cfg: ModelConfig
+                                ) -> tuple[Array, Any]:
+    """Prefill one chunk of one prompt into the paged pool.
+
+    tokens: (1, c) int32 — chunk ``c`` is a static shape (the engine pads
+    the last chunk so every chunk reuses one compiled program); ``table``
+    (W,) int32 is the request's block table padded with the null block;
+    ``ctx_len`` () int32 is the number of tokens already prefilled.
+
+    Returns (logits (1, c, Vp), pool') — full-chunk logits so the host
+    can read the last *real* prompt position of a padded final chunk.
+
+    Correctness of attending over the whole gathered table: gathered slot
+    ``i`` holds absolute position ``i`` for every live slot, and every
+    garbage slot (null-block padding, stale pool contents past the
+    chunk's end) sits at position > the last query position, so the
+    causal mask removes it — no extra validity mask needed.
+    """
+    from repro.models.attention import PagedKV
+
+    ctx = get_mesh_context()
+    _, c = tokens.shape
+    W = table.shape[0]
+    bs = pool.block_size
+    positions = (ctx_len + jnp.arange(c))[None, :]                # (1, c)
+    p_abs = ctx_len + jnp.arange(c)                               # (c,)
+    blk = table[p_abs // bs]
+    off = p_abs % bs
+    x = _embed(params, tokens, cfg, {})
+
+    def block(carry, layer):
+        x = carry
+        p, kp, vp = layer
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        pa = p["attn"]
+        hd = cfg.hd
+        q = h @ pa["wq"]
+        k = h @ pa["wk"]
+        v = h @ pa["wv"]
+        if cfg.qkv_bias:
+            q, k, v = q + pa["bq"], k + pa["bk"], v + pa["bv"]
+        q = q.reshape(1, c, cfg.n_heads, hd)
+        k = k.reshape(1, c, cfg.n_kv_heads, hd)
+        v = v.reshape(1, c, cfg.n_kv_heads, hd)
+        q, k = _rope_q_k(cfg, q, k, positions, {})
+        kp, vp = _paged_scatter(kp, vp, k[0], v[0], blk, off)
+        kg = kp[table].reshape(1, W * bs, cfg.n_kv_heads, hd)
+        vg = vp[table].reshape(1, W * bs, cfg.n_kv_heads, hd)
+        out = attn.blocked_attention(
+            q, kg, vg, causal=True, q_offset=ctx_len,
+            q_block=c, kv_block=bs)
+        a = out.reshape(1, c, cfg.n_heads * hd) @ pa["wo"]
+        if "ln1_post" in p:
+            a = rms_norm(a, p["ln1_post"], cfg.norm_eps)
+        x = x + a
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        f, _ = mlp_block(h, p["mlp"], cfg, ctx, serving=True)
+        if "ln2_post" in p:
+            f = rms_norm(f, p["ln2_post"], cfg.norm_eps)
+        return x + f, (kp, vp)
+
+    x, kv_new = jax.lax.scan(block, x, (params["layers"], pool.k, pool.v))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, x, cfg)
+    return logits, PagedKV(k=kv_new[0], v=kv_new[1])
+
+
+def decoder_decode_step_paged(params, pool, token: Array, lengths: Array,
+                              tables: Array, live: Array, cfg: ModelConfig
+                              ) -> tuple[Array, Any]:
+    """One decode wave over a batch of paged sequences.
+
+    token: (B,) int32 last sampled tokens; lengths: (B,) int32 tokens
+    already in each sequence's cache (the new token's position);
+    tables: (B, W) int32 block tables padded with the null block; live:
+    (B,) bool — dead lanes write to the null block and attend over zero
+    keys, so their lane output is exactly zero instead of a full softmax
+    over stale cache (the decode-waste fix, measured in test_serve.py).
+
+    Returns (logits (B, Vp), pool').
+    """
+    from repro.kernels import ops as kernel_ops
+    from repro.models.attention import PagedKV
+
+    ctx = get_mesh_context()
+    B = token.shape[0]
+    bs = pool.block_size
+    positions = lengths[:, None]                                  # (B, 1)
+    blk = jnp.where(live, tables[jnp.arange(B), lengths // bs], 0)
+    off = jnp.where(live, lengths % bs, 0)
+    attend = jnp.where(live, lengths + 1, 0)                      # (B,)
+    x = params["embed"][token][:, None, :]                        # (B, 1, d)
+    if cfg.emb_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+
+    def block(carry, layer):
+        x = carry
+        p, kp, vp = layer
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        pa = p["attn"]
+        hd = cfg.hd
+        q = h @ pa["wq"]
+        k = h @ pa["wk"]
+        v = h @ pa["wv"]
+        if cfg.qkv_bias:
+            q, k, v = q + pa["bq"], k + pa["bk"], v + pa["bv"]
+        q = q.reshape(B, 1, cfg.n_heads, hd)
+        k = k.reshape(B, 1, cfg.n_kv_heads, hd)
+        v = v.reshape(B, 1, cfg.n_kv_heads, hd)
+        q, k = _rope_q_k(cfg, q, k, positions, {})
+        kp, vp = _paged_scatter(kp, vp, k[:, 0], v[:, 0], blk, off)
+        out = kernel_ops.paged_attention(q[:, 0], kp, vp, tables, attend)
+        a = out.reshape(B, 1, cfg.n_heads * hd) @ pa["wo"]
+        if "ln1_post" in p:
+            a = rms_norm(a, p["ln1_post"], cfg.norm_eps)
+        x = x + a
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        f, _ = mlp_block(h, p["mlp"], cfg, ctx, serving=True)
+        if "ln2_post" in p:
+            f = rms_norm(f, p["ln2_post"], cfg.norm_eps)
+        return x + f, (kp, vp)
+
+    x, kv_new = jax.lax.scan(block, x, (params["layers"], pool.k, pool.v))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, x, cfg)[:, 0]
+    return logits, PagedKV(k=kv_new[0], v=kv_new[1])
+
+
 def decoder_decode_step(params, cache: DecoderCache, token: Array,
                         cfg: ModelConfig, extras=None
                         ) -> tuple[Array, DecoderCache]:

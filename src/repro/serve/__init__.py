@@ -1,0 +1,13 @@
+"""Paged serving engine: block-table KV cache + continuous batching.
+
+Host-side policy lives here (allocator, engine loop, sampling); the
+device programs it drives live in repro.models.transformer
+(decoder_prefill_chunk_paged / decoder_decode_step_paged) and the
+gather-by-table attention kernel in repro.kernels.paged_attention.
+"""
+
+from repro.serve.engine import PagedEngine
+from repro.serve.kv_cache import BlockAllocator
+from repro.serve.sampling import sample_tokens
+
+__all__ = ["BlockAllocator", "PagedEngine", "sample_tokens"]

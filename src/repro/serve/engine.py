@@ -1,0 +1,208 @@
+"""PagedEngine: continuous batching over the block-table KV cache.
+
+The engine owns the device pool (:class:`repro.models.attention.PagedKV`),
+the host allocator (:class:`repro.serve.kv_cache.BlockAllocator`) and two
+jitted programs:
+
+    prefill_chunk(params, pool, tokens (1, c), table (W,), ctx ())
+    decode_wave(params, pool, token (B,), lengths (B,), tables (B, W),
+                live (B,))
+
+``step(now)`` is one scheduler tick: admit from the AdmissionQueue while
+KV reservations fit, run AT MOST ONE prefill chunk, then one decode wave
+assembled from every live decoding sequence (true continuous batching —
+a freshly admitted request joins the next wave; nobody's decode stalls
+behind someone else's full prompt, because a long prompt enters one
+``prefill_chunk`` tokens at a time).  Decode-batch lanes without a live
+sequence are masked dead: they write to the null block and attend over
+zero keys instead of re-running a full softmax on stale cache.
+
+OOM policy (pool exhaustion) degrades through the queue instead of
+crashing: a request that can NEVER fit (prompt + max_new over the pool
+or the table width) is shed immediately; one that merely doesn't fit
+NOW is deferred to the queue front, where the ordinary deadline
+machinery expires it if pressure persists.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.kv_cache import BlockAllocator
+from repro.serve.sampling import sample_tokens
+
+
+class _Seq:
+    """One live sequence: its request plus cache-fill progress."""
+
+    __slots__ = ("req", "length", "next_token", "phase")
+
+    def __init__(self, req):
+        self.req = req
+        self.length = 0          # tokens written to the pool so far
+        self.next_token = -1     # last sampled, not yet written token
+        self.phase = "prefill"   # "prefill" -> "decode"
+
+
+class PagedEngine:
+    def __init__(self, bundle, params, queue, *, batch: int = 4,
+                 block_size: int = 16, pool_blocks: int = 64,
+                 max_context: int = 256, prefill_chunk: int = 0,
+                 temperature: float = 0.0, seed: int = 0):
+        if bundle.paged_decode_step is None:
+            raise ValueError("config has no paged path "
+                             "(see transformer.paged_supported)")
+        self.bundle = bundle
+        self.params = params
+        self.queue = queue
+        self.batch = batch
+        self.prefill_chunk = prefill_chunk
+        self.temperature = temperature
+        self.max_context = max_context
+        self.alloc = BlockAllocator(pool_blocks, block_size)
+        self.table_width = -(-max_context // block_size)
+        self.pool = bundle.init_paged_cache(pool_blocks, block_size)
+        self.seqs: list[_Seq] = []
+        self.done: list[Any] = []
+        self.token_stamps: dict[int, list[float]] = {}
+        self._key = jax.random.PRNGKey(seed)
+        self._n_samples = 0
+        # donating the pool buffer halves decode HBM residency on real
+        # devices; CPU jit can't honor it and warns every call, so skip
+        donate = (1,) if jax.default_backend() != "cpu" else ()
+        self._prefill_fn = jax.jit(bundle.paged_prefill_chunk,
+                                   donate_argnums=donate)
+        self._decode_fn = jax.jit(bundle.paged_decode_step,
+                                  donate_argnums=donate)
+        self.stats = {"decode_calls": 0, "prefill_chunks": 0,
+                      "oom_shed": 0, "oom_deferrals": 0,
+                      "occupancy": []}
+
+    # -- scheduling --------------------------------------------------------
+
+    def _admit(self, now: float) -> None:
+        while len(self.seqs) < self.batch and len(self.queue):
+            wave = self.queue.take_wave(1, now=now)
+            if not wave:
+                return                      # everything pending expired
+            req = wave[0]
+            total = len(req.prompt) + req.max_new
+            if (total > self.max_context
+                    or self.alloc.blocks_needed(total) > self.alloc.capacity):
+                self.queue.shed_now(req)    # can never fit: OOM-shed
+                self.stats["oom_shed"] += 1
+                continue
+            if not self.alloc.reserve(req.rid, total):
+                self.queue.defer(req)       # doesn't fit NOW: back to front
+                self.stats["oom_deferrals"] += 1
+                return
+            self.seqs.append(_Seq(req))
+            self.token_stamps[req.rid] = []
+
+    def _sample(self, logits):
+        key = jax.random.fold_in(self._key, self._n_samples)
+        self._n_samples += 1
+        return sample_tokens(logits, key, self.temperature)
+
+    def _emit(self, seq: _Seq, token: int, now: float) -> None:
+        seq.req.out_tokens.append(token)
+        seq.next_token = token
+        self.token_stamps[seq.req.rid].append(now)
+
+    def _retire(self, seq: _Seq, now: float) -> None:
+        seq.req.t_done = now
+        seq.req.status = "done"
+        self.alloc.free(seq.req.rid)
+        self.seqs.remove(seq)
+        self.done.append(seq.req)
+
+    def _prefill_step(self, now: float) -> bool:
+        seq = next((s for s in self.seqs if s.phase == "prefill"), None)
+        if seq is None:
+            return False
+        prompt = seq.req.prompt
+        P = len(prompt)
+        c = self.prefill_chunk or P
+        start = seq.length
+        chunk = np.asarray(prompt[start:start + c], np.int32)
+        take = len(chunk)
+        if take < c:                         # pad the final partial chunk so
+            chunk = np.pad(chunk, (0, c - take))   # every chunk reuses one
+        self.alloc.ensure(seq.req.rid, start + take)      # compiled program
+        table = jnp.asarray(
+            self.alloc.padded_table(seq.req.rid, self.table_width), jnp.int32)
+        logits, self.pool = self._prefill_fn(
+            self.params, self.pool, jnp.asarray(chunk)[None, :], table,
+            jnp.asarray(start, jnp.int32))
+        self.stats["prefill_chunks"] += 1
+        seq.length = start + take
+        if seq.length >= P:                  # prompt complete: first token
+            tok = self._sample(logits[:, (P - 1) - start])
+            seq.req.t_first = now
+            seq.phase = "decode"
+            self._emit(seq, int(tok[0]), now)
+            if len(seq.req.out_tokens) >= seq.req.max_new:
+                self._retire(seq, now)
+        return True
+
+    def _decode_wave(self, now: float) -> bool:
+        wave = [s for s in self.seqs if s.phase == "decode"][:self.batch]
+        if not wave:
+            return False
+        B, W = self.batch, self.table_width
+        tok = np.zeros((B,), np.int32)
+        lengths = np.zeros((B,), np.int32)
+        tables = np.zeros((B, W), np.int32)
+        live = np.zeros((B,), bool)
+        for i, s in enumerate(wave):
+            self.alloc.ensure(s.req.rid, s.length + 1)
+            tok[i] = s.next_token
+            lengths[i] = s.length
+            tables[i] = self.alloc.padded_table(s.req.rid, W)
+            live[i] = True
+        logits, self.pool = self._decode_fn(
+            self.params, self.pool, jnp.asarray(tok), jnp.asarray(lengths),
+            jnp.asarray(tables), jnp.asarray(live))
+        self.stats["decode_calls"] += 1
+        toks = np.asarray(self._sample(logits))
+        for i, s in enumerate(wave):
+            s.length += 1
+            self._emit(s, int(toks[i]), now)
+            if len(s.req.out_tokens) >= s.req.max_new:
+                self._retire(s, now)
+        self.stats["occupancy"].append(self.alloc.occupancy)
+        return True
+
+    def step(self, now: float | None = None) -> bool:
+        """One tick: admit, one prefill chunk, one decode wave.  Returns
+        whether any device work ran (False = idle)."""
+        now = time.time() if now is None else now
+        self._admit(now)
+        did = self._prefill_step(now)
+        did |= self._decode_wave(now)
+        return did
+
+    def run(self) -> dict:
+        """Drain everything already submitted to the queue."""
+        while True:
+            did = self.step()
+            if not did and not len(self.queue) and not self.seqs:
+                return self.summary()
+
+    def summary(self) -> dict:
+        occ = self.stats["occupancy"]
+        return {
+            "requests": len(self.done),
+            "tokens": sum(len(r.out_tokens) for r in self.done),
+            "decode_calls": self.stats["decode_calls"],
+            "prefill_chunks": self.stats["prefill_chunks"],
+            "oom_shed": self.stats["oom_shed"],
+            "oom_deferrals": self.stats["oom_deferrals"],
+            "kv_occupancy_mean": float(np.mean(occ)) if occ else 0.0,
+            "kv_occupancy_peak": float(np.max(occ)) if occ else 0.0,
+        }

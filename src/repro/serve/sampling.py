@@ -1,0 +1,25 @@
+"""Token sampling for the serving drivers (dense and paged).
+
+One canonical function so both engines sample identically — the
+paged-vs-dense token-identity test depends on it.  Callers are
+responsible for folding the PRNG key per sampling step (both drivers
+use ``jax.random.fold_in(key, n_sampled_so_far)``); reusing one key
+across steps makes temperature sampling degenerate (the same category
+draw every step), which is exactly the bug the old serve.py had.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def sample_tokens(logits: Array, key: Array, temperature: float) -> Array:
+    """logits (B, V) -> (B,) int32.  temperature <= 0 is greedy argmax
+    (key unused); otherwise categorical at logits / temperature,
+    deterministic under a fixed key."""
+    if temperature <= 0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature).astype(jnp.int32)

@@ -1,18 +1,29 @@
-"""AdmissionQueue: graceful degradation of the serving driver.
+"""Serving path: admission policy, sampling, the block-table allocator,
+and the paged engine end to end.
 
-Pure host-side policy (no model, no jax): bounded admission sheds at
-submit, queue deadlines expire at wave take, survivors leave FIFO — all
-driven with explicit ``now`` timestamps so the tests are clock-free.
+Host-side policy tests (AdmissionQueue, BlockAllocator, sampling) are
+model-free and clock-free — driven with explicit ``now`` timestamps.
+Engine tests build the smoke llama and run the real jitted paged
+programs on CPU: token identity vs the dense path (chunked and
+unchunked prefill), gathered-KV equality against the dense cache,
+pool-exhaustion shedding/deferral through the queue, and the dense
+driver's decode-call accounting.
 """
 
+import jax
+import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.launch.serve import AdmissionQueue, Request
+from repro.launch.serve import (AdmissionQueue, Request, _sample, run_dense,
+                                run_paged)
+from repro.serve.engine import PagedEngine
+from repro.serve.kv_cache import BlockAllocator
 
 
-def _req(rid, t=0.0):
-    return Request(rid=rid, prompt=np.zeros(4, np.int32), max_new=4,
-                   t_submit=t)
+def _req(rid, t=0.0, prompt_len=4, max_new=4):
+    return Request(rid=rid, prompt=np.zeros(prompt_len, np.int32),
+                   max_new=max_new, t_submit=t)
 
 
 class TestAdmission:
@@ -37,6 +48,24 @@ class TestAdmission:
         r = _req(0, t=0.0)
         q.submit(r, now=42.0)
         assert r.t_submit == 42.0
+
+    def test_defer_requeues_at_front_keeping_deadline(self):
+        q = AdmissionQueue(deadline_s=5.0)
+        q.submit(_req(0, t=1.0))
+        q.submit(_req(1, t=2.0))
+        (head,) = q.take_wave(1, now=3.0)
+        q.defer(head)
+        assert [r.rid for r in q.pending] == [0, 1]
+        assert head.status == "queued" and head.t_submit == 1.0
+        # the original clock still expires it under sustained pressure
+        assert [r.rid for r in q.take_wave(2, now=6.5)] == [1]
+        assert [r.rid for r in q.expired] == [0]
+
+    def test_shed_now_marks_and_parks(self):
+        q = AdmissionQueue()
+        r = _req(0, t=1.0)
+        q.shed_now(r)
+        assert r.status == "shed" and q.shed == [r] and not q.pending
 
 
 class TestDeadline:
@@ -83,3 +112,272 @@ class TestWave:
         assert [r.rid for r in wave] == [2]
         assert {r.rid for r in q.expired} == {0, 1}
         assert {r.rid for r in q.shed} == {3}
+
+
+class TestSampling:
+    def _logits(self):
+        return jax.random.normal(jax.random.PRNGKey(3), (5, 32))
+
+    def test_greedy_is_argmax_and_ignores_key(self):
+        logits = self._logits()
+        a = _sample(logits, jax.random.PRNGKey(0), 0.0)
+        b = _sample(logits, jax.random.PRNGKey(9), -1.0)
+        assert a.shape == (5,) and a.dtype == jnp.int32
+        np.testing.assert_array_equal(a, jnp.argmax(logits, -1))
+        np.testing.assert_array_equal(a, b)
+
+    def test_temperature_deterministic_under_fixed_key(self):
+        logits = self._logits()
+        key = jax.random.PRNGKey(4)
+        a = _sample(logits, key, 0.8)
+        b = _sample(logits, key, 0.8)
+        assert a.shape == (5,) and a.dtype == jnp.int32
+        np.testing.assert_array_equal(a, b)
+        assert jnp.all((a >= 0) & (a < 32))
+
+    def test_temperature_varies_with_key(self):
+        logits = self._logits()
+        draws = {tuple(np.asarray(_sample(logits, jax.random.PRNGKey(s),
+                                          5.0)))
+                 for s in range(8)}
+        assert len(draws) > 1
+
+
+class TestAllocator:
+    def test_lifecycle_alloc_append_free(self):
+        a = BlockAllocator(num_blocks=8, block_size=4)
+        assert a.capacity == 7                    # block 0 reserved
+        assert a.reserve(0, n_tokens=9)           # 3 blocks claimed
+        assert a.reserved_blocks == 3 and a.used_blocks == 0
+        assert a.ensure(0, 9)
+        assert len(a.table(0)) == 3
+        assert a.reserved_blocks == 0 and a.used_blocks == 3
+        assert 0 not in a.table(0)                # never hands out null
+        assert a.padded_table(0, 5) == a.table(0) + [0, 0]
+        a.free(0)
+        assert a.used_blocks == 0 and a.free_blocks == 7
+
+    def test_reservation_guards_headroom(self):
+        a = BlockAllocator(num_blocks=8, block_size=4)
+        assert a.reserve(0, 16)                   # 4 of 7
+        assert not a.reserve(1, 16)               # only 3 unclaimed
+        assert a.reserve(1, 12)                   # exactly 3
+        assert not a.reserve(2, 1)
+        a.free(0)                                 # undrawn claim returns too
+        assert a.reserve(2, 16)
+
+    def test_append_draws_own_claim_before_headroom(self):
+        a = BlockAllocator(num_blocks=6, block_size=2)
+        assert a.reserve(0, 4)                    # 2 claimed of 5
+        assert a.reserve(1, 6)                    # 3 claimed -> 0 unclaimed
+        assert a.append(0) is not None
+        assert a.append(0) is not None            # claim exhausted now
+        assert a.append(0) is None                # overrun would eat rid 1
+        assert a.ensure(1, 6)                     # rid 1's claim intact
+        a.free(1)
+        assert a.append(0) is not None            # headroom exists again
+
+    def test_block_reuse_after_free(self):
+        a = BlockAllocator(num_blocks=5, block_size=2)
+        assert a.reserve(0, 8)                    # whole pool
+        a.ensure(0, 8)
+        first = a.table(0)
+        a.free(0)
+        assert a.reserve(1, 8)
+        a.ensure(1, 8)
+        assert a.table(1) == first                # freed blocks recycled
+
+    def test_rejects_double_reserve_and_tiny_pool(self):
+        a = BlockAllocator(num_blocks=4, block_size=2)
+        assert a.reserve(0, 2)
+        with pytest.raises(ValueError):
+            a.reserve(0, 2)
+        with pytest.raises(ValueError):
+            BlockAllocator(num_blocks=1, block_size=2)
+
+
+# ---------------------------------------------------------------------------
+# Engine tests (real smoke model on CPU)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    from repro.configs.registry import get_config
+    from repro.distributed.context import mesh_context
+    from repro.launch.mesh import smoke_context
+    from repro.models.api import build_model
+
+    # fp32 so chunked-vs-full prefill reduction order cannot flip a ulp
+    # into a different greedy token
+    cfg = get_config("llama-100m", smoke=True).with_(dtype="float32")
+    with mesh_context(smoke_context()):
+        bundle = build_model(cfg)
+        params = bundle.init(jax.random.PRNGKey(0))
+        yield cfg, bundle, params
+
+
+def _prompts(n, P, vocab, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, vocab, size=(n, P)).astype(np.int32)
+
+
+def _queue_of(prompts, max_new, **kw):
+    q = AdmissionQueue(**kw)
+    for i, p in enumerate(prompts):
+        q.submit(Request(rid=i, prompt=p, max_new=max_new), now=1.0)
+    return q
+
+
+class TestPagedEngine:
+    P, GEN = 9, 5
+
+    def _run_paged(self, cfg, bundle, params, prompts, chunk):
+        q = _queue_of(prompts, self.GEN)
+        return run_paged(cfg, bundle, params, q, batch=2, block_size=4,
+                         pool_blocks=1 + 2 * -(-(self.P + self.GEN) // 4),
+                         max_context=self.P + self.GEN,
+                         prefill_chunk=chunk)
+
+    def test_token_identity_vs_dense(self, smoke_model):
+        """Acceptance: paged greedy outputs == dense greedy outputs, with
+        chunked AND whole-prompt prefill."""
+        cfg, bundle, params = smoke_model
+        prompts = _prompts(3, self.P, cfg.vocab_size)
+        dense = run_dense(cfg, bundle, params,
+                          _queue_of(prompts, self.GEN), batch=2,
+                          prompt_len=self.P)
+        paged_whole = self._run_paged(cfg, bundle, params, prompts, 0)
+        paged_chunked = self._run_paged(cfg, bundle, params, prompts, 4)
+        assert dense["outputs"] == paged_whole["outputs"]
+        assert dense["outputs"] == paged_chunked["outputs"]
+        assert paged_chunked["kv"]["prefill_chunks"] == 3 * 3   # ceil(9/4)
+        assert all(len(t) == self.GEN
+                   for t in dense["outputs"].values())
+
+    def test_gathered_kv_matches_dense_cache(self, smoke_model):
+        """Property: a sequence's pool blocks, gathered in table order,
+        hold the same K/V the dense reference cache holds."""
+        cfg, bundle, params = smoke_model
+        prompt = _prompts(1, self.P, cfg.vocab_size, seed=3)[0]
+        max_len = self.P + self.GEN
+        _, cache = jax.jit(
+            lambda p, b: bundle.prefill(p, b, max_len))(
+                params, {"tokens": jnp.asarray(prompt[None, :])})
+
+        q = _queue_of([prompt], self.GEN)
+        engine = PagedEngine(bundle, params, q, batch=1, block_size=4,
+                             pool_blocks=8, max_context=max_len,
+                             prefill_chunk=4)
+        table = None
+        while engine.step(now=1.0):
+            if engine.seqs and engine.seqs[0].length >= self.P:
+                table = engine.alloc.table(engine.seqs[0].req.rid)
+                break                      # capture before retire frees it
+        assert table is not None and len(table) * 4 >= self.P
+        gathered_k = np.asarray(engine.pool.k)[:, table].reshape(
+            cfg.n_layers, -1, cfg.n_kv_heads, cfg.hd)[:, :self.P]
+        gathered_v = np.asarray(engine.pool.v)[:, table].reshape(
+            cfg.n_layers, -1, cfg.n_kv_heads, cfg.hd)[:, :self.P]
+        np.testing.assert_allclose(
+            gathered_k, np.asarray(cache.kv.k)[:, 0, :self.P],
+            atol=2e-5, rtol=2e-5)
+        np.testing.assert_allclose(
+            gathered_v, np.asarray(cache.kv.v)[:, 0, :self.P],
+            atol=2e-5, rtol=2e-5)
+
+    def test_pool_exhaustion_sheds_and_defers(self, smoke_model):
+        """KV OOM policy: impossible requests shed immediately; feasible
+        ones defer under pressure and still finish; sustained pressure
+        plus a deadline expires instead of wedging."""
+        cfg, bundle, params = smoke_model
+        prompts = _prompts(4, self.P, cfg.vocab_size)
+        # pool fits ONE sequence at a time (4 blocks of 4 = 16 >= 14)
+        q = _queue_of(prompts, self.GEN)
+        q.submit(Request(rid=99, prompt=np.zeros(40, np.int32), max_new=4),
+                 now=1.0)                       # can never fit -> OOM-shed
+        out = run_paged(cfg, bundle, params, q, batch=2, block_size=4,
+                        pool_blocks=5, max_context=self.P + self.GEN,
+                        prefill_chunk=0)
+        assert out["shed"] == [99]
+        assert out["kv"]["oom_shed"] == 1
+        assert out["kv"]["oom_deferrals"] > 0   # waited for blocks
+        assert out["requests"] == 4             # everyone else finished
+        assert sorted(out["outputs"]) == [0, 1, 2, 3]
+
+    def test_deadline_expires_deferred_requests(self, smoke_model):
+        cfg, bundle, params = smoke_model
+        prompts = _prompts(3, self.P, cfg.vocab_size)
+        q = _queue_of(prompts, self.GEN, deadline_s=5.0)
+        engine = PagedEngine(bundle, params, q, batch=2, block_size=4,
+                             pool_blocks=5,     # one sequence at a time
+                             max_context=self.P + self.GEN)
+        # tick a synthetic clock so the deferred requests overshoot the
+        # deadline while the first sequence is still decoding
+        now = 1.0
+        while engine.step(now=now) or len(q) or engine.seqs:
+            now += 2.0
+            if now > 60.0:
+                pytest.fail("engine wedged")
+        assert len(engine.done) >= 1
+        assert q.expired                        # pressure -> expiry, not spin
+        assert all(r.status == "expired" for r in q.expired)
+
+    def test_continuous_batching_no_prefill_freeze(self, smoke_model):
+        """A long prompt arriving mid-decode must not stall the in-flight
+        request: its chunks interleave, and the short request keeps
+        emitting a token every tick."""
+        cfg, bundle, params = smoke_model
+        short = Request(rid=0, prompt=_prompts(1, 4, cfg.vocab_size)[0][:4],
+                        max_new=12)
+        long_p = Request(rid=1,
+                         prompt=_prompts(1, 16, cfg.vocab_size, seed=5)[0],
+                         max_new=2)
+        q = AdmissionQueue()
+        q.submit(short, now=1.0)
+        engine = PagedEngine(bundle, params, q, batch=2, block_size=4,
+                             pool_blocks=16, max_context=32,
+                             prefill_chunk=4)
+        now = 1.0
+        engine.step(now=now)                    # short prefilled + token 1
+        q.submit(long_p, now=now)
+        while engine.seqs or len(q):
+            now += 1.0
+            engine.step(now=now)
+            if now > 60.0:
+                pytest.fail("engine wedged")
+        stamps = engine.token_stamps
+        # long prompt needed 4 chunks; short emitted on every tick of that
+        # window (one token per decode wave, no gap while chunks ran)
+        short_times = stamps[0]
+        gaps = np.diff(short_times)
+        assert long_p.t_first > short_times[0]
+        assert np.all(gaps <= 1.0 + 1e-9)       # never stalled a tick
+        assert len(short_times) == 12 and len(stamps[1]) == 2
+
+
+class TestDenseDriver:
+    def test_decode_call_count_drops_with_live_masking(self, smoke_model):
+        """Heterogeneous max_new: the wave ends when its own longest
+        request finishes instead of decoding every wave to the global
+        max (the old driver's fixed `gen - 1` loop)."""
+        cfg, bundle, params = smoke_model
+        prompts = _prompts(4, 6, cfg.vocab_size)
+        q = AdmissionQueue()
+        for i, mn in enumerate([3, 3, 8, 2]):
+            q.submit(Request(rid=i, prompt=prompts[i], max_new=mn), now=1.0)
+        out = run_dense(cfg, bundle, params, q, batch=2, prompt_len=6)
+        # wave [3,3] -> 2 calls, wave [8,2] -> 7: 9 total, old cost 14
+        assert out["decode_calls"] == 9
+        n_waves, old_cost = 2, 2 * (8 - 1)
+        assert out["decode_calls"] < old_cost
+        assert {rid: len(t) for rid, t in out["outputs"].items()} == \
+            {0: 3, 1: 3, 2: 8, 3: 2}
+
+    def test_temperature_surfaces_in_summary(self, smoke_model):
+        cfg, bundle, params = smoke_model
+        q = _queue_of(_prompts(2, 6, cfg.vocab_size), 3)
+        out = run_dense(cfg, bundle, params, q, batch=2, prompt_len=6,
+                        temperature=0.7)
+        assert out["temperature"] == 0.7
+        assert out["engine"] == "dense"

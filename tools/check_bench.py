@@ -25,9 +25,20 @@ targets) would quietly rot.  This checker fails CI fast instead:
   everywhere or the grad-fused round buys nothing);
 * the flat timing ``rows`` list exists and covers every section.
 
-Run: ``python tools/check_bench.py [PATH]`` (default:
-repo-root/BENCH_kernels.json).  Wired into the CI docs job next to
-tools/check_docs.py.
+The serving artifact ``BENCH_serve.json`` (from
+``benchmarks/serve_bench.py``) is validated too: its three sections
+(``load``, ``overload``, ``ttft_bound``) must be present, request
+accounting must balance (done + shed + expired == submitted), latency
+percentiles must be ordered (p50 <= p99), KV occupancy must be a real
+fraction, the overload run must show every degradation mode firing
+(shed, expired, OOM-shed, deferrals) while still completing work, and
+chunked prefill must bound the worst inter-token gap below the blocking
+baseline (``bounded`` true).
+
+Run: ``python tools/check_bench.py [PATH]``.  With no argument BOTH
+repo-root artifacts are checked; an explicit path is dispatched on its
+name (``*serve*`` -> the serve checker).  Wired into the CI docs job
+next to tools/check_docs.py.
 """
 
 from __future__ import annotations
@@ -146,16 +157,90 @@ def check_bench(path: Path) -> list[str]:
     return errors
 
 
-def main() -> int:
-    path = Path(sys.argv[1]) if len(sys.argv) > 1 \
-        else REPO / "BENCH_kernels.json"
-    errors = check_bench(path)
-    for e in errors:
-        print(f"[check_bench] {e}", file=sys.stderr)
+SERVE_SECTIONS = ("load", "overload", "ttft_bound")
+
+
+def check_serve(path: Path) -> list[str]:
+    errors: list[str] = []
+    try:
+        payload = json.loads(path.read_text())
+    except FileNotFoundError:
+        return [f"{path}: missing — run `PYTHONPATH=src python "
+                "benchmarks/serve_bench.py --json`"]
+    except json.JSONDecodeError as e:
+        return [f"{path}: not valid JSON ({e})"]
+
+    for name in SERVE_SECTIONS:
+        if name not in payload:
+            errors.append(f"serve section {name!r} missing — stale "
+                          "artifact?")
     if errors:
-        return 1
-    print(f"[check_bench] {path.name} OK")
-    return 0
+        return errors
+
+    for name in ("load", "overload"):
+        s = payload[name]
+        if s["done"] + s["shed"] + s["expired"] != s["requests"]:
+            errors.append(
+                f"{name}: request accounting broken — done {s['done']} + "
+                f"shed {s['shed']} + expired {s['expired']} != "
+                f"submitted {s['requests']}")
+        if s["done"] <= 0:
+            errors.append(f"{name}: nothing completed")
+
+    load = payload["load"]
+    if load.get("tok_per_s", 0) <= 0:
+        errors.append("load: tok_per_s not positive")
+    for pair in (("ttft_p50_s", "ttft_p99_s"),
+                 ("latency_p50_s", "latency_p99_s")):
+        if load.get(pair[0], 0) > load.get(pair[1], 0):
+            errors.append(f"load: {pair[0]} > {pair[1]} — percentiles "
+                          "out of order")
+    peak = load.get("kv_occupancy_peak", -1)
+    if not 0 < peak <= 1:
+        errors.append(f"load: kv_occupancy_peak {peak} not in (0, 1]")
+    if load.get("kv_occupancy_mean", 0) > peak:
+        errors.append("load: kv_occupancy_mean above peak")
+    if load.get("prefill_chunks", 0) <= load.get("done", 0):
+        errors.append("load: prefill_chunks <= requests — prompts were "
+                      "not chunked")
+
+    over = payload["overload"]
+    for key in ("shed", "expired", "oom_shed", "oom_deferrals"):
+        if over.get(key, 0) <= 0:
+            errors.append(f"overload: {key} never fired — degradation "
+                          "taxonomy incomplete")
+
+    tb = payload["ttft_bound"]
+    if not tb.get("bounded", False):
+        errors.append("ttft_bound: 'bounded' not true")
+    if tb.get("chunked_max_gap_s", 1.0) >= tb.get("blocking_max_gap_s", 0.0):
+        errors.append(
+            f"ttft_bound: chunked max gap {tb.get('chunked_max_gap_s')} "
+            f"not below blocking {tb.get('blocking_max_gap_s')} — "
+            "chunked prefill is not bounding TTFT inflation")
+    if tb.get("prefill_chunk", 0) <= 0:
+        errors.append("ttft_bound: chunked run had no prefill_chunk")
+    return errors
+
+
+def main() -> int:
+    if len(sys.argv) > 1:
+        path = Path(sys.argv[1])
+        targets = [(path, check_serve if "serve" in path.name.lower()
+                    else check_bench)]
+    else:
+        targets = [(REPO / "BENCH_kernels.json", check_bench),
+                   (REPO / "BENCH_serve.json", check_serve)]
+    failed = False
+    for path, checker in targets:
+        errors = checker(path)
+        for e in errors:
+            print(f"[check_bench] {e}", file=sys.stderr)
+        if errors:
+            failed = True
+        else:
+            print(f"[check_bench] {path.name} OK")
+    return 1 if failed else 0
 
 
 if __name__ == "__main__":
