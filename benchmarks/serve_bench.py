@@ -47,6 +47,7 @@ def _reset(engine, queue) -> None:
     compiled executables) stay cached on the engine."""
     engine.stats = {"decode_calls": 0, "prefill_chunks": 0,
                     "oom_shed": 0, "oom_deferrals": 0, "occupancy": []}
+    engine._deferred_rids = set()
     engine.done = []
     engine.token_stamps = {}
     queue.pending = []

@@ -478,8 +478,9 @@ def _paged_scatter(kp, vp, k_new, v_new, blk, off):
     """Scatter per-token K/V into pool blocks.
 
     kp/vp: (nb, bs, Hkv, hd); k_new/v_new: (N, Hkv, hd); blk/off: (N,).
-    Duplicate (blk, off) pairs only occur for dead lanes aimed at the
-    null block, whose contents are never attended to.
+    Duplicate (blk, off) pairs only occur for lanes aimed at the null
+    block (dead decode lanes, prefill pad tokens past the table
+    extent), whose contents are never attended to.
     """
     kp = kp.at[blk, off].set(k_new.astype(kp.dtype))
     vp = vp.at[blk, off].set(v_new.astype(vp.dtype))
@@ -504,6 +505,13 @@ def decoder_prefill_chunk_paged(params, pool, tokens: Array, table: Array,
     garbage slot (null-block padding, stale pool contents past the
     chunk's end) sits at position > the last query position, so the
     causal mask removes it — no extra validity mask needed.
+
+    Writes need one extra guard the mask can't provide: a padded final
+    chunk can extend past the table extent (ceil(P/c)*c > W*bs), and a
+    clamped gather of ``table`` would land those pad tokens in
+    ``table[W-1]`` — an OWNED block when the request reserved full
+    width — aliasing real positions.  Overflow writes are therefore
+    routed to the null block explicitly.
     """
     from repro.models.attention import PagedKV
 
@@ -513,7 +521,8 @@ def decoder_prefill_chunk_paged(params, pool, tokens: Array, table: Array,
     bs = pool.block_size
     positions = (ctx_len + jnp.arange(c))[None, :]                # (1, c)
     p_abs = ctx_len + jnp.arange(c)                               # (c,)
-    blk = table[p_abs // bs]
+    word = p_abs // bs
+    blk = jnp.where(word < W, table[jnp.minimum(word, W - 1)], 0)
     off = p_abs % bs
     x = _embed(params, tokens, cfg, {})
 

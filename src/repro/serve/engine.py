@@ -79,6 +79,9 @@ class PagedEngine:
                                    donate_argnums=donate)
         self._decode_fn = jax.jit(bundle.paged_decode_step,
                                   donate_argnums=donate)
+        # oom_deferrals counts unique deferred REQUESTS, not the ticks a
+        # head-of-line request spends re-deferring under pressure
+        self._deferred_rids: set[int] = set()
         self.stats = {"decode_calls": 0, "prefill_chunks": 0,
                       "oom_shed": 0, "oom_deferrals": 0,
                       "occupancy": []}
@@ -99,7 +102,9 @@ class PagedEngine:
                 continue
             if not self.alloc.reserve(req.rid, total):
                 self.queue.defer(req)       # doesn't fit NOW: back to front
-                self.stats["oom_deferrals"] += 1
+                if req.rid not in self._deferred_rids:
+                    self._deferred_rids.add(req.rid)
+                    self.stats["oom_deferrals"] += 1
                 return
             self.seqs.append(_Seq(req))
             self.token_stamps[req.rid] = []
@@ -131,9 +136,10 @@ class PagedEngine:
         start = seq.length
         chunk = np.asarray(prompt[start:start + c], np.int32)
         take = len(chunk)
-        if take < c:                         # pad the final partial chunk so
-            chunk = np.pad(chunk, (0, c - take))   # every chunk reuses one
-        self.alloc.ensure(seq.req.rid, start + take)      # compiled program
+        if take < c:                    # pad the final partial chunk so every
+            chunk = np.pad(chunk, (0, c - take))  # chunk reuses one program
+        ok = self.alloc.ensure(seq.req.rid, start + take)
+        assert ok, f"KV reservation invariant broken for rid {seq.req.rid}"
         table = jnp.asarray(
             self.alloc.padded_table(seq.req.rid, self.table_width), jnp.int32)
         logits, self.pool = self._prefill_fn(
@@ -160,7 +166,8 @@ class PagedEngine:
         tables = np.zeros((B, W), np.int32)
         live = np.zeros((B,), bool)
         for i, s in enumerate(wave):
-            self.alloc.ensure(s.req.rid, s.length + 1)
+            ok = self.alloc.ensure(s.req.rid, s.length + 1)
+            assert ok, f"KV reservation invariant broken for rid {s.req.rid}"
             tok[i] = s.next_token
             lengths[i] = s.length
             tables[i] = self.alloc.padded_table(s.req.rid, W)

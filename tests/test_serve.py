@@ -286,6 +286,49 @@ class TestPagedEngine:
             gathered_v, np.asarray(cache.kv.v)[:, 0, :self.P],
             atol=2e-5, rtol=2e-5)
 
+    def test_padded_final_chunk_past_table_extent(self, smoke_model):
+        """Regression: ceil(P/chunk)*chunk > W*bs, so the padded final
+        chunk's pad tokens extend past the block table.  A clamped
+        gather used to land their writes in table[W-1] — an OWNED block
+        here, because the request reserves full width — silently
+        overwriting real prompt K/V (position P-1 collides with the
+        first overflow pad).  Overflow writes must hit the null block;
+        the gathered cache and the greedy tokens must match dense."""
+        cfg, bundle, params = smoke_model
+        P, gen, bs, chunk = 9, 3, 4, 8      # ceil(9/8)*8 = 16 > 3*4 = 12
+        max_len = P + gen                   # table width 3 = full coverage
+        prompt = _prompts(1, P, cfg.vocab_size, seed=7)[0]
+        _, cache = jax.jit(
+            lambda p, b: bundle.prefill(p, b, max_len))(
+                params, {"tokens": jnp.asarray(prompt[None, :])})
+
+        engine = PagedEngine(bundle, params, _queue_of([prompt], gen),
+                             batch=1, block_size=bs, pool_blocks=8,
+                             max_context=max_len, prefill_chunk=chunk)
+        table = None
+        while engine.step(now=1.0):
+            if engine.seqs and engine.seqs[0].length >= P:
+                table = engine.alloc.table(engine.seqs[0].req.rid)
+                break
+        assert table is not None
+        assert len(table) * bs == max_len   # fully owned: no null padding
+        for pool, dense in ((engine.pool.k, cache.kv.k),
+                            (engine.pool.v, cache.kv.v)):
+            gathered = np.asarray(pool)[:, table].reshape(
+                cfg.n_layers, -1, cfg.n_kv_heads, cfg.hd)[:, :P]
+            np.testing.assert_allclose(
+                gathered, np.asarray(dense)[:, 0, :P],
+                atol=2e-5, rtol=2e-5)
+
+        dense_out = run_dense(cfg, bundle, params,
+                              _queue_of([prompt], gen), batch=1,
+                              prompt_len=P)
+        paged_out = run_paged(cfg, bundle, params,
+                              _queue_of([prompt], gen), batch=1,
+                              block_size=bs, pool_blocks=8,
+                              max_context=max_len, prefill_chunk=chunk)
+        assert dense_out["outputs"] == paged_out["outputs"]
+
     def test_pool_exhaustion_sheds_and_defers(self, smoke_model):
         """KV OOM policy: impossible requests shed immediately; feasible
         ones defer under pressure and still finish; sustained pressure
@@ -301,7 +344,9 @@ class TestPagedEngine:
                         prefill_chunk=0)
         assert out["shed"] == [99]
         assert out["kv"]["oom_shed"] == 1
-        assert out["kv"]["oom_deferrals"] > 0   # waited for blocks
+        # counts unique deferred requests (at most 3 of the 4 can ever
+        # defer), not the scheduler ticks they spent waiting for blocks
+        assert 0 < out["kv"]["oom_deferrals"] <= 3
         assert out["requests"] == 4             # everyone else finished
         assert sorted(out["outputs"]) == [0, 1, 2, 3]
 
